@@ -1,0 +1,81 @@
+"""Paper §III — derived energy-efficiency metrics: EDP and GFLOP/s/W.
+
+The paper computes GFLOP/s/W from externally counted FLOPs (PAPI/LIKWID);
+our FLOP source is XLA ``cost_analysis()`` of the measured region itself.
+Benchmarks a GEMM sweep and reports J, EDP, GFLOP/s/W per size from the
+modeled TPU sensor, plus J/token for one reduced-model train step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as pmt
+from repro.core.backends.tpu import TpuCostModelSensor
+from repro.core.metrics import EfficiencyReport
+
+
+def main(csv=False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n in (256, 512, 1024):
+        a = jax.random.normal(key, (n, n), jnp.bfloat16)
+        b = jax.random.normal(key, (n, n), jnp.bfloat16)
+        f = jax.jit(lambda x, y: x @ y)
+        compiled = f.lower(a, b).compile()
+        flops = float(compiled.cost_analysis().get("flops", 2 * n ** 3))
+
+        sensor = TpuCostModelSensor.create()
+        s0 = sensor.read()
+        t0 = time.perf_counter()
+        out = f(a, b)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        sensor.account(flops=flops, hbm_bytes=3 * n * n * 2, ici_bytes=0.0,
+                       seconds=dt)
+        s1 = sensor.read()
+        rep = EfficiencyReport(joules=pmt.joules(s0, s1), seconds=dt,
+                               flops=flops)
+        rows.append((f"gemm_{n}", rep))
+
+    # one train step of the reduced example model, J/token
+    from repro import configs
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.train.steps import init_train_state, make_train_step
+    cfg = configs.get_config("smollm-135m", reduced=True)
+    ocfg = OptimizerConfig()
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    batch = {"tokens": jnp.ones((4, 64), jnp.int32),
+             "targets": jnp.ones((4, 64), jnp.int32)}
+    mon = pmt.PowerMonitor(["cpuutil", "tpu"])
+    state, m = step(state, batch)          # compile outside measurement
+    jax.block_until_ready(m["loss"])
+    with mon.measure_step(0, tokens=4 * 64) as box:
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+    recs = box.records
+
+    print("# Energy-efficiency metrics (paper §III): EDP, GFLOP/s/W")
+    print(f"{'case':12s} {'J':>10s} {'s':>9s} {'EDP(Js)':>11s} "
+          f"{'GFLOP/s/W':>10s}")
+    for name, rep in rows:
+        g = rep.gflops_per_watt or 0.0
+        print(f"{name:12s} {rep.joules:10.4f} {rep.seconds:9.4f} "
+              f"{rep.edp:11.5f} {g:10.3f}")
+    for r in recs:
+        jt = r.joules / max(1, r.tokens or 1)
+        print(f"train_step[{r.sensor}:{r.kind}]  J={r.joules:.4f}  "
+              f"J/token={jt:.6f}")
+    if csv:
+        for name, rep in rows:
+            print(f"energy_{name},{rep.seconds*1e6:.1f},"
+                  f"edp={rep.edp:.5f};gflops_per_w="
+                  f"{rep.gflops_per_watt or 0:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

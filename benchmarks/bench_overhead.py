@@ -1,0 +1,62 @@
+"""Paper overhead claim — ~1 ms (C++) / ~10 ms (Python) per measurement,
+cumulative when decorators stack.
+
+We measure (a) the raw read()-pair cost per backend (the C++-API
+analogue), (b) the decorator overhead on a no-op function for 1..3
+stacked decorators, verifying overhead grows ~linearly with stacking and
+stays inside the paper's Python envelope.
+"""
+from __future__ import annotations
+
+import time
+
+import repro.core as pmt
+
+
+def _time_per_call(fn, n=200):
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def main(csv=False):
+    rows = []
+    for backend in ("dummy", "cpuutil", "tpu"):
+        s = pmt.create(backend)
+
+        def pair(s=s):
+            a = s.read()
+            b = s.read()
+            return a, b
+
+        us = _time_per_call(pair) * 1e6
+        rows.append((f"read_pair_{backend}", us))
+
+    for stack in (1, 2, 3):
+        fn = lambda: None
+        for _ in range(stack):
+            fn = pmt.measure("dummy")(fn)
+        us = _time_per_call(fn, n=100) * 1e6
+        rows.append((f"decorator_x{stack}", us))
+
+    print("# PMT overhead (paper: ~1 ms C++ / ~10 ms Python per region)")
+    print(f"{'case':22s} {'us/call':>10s} {'paper budget':>14s}")
+    budget = {"read_pair": 1_000.0, "decorator": 10_000.0}
+    ok = True
+    for name, us in rows:
+        b = budget["read_pair" if name.startswith("read") else "decorator"]
+        mult = int(name[-1]) if name.startswith("decorator") else 1
+        within = us <= b * mult
+        ok &= within
+        print(f"{name:22s} {us:10.1f} {'<= ' + str(int(b * mult)):>14s}"
+              f" {'OK' if within else 'OVER'}")
+    print(f"# overall: {'PASS' if ok else 'FAIL'} vs paper envelope")
+    if csv:
+        for name, us in rows:
+            print(f"overhead_{name},{us:.2f},paper_env_ok={ok}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

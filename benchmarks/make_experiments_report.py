@@ -1,0 +1,105 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep JSONL.
+
+Usage: PYTHONPATH=src python benchmarks/make_experiments_report.py
+Prints markdown to stdout (pasted into EXPERIMENTS.md by the build log).
+"""
+import json
+import sys
+from collections import OrderedDict
+
+PATH = sys.argv[1] if len(sys.argv) > 1 else \
+    "benchmarks/results_dryrun.jsonl"
+
+
+def load(path):
+    rows = OrderedDict()
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        rows[(r["arch"], r["shape"], r["mesh"])] = r  # latest wins
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.1f}GB" if b >= 1e9 else f"{b / 1e6:.1f}MB"
+
+
+def dryrun_table(rows, mesh):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | status | compile_s | args/chip | temp/chip | "
+          "total/chip | collectives (full compile, per-chip) |")
+    print("|---|---|---|---:|---:|---:|---:|---|")
+    for (arch, shape, m), r in rows.items():
+        if m != mesh:
+            continue
+        if r["status"] != "ok":
+            print(f"| {arch} | {shape} | ERROR | | | | | "
+                  f"{r.get('error','')[:60]} |")
+            continue
+        mem = r["memory"]
+        fc = r.get("full_compile_costs", {})
+        kinds = fc.get("coll_by_kind", {})
+        coll = ", ".join(f"{k.replace('collective-','c-')}:{fmt_bytes(v)}"
+                         for k, v in sorted(kinds.items()) if v > 0) or "—"
+        print(f"| {arch} | {shape} | ok | {r['compile_s']:.0f} "
+              f"| {mem['argument_gib']:.2f}Gi | {mem['temp_gib']:.2f}Gi "
+              f"| {mem['per_chip_gib']:.2f}Gi | {coll} |")
+
+
+def roofline_table(rows):
+    print("\n| arch | shape | FLOPs/chip | HBM B/chip | coll B/chip | "
+          "C_s | M_s | X_s | dominant | useful | roofline-frac |")
+    print("|---|---|---:|---:|---:|---:|---:|---:|---|---:|---:|")
+    for (arch, shape, m), r in rows.items():
+        if m != "16x16" or r["status"] != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        print(f"| {arch} | {shape} | {rf['flops_per_chip']:.3e} "
+              f"| {rf['hbm_bytes_per_chip']:.3e} "
+              f"| {rf['coll_bytes_per_chip']:.3e} "
+              f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+              f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+              f"| {rf['useful_ratio']:.3f} "
+              f"| {rf['roofline_fraction']*100:.1f}% |")
+
+
+def hillclimb_table(path="benchmarks/results_hillclimb.jsonl"):
+    import os
+    if not os.path.exists(path):
+        return
+    print("\n### §Perf iterations (hillclimb)\n")
+    print("| experiment | cell | C_s | M_s | X_s | dominant | mem/chip | "
+          "roofline-frac |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for line in open(path):
+        r = json.loads(line)
+        if r["status"] != "ok":
+            print(f"| {r.get('experiment','?')} | {r['arch']}x{r['shape']} "
+                  f"| ERROR {r.get('error','')[:50]} | | | | | |")
+            continue
+        if "roofline" not in r:   # memory-only experiments (microbatch)
+            print(f"| {r.get('experiment','?')} | {r['arch']} x "
+                  f"{r['shape']} | | | | (full compile only) "
+                  f"| {r['memory']['per_chip_gib']:.2f}Gi | |")
+            continue
+        rf = r["roofline"]
+        print(f"| {r.get('experiment','baseline')} "
+              f"| {r['arch']} x {r['shape']} "
+              f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+              f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+              f"| {r['memory']['per_chip_gib']:.2f}Gi "
+              f"| {rf['roofline_fraction']*100:.1f}% |")
+
+
+if __name__ == "__main__":
+    rows = load(PATH)
+    n_ok = sum(1 for r in rows.values() if r["status"] == "ok")
+    print(f"<!-- generated from {PATH}: {len(rows)} cells, {n_ok} ok -->")
+    print("\n## §Dry-run")
+    dryrun_table(rows, "16x16")
+    dryrun_table(rows, "2x16x16")
+    print("\n## §Roofline (single-pod, 256 chips)")
+    roofline_table(rows)
+    hillclimb_table()

@@ -1,0 +1,84 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+  fig2      kernel power profiles (paper Fig. 2)
+  overhead  instrumentation overhead (paper §II, ~1 ms / ~10 ms claims)
+  sampling  dump-mode sampling rates (paper §II, NVML 10 ms / RAPL 500 ms)
+  energy    EDP + GFLOP/s/W derived metrics (paper §III)
+  roofline  dry-run roofline table, if results_dryrun.jsonl exists
+
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def _section(title):
+    print("\n" + "=" * 72)
+    print(f"== {title}")
+    print("=" * 72, flush=True)
+
+
+def roofline_table(path="benchmarks/results_dryrun.jsonl"):
+    if not os.path.exists(path):
+        print(f"(no {path} — run `python -m repro.launch.dryrun --all`)")
+        return
+    rows = {}
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    print(f"{'arch':18s} {'shape':12s} {'mesh':8s} {'status':7s} "
+          f"{'mem/chip':>9s} {'dom':>10s} {'C_s':>9s} {'M_s':>9s} "
+          f"{'X_s':>9s} {'roofline%':>9s}")
+    for (arch, shape, mesh), r in sorted(rows.items()):
+        if r["status"] != "ok":
+            print(f"{arch:18s} {shape:12s} {mesh:8s} ERROR   "
+                  f"{r.get('error', '')[:60]}")
+            continue
+        mem = r["memory"]["per_chip_gib"]
+        rf = r.get("roofline")
+        if rf:
+            print(f"{arch:18s} {shape:12s} {mesh:8s} ok      "
+                  f"{mem:8.2f}G {rf['dominant']:>10s} "
+                  f"{rf['compute_s']:9.4f} {rf['memory_s']:9.4f} "
+                  f"{rf['collective_s']:9.4f} "
+                  f"{100*rf['roofline_fraction']:8.1f}%")
+        else:
+            print(f"{arch:18s} {shape:12s} {mesh:8s} ok      "
+                  f"{mem:8.2f}G {'(full only)':>10s}")
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["fig2", "overhead", "sampling", "energy",
+                                "roofline"]
+    t0 = time.time()
+    if "fig2" in sections:
+        _section("Paper Fig. 2 — kernel power profiles (PMT stacked)")
+        from benchmarks.bench_fig2_kernels import main as fig2
+        fig2(csv=True)
+    if "overhead" in sections:
+        _section("Paper §II — instrumentation overhead")
+        from benchmarks.bench_overhead import main as overhead
+        overhead(csv=True)
+    if "sampling" in sections:
+        _section("Paper §II — dump-mode sampling rates")
+        from benchmarks.bench_sampling import main as sampling
+        sampling(csv=True)
+    if "energy" in sections:
+        _section("Paper §III — EDP / GFLOP/s/W")
+        from benchmarks.bench_energy import main as energy
+        energy(csv=True)
+    if "roofline" in sections:
+        _section("Dry-run roofline table (EXPERIMENTS.md §Roofline)")
+        roofline_table()
+    print(f"\n# benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

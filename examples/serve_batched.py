@@ -1,0 +1,10 @@
+"""Batched serving example with J/token reporting.
+
+Run: PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve as serve_launcher
+
+if __name__ == "__main__":
+    serve_launcher.main(["--arch", "qwen3-0.6b", "--reduced",
+                         "--requests", "8", "--batch", "4",
+                         "--max-new", "12"])

@@ -1,0 +1,8 @@
+"""repro — PMT (Power Measurement Toolkit) + a multi-pod JAX framework.
+
+``repro.core`` is the PMT library itself (import it as ``pmt``);
+sibling subpackages are the training/serving framework it instruments.
+"""
+from repro import core as pmt  # noqa: F401
+
+__all__ = ["pmt"]

@@ -1,0 +1,40 @@
+"""gemma2-27b — Gemma 2 27B [arXiv:2408.00118].
+
+Assigned: 46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000.
+Alternating local(4096-window)/global attention, attn-logit softcap 50,
+final-logit softcap 30, pre+post block norms, GeGLU, sqrt(d) embedding
+scale, query_pre_attn_scalar 144, head_dim 128, tied embeddings.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    d_ff=36864,
+    vocab_size=256000,
+    head_dim=128,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    query_pre_attn_scalar=144.0,
+    sliding_window=4096,
+    layer_pattern="LG",
+    post_block_norm=True,
+    scale_embeddings=True,
+    act="geglu",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16, sliding_window=32,
+    query_pre_attn_scalar=16.0,
+    loss_chunk=0, attn_chunk=64,
+)

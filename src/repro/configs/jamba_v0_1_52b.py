@@ -1,0 +1,38 @@
+"""jamba-v0.1-52b — Jamba v0.1 [arXiv:2403.19887].
+
+Assigned: 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536,
+MoE 16e top-2.  Repeating 8-layer unit with attention at offset 4
+(1:7 attention:mamba), MoE replacing the MLP on every other layer
+(offset 1).  Hybrid — runs the long_500k shape.
+"""
+import dataclasses
+
+from repro.configs.base import MambaConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    hybrid_pattern="MMMMAMMM",
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2, dt_rank=256),
+    moe=MoEConfig(num_experts=16, top_k=2, ff_dim=14336,
+                  capacity_factor=1.25, every_k_layers=2,
+                  moe_layer_offset=1, dense_ff_dim=14336),
+    pos_embed="none",   # jamba uses no positional embedding at all
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    num_layers=8, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256,
+    mamba=MambaConfig(d_state=8, d_conv=4, expand=2, dt_rank=16),
+    moe=MoEConfig(num_experts=4, top_k=2, ff_dim=128,
+                  capacity_factor=1.25, every_k_layers=2,
+                  moe_layer_offset=1, dense_ff_dim=128),
+    loss_chunk=0, attn_chunk=64, ssm_chunk=16,
+)

@@ -1,0 +1,38 @@
+"""kimi-k2-1t-a32b — Kimi K2, trillion-param MoE [arXiv:2501.kimi2].
+
+Assigned: 61L d_model=7168 64H (GQA kv=8) d_ff=2048 vocab=163840,
+MoE 384e top-8.  Per the K2 report: 1 leading dense layer (ff 18432),
+1 shared expert, per-expert ff 2048.  head_dim 128 (explicit, like the
+DeepSeek-V3 lineage it derives from).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=18432,                      # the leading dense layer's ffn
+    vocab_size=163840,
+    head_dim=128,
+    rope_theta=50000.0,
+    moe=MoEConfig(num_experts=384, top_k=8, ff_dim=2048,
+                  num_shared_experts=1, capacity_factor=1.25,
+                  first_dense_layers=1, dense_ff_dim=18432),
+    param_dtype="bfloat16",
+    optimizer="adafactor",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16,
+    moe=MoEConfig(num_experts=8, top_k=2, ff_dim=32, num_shared_experts=1,
+                  capacity_factor=1.25, first_dense_layers=1,
+                  dense_ff_dim=128),
+    loss_chunk=0, attn_chunk=64, ssm_chunk=16,
+)

@@ -1,0 +1,29 @@
+"""olmo-1b — OLMo 1B [arXiv:2402.00838].
+
+Assigned: 16L d_model=2048 16H (MHA kv=16) d_ff=8192 vocab=50304.
+Non-parametric LayerNorm (no scale/bias); SwiGLU; tied embeddings.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50304,
+    norm_type="layernorm_nonparam",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=256,
+    loss_chunk=0, attn_chunk=64,
+)

@@ -1,0 +1,32 @@
+"""qwen2-vl-72b — Qwen2-VL 72B backbone [arXiv:2409.12191].
+
+Assigned: 80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+M-RoPE with (t,h,w) position streams; the vision frontend is a STUB —
+``input_specs()`` provides precomputed patch embeddings for the leading
+``patch_frac`` of the sequence.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    m_rope=True,
+    m_rope_sections=(16, 24, 24),
+    rope_theta=1000000.0,
+    patch_frac=0.125,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256,
+    loss_chunk=0, attn_chunk=64,
+)

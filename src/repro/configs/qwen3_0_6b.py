@@ -1,0 +1,30 @@
+"""qwen3-0.6b — Qwen3 family [hf:Qwen/Qwen3-8B].
+
+Assigned: 28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936.
+qk-norm on per-head q/k; explicit head_dim 128; tied embeddings.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    num_layers=28,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=3072,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16,
+    loss_chunk=0, attn_chunk=64,
+)

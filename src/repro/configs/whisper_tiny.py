@@ -1,0 +1,35 @@
+"""whisper-tiny — Whisper tiny backbone [arXiv:2212.04356].
+
+Assigned: 4L d_model=384 6H (MHA kv=6) d_ff=1536 vocab=51865.
+Encoder-decoder; the conv audio frontend is a STUB — ``input_specs()``
+provides precomputed frame embeddings (B, 1500, d).  Parametric
+LayerNorm with bias, plain-GELU MLP, absolute sinusoidal positions
+(no RoPE).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    norm_type="layernorm",
+    act="gelu",
+    pos_embed="sinusoidal",
+    is_encoder_decoder=True,
+    encoder_layers=4,
+    enc_len=1500,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    num_layers=2, encoder_layers=2, d_model=48, num_heads=3,
+    num_kv_heads=3, d_ff=96, vocab_size=256, enc_len=16,
+    loss_chunk=0, attn_chunk=64,
+)

@@ -1,0 +1,33 @@
+"""xlstm-1.3b — xLSTM[7:1] 1.3B [arXiv:2405.04517].
+
+Assigned: 48L d_model=2048 4H d_ff=0 vocab=50304.  Repeating unit of
+7 mLSTM + 1 sLSTM blocks (the paper's 7:1 ratio); blocks are
+self-contained (no separate FFN for mLSTM; sLSTM carries a 4/3-factor
+gated FFN).  Sub-quadratic — runs the long_500k shape.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    attention="none",
+    xlstm=XLSTMConfig(pattern="smmmmmmm", mlstm_proj_factor=2.0,
+                      slstm_proj_factor=4.0 / 3.0, conv1d_kernel=4),
+    tie_embeddings=True,
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    num_layers=4, d_model=64, num_heads=2, num_kv_heads=2, vocab_size=256,
+    xlstm=XLSTMConfig(pattern="sm", mlstm_proj_factor=2.0,
+                      slstm_proj_factor=4.0 / 3.0, conv1d_kernel=4),
+    loss_chunk=0, attn_chunk=64,
+)

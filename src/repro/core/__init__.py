@@ -1,0 +1,65 @@
+"""PMT — Power Measurement Toolkit, reproduced in Python/JAX.
+
+The paper's primary contribution (Corda, Veenboer, Tolley, 2022): a
+high-level library with a standard interface for measuring the energy use
+of devices in critical application sections.
+
+Usage mirrors the paper's Listings 1 and 2::
+
+    import repro.core as pmt
+
+    # C++-style measurement mode (Listing 1)
+    sensor = pmt.create("cpuutil")
+    start = sensor.read(); work(); end = sensor.read()
+    print(sensor.joules(start, end), "J")
+    print(sensor.watts(start, end), "W")
+    print(sensor.seconds(start, end), "s")
+
+    # Python decorator mode (Listing 2), stacked backends
+    @pmt.measure("tpu")
+    @pmt.measure("cpuutil")
+    def my_application(): ...
+    measures = my_application()
+    for m in measures: print(m)
+
+    # dump mode
+    sensor.start_dump_thread("timeline.pmt"); work()
+    sensor.stop_dump_thread()
+
+Backends: rapl, sysfs, cpuutil, nvml, tpu (analytical XLA-cost sensor —
+the TPU adaptation), dummy. See DESIGN.md §2 for measured-vs-modeled
+labeling.
+"""
+from repro.core.decorators import (Measurement, Measurements, Region, dump,
+                                   measure)
+from repro.core.dumpfile import (DumpHeader, DumpRecord, average_watts, read_dump,
+                             total_joules)
+from repro.core.energy_model import TPU_V5E, EnergyModel, HardwareSpec
+from repro.core.metrics import (EfficiencyReport, ed2p, edp, gflops_per_watt,
+                                joules_per_token, tokens_per_joule)
+from repro.core.monitor import (PowerMonitor, StepEnergy, StragglerVerdict,
+                                detect_stragglers)
+from repro.core.registry import (available_backend_names, backend_names,
+                                 create, get_backend, register_backend)
+from repro.core.sampler import DumpThread, RingSampler
+from repro.core.sensor import Sample, Sensor, SensorError
+from repro.core.state import State, joules, rail_joules, seconds, watts
+
+__all__ = [
+    # state & sensor
+    "State", "Sample", "Sensor", "SensorError",
+    "joules", "watts", "seconds", "rail_joules",
+    # registry
+    "create", "get_backend", "register_backend",
+    "backend_names", "available_backend_names",
+    # modes
+    "measure", "dump", "Region", "Measurement", "Measurements",
+    "DumpThread", "RingSampler",
+    "DumpHeader", "DumpRecord", "read_dump", "total_joules", "average_watts",
+    # energy model & metrics
+    "EnergyModel", "HardwareSpec", "TPU_V5E",
+    "EfficiencyReport", "edp", "ed2p", "gflops_per_watt",
+    "joules_per_token", "tokens_per_joule",
+    # framework integration
+    "PowerMonitor", "StepEnergy", "detect_stragglers", "StragglerVerdict",
+]

@@ -1,0 +1,15 @@
+"""PMT backends.
+
+Each module provides one :class:`repro.core.sensor.Sensor` subclass and
+registers it with the backend registry at import time (see
+``repro.core.registry``).  The set mirrors the paper's Fig. 1 back ends,
+adapted to the TPU/JAX deployment target (see DESIGN.md §2):
+
+  rapl     — Linux powercap sysfs energy counters (host CPUs).   measured
+  sysfs    — generic hwmon power/energy files.                   measured
+  cpuutil  — /proc/stat utilization x calibrated TDP model.      hybrid
+  nvml     — NVIDIA via pynvml when importable.                  measured
+  tpu      — analytical XLA-cost-model sensor (TPU adaptation).  modeled
+  dummy    — deterministic waveform, for tests and examples.     modeled
+"""
+from repro.core.backends import cpuutil, dummy, nvml, rapl, sysfs, tpu  # noqa: F401

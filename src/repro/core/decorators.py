@@ -1,0 +1,177 @@
+"""Python decorators — the paper's Listing 2 interface.
+
+    import repro.core as pmt
+
+    @pmt.measure("rapl")
+    def my_application():
+        ...
+
+    measures = my_application()
+    for m in measures:
+        print(m)
+
+Semantics preserved from the paper:
+
+  * the decorated call returns the measurements (a :class:`Measurements`
+    list of one :class:`Measurement` per backend); the wrapped function's
+    own return value is available as ``measures.result``;
+  * decorators stack — ``@pmt.measure("tpu")`` above ``@pmt.measure("cpuutil")``
+    yields both measurements in one list (paper Fig. 2 stacks GPU on CPU);
+  * overhead is cumulative per decorator (benchmarked in
+    benchmarks/bench_overhead.py against the paper's ~10 ms Python claim);
+  * ``@pmt.dump(backend, filename=...)`` is measurement's dump-mode twin.
+
+Backends may be passed by name (constructed via the registry, one fresh
+sensor per decorated function) or as an existing Sensor instance (so a
+framework-owned TpuCostModelSensor can be shared).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, List, Optional, Union
+
+from repro.core import registry
+from repro.core.sensor import Sensor
+from repro.core.state import State
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One backend's measurement of one region of interest."""
+
+    sensor: str
+    kind: str
+    joules: float
+    watts: float
+    seconds: float
+    start: State
+    end: State
+    label: Optional[str] = None
+
+    def __str__(self) -> str:
+        tag = f"{self.sensor}" + (f"[{self.label}]" if self.label else "")
+        return (f"{tag}: {self.joules:.6f} J, {self.watts:.6f} W, "
+                f"{self.seconds:.6f} s ({self.kind})")
+
+    @property
+    def edp(self) -> float:
+        """Energy-delay product, J*s (paper §III)."""
+        return self.joules * self.seconds
+
+
+class Measurements(List[Measurement]):
+    """List of measurements; carries the wrapped function's return value."""
+
+    result: Any = None
+
+    def by_sensor(self, name: str) -> Measurement:
+        for m in self:
+            if m.sensor == name:
+                return m
+        raise KeyError(name)
+
+    def total_joules(self) -> float:
+        return sum(m.joules for m in self)
+
+
+def _resolve(backend: Union[str, Sensor], **kwargs) -> Sensor:
+    if isinstance(backend, Sensor):
+        return backend
+    return registry.create(backend, **kwargs)
+
+
+def measure(*backends: Union[str, Sensor], label: Optional[str] = None,
+            **backend_kwargs):
+    """Measurement-mode decorator (paper mode 2).
+
+    One sensor per listed backend is read before and after the wrapped
+    call.  Multiple backends in one decorator and stacked decorators both
+    work and produce a flat :class:`Measurements` list.
+    """
+    if not backends:
+        raise ValueError("pmt.measure requires at least one backend")
+
+    def decorate(fn):
+        sensors = [_resolve(b, **backend_kwargs) for b in backends]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            starts = [s.read() for s in sensors]
+            inner = fn(*args, **kwargs)
+            ends = [s.read() for s in sensors]
+            out = Measurements()
+            for sensor, st, en in zip(sensors, starts, ends):
+                out.append(Measurement(
+                    sensor=sensor.name, kind=sensor.kind,
+                    joules=Sensor.joules(st, en),
+                    watts=Sensor.watts(st, en),
+                    seconds=Sensor.seconds(st, en),
+                    start=st, end=en, label=label))
+            if isinstance(inner, Measurements):
+                # Stacked decorator underneath: merge, keep its result.
+                out.extend(inner)
+                out.result = inner.result
+            else:
+                out.result = inner
+            return out
+
+        wrapper.__pmt_sensors__ = sensors  # exposed for tests/benchmarks
+        return wrapper
+
+    return decorate
+
+
+def dump(backend: Union[str, Sensor], filename: str,
+         period_s: Optional[float] = None, **backend_kwargs):
+    """Dump-mode decorator (paper mode 1).
+
+    Runs a background dump thread for the duration of the wrapped call,
+    writing the power timeline to ``filename``; the wrapped function's own
+    return value passes through unchanged (measurements live in the file).
+    """
+
+    def decorate(fn):
+        sensor = _resolve(backend, **backend_kwargs)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            sensor.start_dump_thread(filename, period_s=period_s)
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                sensor.stop_dump_thread()
+
+        wrapper.__pmt_sensors__ = [sensor]
+        return wrapper
+
+    return decorate
+
+
+class Region:
+    """Imperative measurement-mode helper (the C++ Listing 1 shape)::
+
+        with pmt.Region(sensor) as r:
+            work()
+        print(r.measurement)
+    """
+
+    def __init__(self, sensor: Union[str, Sensor], label: Optional[str] = None,
+                 **backend_kwargs):
+        self._sensor = _resolve(sensor, **backend_kwargs)
+        self._label = label
+        self.measurement: Optional[Measurement] = None
+
+    def __enter__(self) -> "Region":
+        self._start = self._sensor.read()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        end = self._sensor.read()
+        self.measurement = Measurement(
+            sensor=self._sensor.name, kind=self._sensor.kind,
+            joules=Sensor.joules(self._start, end),
+            watts=Sensor.watts(self._start, end),
+            seconds=Sensor.seconds(self._start, end),
+            start=self._start, end=end, label=self._label)
+        return False

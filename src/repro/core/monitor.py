@@ -1,0 +1,201 @@
+"""PowerMonitor — PMT integrated into the training/serving loop.
+
+This is the framework-facing layer (DESIGN.md §3): per-step energy
+attribution over one or more sensors, a CSV energy log, cumulative
+accounting that survives checkpoint/restart, and power-based straggler
+detection for the fault-tolerance stack.
+
+JAX-awareness: dispatch is asynchronous, so a step is only attributed the
+energy between explicit ``block_until_ready`` boundaries — the caller (or
+the provided ``measure_step`` context manager, which blocks on exit if
+given outputs) must fence, otherwise readings would attribute a step's
+tail to its successor.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import statistics
+import threading
+from typing import Dict, List, Optional, Sequence, TextIO, Union
+
+from repro.core import registry
+from repro.core.metrics import EfficiencyReport
+from repro.core.sensor import Sensor
+from repro.core.state import State
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEnergy:
+    """Energy record for one step, one sensor."""
+
+    step: int
+    sensor: str
+    kind: str
+    joules: float
+    seconds: float
+    watts: float
+    flops: Optional[float] = None
+    tokens: Optional[int] = None
+
+    def report(self) -> EfficiencyReport:
+        return EfficiencyReport(joules=self.joules, seconds=self.seconds,
+                                flops=self.flops, tokens=self.tokens)
+
+
+class PowerMonitor:
+    """Attributes per-step energy across a set of sensors.
+
+    Args:
+      sensors: backend names or Sensor instances (stacked like the paper's
+        multi-decorator usage — e.g. ["cpuutil", "tpu"]).
+      log_path: optional CSV energy log (append mode, crash-tolerant:
+        one flushed line per step).
+      initial_joules: cumulative joules carried over from a checkpoint.
+    """
+
+    CSV_HEADER = ("step,sensor,kind,joules,seconds,watts,flops,tokens,"
+                  "gflops_per_watt,edp\n")
+
+    def __init__(self, sensors: Sequence[Union[str, Sensor]],
+                 log_path: Optional[str] = None,
+                 initial_joules: float = 0.0):
+        self.sensors: List[Sensor] = [
+            s if isinstance(s, Sensor) else registry.create(s)
+            for s in sensors]
+        if not self.sensors:
+            raise ValueError("PowerMonitor needs at least one sensor")
+        self._records: List[StepEnergy] = []
+        self._cumulative_joules = float(initial_joules)
+        self._lock = threading.Lock()
+        self._log: Optional[TextIO] = None
+        if log_path:
+            self._log = open(log_path, "a", buffering=1)
+            if self._log.tell() == 0:
+                self._log.write(self.CSV_HEADER)
+
+    # -- per-step measurement --------------------------------------------
+    @contextlib.contextmanager
+    def measure_step(self, step: int, flops: Optional[float] = None,
+                     tokens: Optional[int] = None):
+        """Context manager measuring one fenced step across all sensors.
+
+        The caller must ensure device work is complete before the block
+        exits (``jax.block_until_ready`` on the step outputs).
+        """
+        starts = [s.read() for s in self.sensors]
+        box = _StepBox()
+        try:
+            yield box
+        finally:
+            ends = [s.read() for s in self.sensors]
+            recs = []
+            for sensor, st, en in zip(self.sensors, starts, ends):
+                recs.append(StepEnergy(
+                    step=step, sensor=sensor.name, kind=sensor.kind,
+                    joules=Sensor.joules(st, en),
+                    seconds=Sensor.seconds(st, en),
+                    watts=Sensor.watts(st, en),
+                    flops=flops, tokens=tokens))
+            with self._lock:
+                self._records.extend(recs)
+                self._cumulative_joules += sum(r.joules for r in recs)
+            for r in recs:
+                self._write_log(r)
+            box.records = recs
+
+    def _write_log(self, r: StepEnergy) -> None:
+        if self._log is None:
+            return
+        rep = r.report()
+        g = rep.gflops_per_watt
+        self._log.write(
+            f"{r.step},{r.sensor},{r.kind},{r.joules:.6f},{r.seconds:.6f},"
+            f"{r.watts:.3f},{'' if r.flops is None else f'{r.flops:.0f}'},"
+            f"{'' if r.tokens is None else r.tokens},"
+            f"{'' if g is None else f'{g:.3f}'},{rep.edp:.6f}\n")
+
+    # -- cumulative accounting (checkpointable) -----------------------------
+    @property
+    def cumulative_joules(self) -> float:
+        with self._lock:
+            return self._cumulative_joules
+
+    def state_dict(self) -> Dict[str, float]:
+        """Energy state persisted inside checkpoints (DESIGN.md §3)."""
+        with self._lock:
+            recent = self._records[-32:]
+            j_per_step = (statistics.fmean(r.joules for r in recent)
+                          if recent else 0.0)
+            return {"cumulative_joules": self._cumulative_joules,
+                    "joules_per_step_ema": j_per_step}
+
+    def records(self) -> List[StepEnergy]:
+        with self._lock:
+            return list(self._records)
+
+    def close(self) -> None:
+        if self._log is not None:
+            self._log.close()
+            self._log = None
+
+
+class _StepBox:
+    """Filled with the step's records when measure_step exits."""
+
+    records: List[StepEnergy] = ()
+
+
+# -- fleet-level straggler detection (fault-tolerance integration) ---------
+
+@dataclasses.dataclass(frozen=True)
+class StragglerVerdict:
+    host: int
+    power_w: float
+    step_s: float
+    power_z: float
+    time_z: float
+    is_straggler: bool
+
+
+def detect_stragglers(host_power_w: Sequence[float],
+                      host_step_s: Sequence[float],
+                      power_sigma: float = 3.0,
+                      time_sigma: float = 3.0) -> List[StragglerVerdict]:
+    """Flag hosts whose power deviates while their step time lags.
+
+    A host that is *slow* and *anomalous in power* (low → throttling or a
+    dead accelerator; high → a runaway/thermal issue) is a straggler
+    candidate.  Power alone is not enough (data skew changes power
+    legitimately); time alone is the classic detector — requiring both
+    cuts false positives.  Uses robust (median/MAD) z-scores.
+    """
+    if len(host_power_w) != len(host_step_s):
+        raise ValueError("power and step-time vectors must align")
+    n = len(host_power_w)
+    if n == 0:
+        return []
+
+    def robust_z(xs: Sequence[float]) -> List[float]:
+        med = statistics.median(xs)
+        mad = statistics.median([abs(x - med) for x in xs])
+        scale = 1.4826 * mad
+        if scale == 0.0:
+            # MAD degenerates when >50% of hosts are identical (the
+            # common healthy-fleet case) — fall back to the std so a
+            # single outlier is still visible.
+            scale = statistics.pstdev(xs) if len(xs) > 1 else 0.0
+        if scale == 0.0:
+            return [0.0] * len(xs)
+        return [(x - med) / scale for x in xs]
+
+    pz = robust_z(host_power_w)
+    tz = robust_z(host_step_s)
+    out = []
+    for i in range(n):
+        slow = tz[i] > time_sigma
+        odd_power = abs(pz[i]) > power_sigma
+        out.append(StragglerVerdict(
+            host=i, power_w=host_power_w[i], step_s=host_step_s[i],
+            power_z=pz[i], time_z=tz[i], is_straggler=bool(slow and odd_power)))
+    return out

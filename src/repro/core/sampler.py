@@ -1,0 +1,116 @@
+"""Background sampling thread — PMT's core runtime mechanism.
+
+"PMT library's core consists of a background thread to the profiled
+application that communicates and gathers power consumption information
+from the selected back end."
+
+Two consumers:
+
+  * :class:`DumpThread` — dump-mode: sample at the backend's native period
+    and append records to a dump file (see repro.core.dumpfile).
+  * :class:`RingSampler` — in-memory timeline with a bounded ring buffer,
+    used by the PowerMonitor and the sampling-rate benchmark.
+
+Both honour the backend's ``native_period_s`` floor: sampling faster than
+the backend updates only duplicates values (the paper's NVML-10ms /
+RAPL-500ms observation), so requests below the floor are clamped.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Deque, List, Optional
+
+from repro.core.dumpfile import DumpWriter
+from repro.core.sensor import Sensor
+from repro.core.state import State
+
+
+class _PeriodicThread(threading.Thread):
+    """Base: call ``self._tick()`` every ``period_s`` until stopped."""
+
+    def __init__(self, period_s: float):
+        super().__init__(daemon=True)
+        self._period_s = period_s
+        self._stop_evt = threading.Event()
+
+    def run(self) -> None:
+        # Sample immediately, then on the period; a final sample on stop
+        # closes the interval so short regions still get >= 2 records.
+        self._tick()
+        while not self._stop_evt.wait(self._period_s):
+            self._tick()
+        self._tick()
+
+    def stop(self, join: bool = True) -> None:
+        self._stop_evt.set()
+        if join and self.is_alive():
+            self.join(timeout=10.0)
+
+    def _tick(self) -> None:  # pragma: no cover - overridden
+        raise NotImplementedError
+
+
+def clamp_period(sensor: Sensor, period_s: Optional[float]) -> float:
+    """Clamp a requested period to the backend's sustainable floor."""
+    if period_s is None:
+        return sensor.native_period_s
+    return max(float(period_s), sensor.native_period_s)
+
+
+class DumpThread(_PeriodicThread):
+    """Dump-mode engine behind ``Sensor.start_dump_thread``."""
+
+    def __init__(self, sensor: Sensor, filename: str,
+                 period_s: Optional[float] = None):
+        super().__init__(clamp_period(sensor, period_s))
+        self._sensor = sensor
+        self._writer = DumpWriter(filename, sensor.name, sensor.kind)
+        self._first: Optional[State] = None
+        self._prev: Optional[State] = None
+
+    def _tick(self) -> None:
+        st = self._sensor.read()
+        if self._first is None:
+            self._first = st
+        if st.watts is not None:
+            w = st.watts
+        elif self._prev is not None:
+            w = Sensor.watts(self._prev, st)
+        else:
+            w = 0.0
+        self._writer.write(st.timestamp_s - self._first.timestamp_s, w,
+                           st.joules)
+        self._prev = st
+
+    def stop(self, join: bool = True) -> None:
+        super().stop(join=join)
+        self._writer.close()
+
+
+class RingSampler(_PeriodicThread):
+    """In-memory sampler with a bounded ring buffer of States."""
+
+    def __init__(self, sensor: Sensor, period_s: Optional[float] = None,
+                 maxlen: int = 100_000):
+        super().__init__(clamp_period(sensor, period_s))
+        self._sensor = sensor
+        self._buf: Deque[State] = collections.deque(maxlen=maxlen)
+        self._buf_lock = threading.Lock()
+
+    def _tick(self) -> None:
+        st = self._sensor.read()
+        with self._buf_lock:
+            self._buf.append(st)
+
+    def snapshot(self) -> List[State]:
+        with self._buf_lock:
+            return list(self._buf)
+
+    def __enter__(self) -> "RingSampler":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.stop()
+        return False

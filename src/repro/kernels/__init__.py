@@ -1,0 +1,18 @@
+"""Pallas TPU kernels.
+
+The paper's Fig. 2 benchmark set (its compute hot-spots), re-tiled for the
+TPU memory hierarchy (HBM -> VMEM blocks -> MXU/VPU), plus the framework's
+own perf-critical kernel (flash attention):
+
+  fma32            FLOP burner — compute-roofline probe
+  stream           triad a + s*b — HBM-bandwidth probe
+  gemm             tiled matmul with K-axis accumulation — MXU probe
+  jacobi2d         5-point stencil, row-block halo — VMEM-reuse probe
+  gridder          IDG-style visibility -> subgrid accumulation
+  degridder        adjoint of gridder
+  flash_attention  blockwise online-softmax attention (GQA/causal/window)
+
+Every kernel ships ops.py (jit'd wrapper; interpret= for CPU) and ref.py
+(pure-jnp oracle); tests sweep shapes/dtypes and assert_allclose against
+the oracle in interpret mode.  The compiled path is TPU-only by design.
+"""

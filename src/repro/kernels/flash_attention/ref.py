@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, window, softcap)."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=1.0):
+    """q: (BH, Sq, hd), k/v: (BKVH, Skv, hd)."""
+    bh, sq, hd = q.shape
+    bkvh, skv, _ = k.shape
+    g = bh // bkvh
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= rows - cols < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p.astype(v.dtype), v).astype(q.dtype)

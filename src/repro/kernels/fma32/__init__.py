@@ -1,0 +1,4 @@
+from repro.kernels.fma32.ops import fma32
+from repro.kernels.fma32.ref import fma32_ref
+
+__all__ = ["fma32", "fma32_ref"]

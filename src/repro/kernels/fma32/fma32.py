@@ -1,0 +1,41 @@
+"""FMA32 — the paper's FLOP-burner benchmark kernel, on the TPU VPU.
+
+Each grid step owns one VMEM block and chains ``iters`` dependent fused
+multiply-adds on it (y = y*a + b), so arithmetic intensity grows linearly
+with ``iters`` and the kernel walks up the compute roofline (the GPU
+original does the same with CUDA-core FMAs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fma_kernel(x_ref, o_ref, *, iters: int):
+    y = x_ref[...]
+    a = jnp.float32(1.0000001)
+    b = jnp.float32(1e-7)
+
+    def body(_, y):
+        return y * a + b
+
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, y)
+
+
+def fma32_pallas(x: jnp.ndarray, iters: int = 64,
+                 block: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: (M, N) float32, N a multiple of 128."""
+    m, n = x.shape
+    bm = min(block, m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_fma_kernel, iters=iters),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

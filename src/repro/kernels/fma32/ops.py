@@ -1,0 +1,11 @@
+"""jit'd wrapper for fma32."""
+import functools
+
+import jax
+
+from repro.kernels.fma32.fma32 import fma32_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "block", "interpret"))
+def fma32(x, iters: int = 64, block: int = 256, interpret: bool = False):
+    return fma32_pallas(x, iters=iters, block=block, interpret=interpret)

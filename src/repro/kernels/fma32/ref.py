@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for fma32."""
+import jax
+import jax.numpy as jnp
+
+
+def fma32_ref(x: jnp.ndarray, iters: int = 64) -> jnp.ndarray:
+    a = jnp.float32(1.0000001)
+    b = jnp.float32(1e-7)
+
+    def body(_, y):
+        return y * a + b
+
+    return jax.lax.fori_loop(0, iters, body, x)

@@ -1,0 +1,14 @@
+"""jit'd wrapper for gemm."""
+import functools
+
+import jax
+
+from repro.kernels.gemm.gemm import gemm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "block_k", "interpret"))
+def gemm(a, b, block_m: int = 256, block_n: int = 256, block_k: int = 256,
+         interpret: bool = False):
+    return gemm_pallas(a, b, block_m=block_m, block_n=block_n,
+                       block_k=block_k, interpret=interpret)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for gemm."""
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,4 @@
+from repro.kernels.gridder.ops import degridder, gridder
+from repro.kernels.gridder.ref import degridder_ref, gridder_ref
+
+__all__ = ["gridder", "gridder_ref", "degridder", "degridder_ref"]

@@ -1,0 +1,18 @@
+"""jit'd wrappers for gridder / degridder."""
+import functools
+
+import jax
+
+from repro.kernels.gridder.gridder import degridder_pallas, gridder_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def gridder(lm, uv, vis, block_v: int = 128, interpret: bool = False):
+    return gridder_pallas(lm, uv, vis, block_v=block_v, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def degridder(lm, uv, subgrids, block_v: int = 128,
+              interpret: bool = False):
+    return degridder_pallas(lm, uv, subgrids, block_v=block_v,
+                            interpret=interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for gridder / degridder (complex math)."""
+import jax.numpy as jnp
+
+TWO_PI = 2.0 * jnp.pi
+
+
+def _phasor(lm, uv):
+    # (S, P, V) phase matrix
+    phase = TWO_PI * jnp.einsum("pc,svc->spv", lm, uv)
+    return jnp.exp(1j * phase.astype(jnp.float32))
+
+
+def gridder_ref(lm, uv, vis):
+    """lm (P,2), uv (S,V,2), vis (S,V,2) -> (S,P,2)."""
+    ph = _phasor(lm, uv)                               # (S,P,V)
+    v = (vis[..., 0] + 1j * vis[..., 1]).astype(ph.dtype)
+    sub = jnp.einsum("spv,sv->sp", ph, v)
+    return jnp.stack([sub.real, sub.imag], axis=-1).astype(jnp.float32)
+
+
+def degridder_ref(lm, uv, subgrids):
+    """lm (P,2), uv (S,V,2), subgrids (S,P,2) -> (S,V,2)."""
+    ph = _phasor(lm, uv)                               # (S,P,V)
+    g = (subgrids[..., 0] + 1j * subgrids[..., 1]).astype(ph.dtype)
+    vis = jnp.einsum("spv,sp->sv", jnp.conj(ph), g)
+    return jnp.stack([vis.real, vis.imag], axis=-1).astype(jnp.float32)

@@ -1,0 +1,4 @@
+from repro.kernels.jacobi2d.ops import jacobi2d
+from repro.kernels.jacobi2d.ref import jacobi2d_ref
+
+__all__ = ["jacobi2d", "jacobi2d_ref"]

@@ -1,0 +1,11 @@
+"""jit'd wrapper for jacobi2d."""
+import functools
+
+import jax
+
+from repro.kernels.jacobi2d.jacobi2d import jacobi2d_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def jacobi2d(x, block_h: int = 256, interpret: bool = False):
+    return jacobi2d_pallas(x, block_h=block_h, interpret=interpret)

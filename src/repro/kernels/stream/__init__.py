@@ -1,0 +1,4 @@
+from repro.kernels.stream.ops import stream_triad
+from repro.kernels.stream.ref import stream_triad_ref
+
+__all__ = ["stream_triad", "stream_triad_ref"]

@@ -1,0 +1,14 @@
+"""jit'd wrapper for the STREAM triad."""
+import functools
+
+import jax
+
+from repro.kernels.stream.stream import stream_triad_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scalar", "block", "interpret"))
+def stream_triad(a, b, scalar: float = 2.0, block: int = 512,
+                 interpret: bool = False):
+    return stream_triad_pallas(a, b, scalar=scalar, block=block,
+                               interpret=interpret)

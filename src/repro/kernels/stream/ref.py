@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the STREAM triad."""
+
+
+def stream_triad_ref(a, b, scalar: float = 2.0):
+    return a + scalar * b

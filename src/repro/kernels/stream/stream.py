@@ -1,0 +1,31 @@
+"""STREAM triad — the paper's device-memory-bandwidth benchmark.
+
+c = a + s*b streamed through VMEM in (bm, N) blocks; arithmetic intensity
+~1/12 FLOP/byte, so the kernel pins the HBM roofline by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _triad_kernel(a_ref, b_ref, o_ref, *, scalar: float):
+    o_ref[...] = a_ref[...] + scalar * b_ref[...]
+
+
+def stream_triad_pallas(a, b, scalar: float = 2.0, block: int = 512,
+                        interpret: bool = False):
+    m, n = a.shape
+    bm = min(block, m)
+    spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_triad_kernel, scalar=scalar),
+        grid=(m // bm,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)

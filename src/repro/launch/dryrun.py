@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 host placeholder devices.
+
+Per cell this produces:
+  1. the FULL compile (scan over layer units) on the requested mesh —
+     ``memory_analysis()`` proves the step fits, and the compile itself
+     proves the sharding is coherent (no GSPMD errors, all collectives
+     lower);
+  2. on the single-pod mesh, two PROBE compiles (1 and 2 layer-units,
+     Python-unrolled) whose per-chip cost_analysis + HLO collective bytes
+     are combined into exact step totals (scan bodies are cost-counted
+     once by XLA, hence the probes — see repro.roofline.terms);
+  3. a RooflineReport (three terms, dominant bottleneck, useful ratio).
+
+Results are appended as JSON to --out so the sweep is restartable.
+
+Usage:
+  python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only] [--out f.json]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import InputShape, ModelConfig, SHAPES, \
+    shape_applicable
+from repro.launch.mesh import cell_rules, make_production_mesh
+from repro.models import model as model_mod
+from repro.models.xlstm import slstm_recurrent_flops
+from repro.optim.optimizers import OptimizerConfig, opt_state_logical_axes
+from repro.roofline.terms import (CellCosts, combine_costs,
+                                  costs_from_compiled, roofline_report)
+from repro.sharding.specs import axis_rules, logical_to_spec, param_sharding
+from repro.train.steps import TrainState, init_train_state, make_train_step
+
+
+def opt_config(cfg: ModelConfig) -> OptimizerConfig:
+    return OptimizerConfig(name=cfg.optimizer)
+
+
+# -- probe config construction ----------------------------------------------------
+
+def probe_configs(cfg: ModelConfig, shape: Optional[InputShape] = None):
+    """(base_cfg, [(probe_cfg, unit_count), ...]) for unrolled cost probes.
+
+    Probes Python-unroll every inner time-chunk loop so each chunk's cost
+    lands in the HLO; to keep probe tracing tractable the mamba chunk size
+    is raised so a probe unrolls at most 8 chunks (per-chunk cost is
+    shape-identical, so totals are unchanged up to the associative-scan
+    depth term — noted in EXPERIMENTS.md §Roofline).
+    """
+    lay = model_mod.unit_layout(cfg)
+    common = dict(scan_layers=False, unroll_time_chunks=True)
+    if cfg.mamba is not None and shape is not None and \
+            shape.kind != "decode":
+        common["ssm_chunk"] = max(cfg.ssm_chunk, shape.seq_len // 8)
+    base_layers = lay.prefix_len + lay.unit_len
+    base_kw = dict(num_layers=base_layers, **common)
+    probes = []
+    if cfg.is_encoder_decoder:
+        base_kw["encoder_layers"] = 1
+        base = dataclasses.replace(cfg, **base_kw)
+        if lay.n_units > 1:
+            probes.append((dataclasses.replace(
+                cfg, num_layers=lay.prefix_len + 2 * lay.unit_len,
+                encoder_layers=1, **common), lay.n_units))
+        if lay.enc_units > 1:
+            probes.append((dataclasses.replace(
+                cfg, num_layers=base_layers, encoder_layers=2, **common),
+                lay.enc_units))
+        return base, probes
+    base = dataclasses.replace(cfg, **base_kw)
+    if lay.n_units > 1:
+        probes.append((dataclasses.replace(
+            cfg, num_layers=lay.prefix_len + 2 * lay.unit_len, **common),
+            lay.n_units))
+    return base, probes
+
+
+def slstm_correction(cfg: ModelConfig, shape: InputShape,
+                     chips: int) -> Optional[CellCosts]:
+    """Analytic per-chip FLOPs for sLSTM recurrent matvecs (scan over time
+    is cost-counted once; DESIGN.md §9.2)."""
+    if cfg.family != "ssm" or shape.kind == "decode":
+        return None
+    n_s = sum(1 for i in range(cfg.num_layers)
+              if cfg.xlstm.pattern[i % len(cfg.xlstm.pattern)] == "s")
+    if not n_s:
+        return None
+    f = slstm_recurrent_flops(cfg, shape.global_batch, shape.seq_len) * n_s
+    if shape.kind == "train":
+        pass  # slstm_recurrent_flops already counts fwd+bwd (3x)
+    else:
+        f /= 3.0
+    # pure-DP xlstm: work is replicated over the model axis, so per-chip
+    # flops are global / data_shards — approximate with /32 (pod*data)
+    return CellCosts(flops=f / max(1, chips // 16), hbm_bytes=0.0,
+                     coll_bytes=0.0)
+
+
+# -- sharding helpers ---------------------------------------------------------------
+
+def batch_shardings(mesh, rules, batch_specs):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def sh(spec):
+        if spec.shape == ():
+            return NamedSharding(mesh, P())
+        axes = ["batch"] + [None] * (len(spec.shape) - 1)
+        return NamedSharding(mesh, logical_to_spec(
+            axes, rules, shape=spec.shape, mesh_sizes=sizes))
+
+    return jax.tree.map(sh, batch_specs)
+
+
+def state_shardings(cfg, mesh, rules, state_struct, axes_tree):
+    ocfg = opt_config(cfg)
+    p_sh = param_sharding(axes_tree, mesh, rules, like=state_struct.params)
+    inner_axes = opt_state_logical_axes(state_struct.params, axes_tree, ocfg)
+    inner_sh = param_sharding(inner_axes, mesh, rules,
+                              like=state_struct.opt.inner)
+    from repro.optim.optimizers import OptState
+    return TrainState(params=p_sh,
+                      opt=OptState(step=NamedSharding(mesh, P()),
+                                   inner=inner_sh))
+
+
+def _eval_shape_with_axes(fn):
+    """eval_shape a (values, axes) initializer: abstract the array values,
+    capture the static logical-axes tree as a trace-time side effect."""
+    captured = []
+
+    def wrapped():
+        values, ax = fn()
+        captured.append(ax)
+        return values
+
+    struct = jax.eval_shape(wrapped)
+    return struct, captured[0]
+
+
+# -- lowering one cell ----------------------------------------------------------------
+
+def lower_cell(cfg: ModelConfig, shape: InputShape, mesh, rules,
+               compile_opts: Optional[Dict[str, Any]] = None,
+               microbatches: int = 1):
+    """Lower + compile one step for one cell. Returns (lowered, compiled)."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    with mesh, axis_rules(rules, mesh_sizes):
+        if shape.kind == "train":
+            ocfg = opt_config(cfg)
+            state_struct, axes = _eval_shape_with_axes(
+                lambda: init_train_state(jax.random.PRNGKey(0), cfg, ocfg))
+            st_sh = state_shardings(cfg, mesh, rules, state_struct, axes)
+            batch = configs.input_specs(cfg, shape)
+            b_sh = batch_shardings(mesh, rules, batch)
+            step = make_train_step(cfg, ocfg, microbatches=microbatches)
+            lowered = jax.jit(step, in_shardings=(st_sh, b_sh),
+                              out_shardings=(st_sh, None),
+                              donate_argnums=(0,)).lower(state_struct, batch)
+        elif shape.kind == "prefill":
+            params_struct, axes = _eval_shape_with_axes(
+                lambda: model_mod.init_params(jax.random.PRNGKey(0), cfg))
+            p_sh = param_sharding(axes, mesh, rules, like=params_struct)
+            batch = configs.input_specs(cfg, shape)
+            b_sh = batch_shardings(mesh, rules, batch)
+            # constrain the cache outputs — left unspecified the compiler
+            # replicates them (387 GiB/chip on kimi before this)
+            caches = jax.eval_shape(
+                lambda: model_mod.init_caches(cfg, shape.global_batch,
+                                              shape.seq_len))
+            c_sh = param_sharding(model_mod.cache_logical_axes(cfg), mesh,
+                                  rules, like=caches)
+            prefill, _ = model_mod.make_serve_fns(cfg)
+            fn = lambda p, b: prefill(p, b, shape.seq_len)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                              out_shardings=(None, c_sh)).lower(
+                params_struct, batch)
+        else:  # decode
+            params_struct, axes = _eval_shape_with_axes(
+                lambda: model_mod.init_params(jax.random.PRNGKey(0), cfg))
+            p_sh = param_sharding(axes, mesh, rules, like=params_struct)
+            caches = jax.eval_shape(
+                lambda: model_mod.init_caches(cfg, shape.global_batch,
+                                              shape.seq_len))
+            cache_ax = model_mod.cache_logical_axes(cfg)
+            c_sh = param_sharding(cache_ax, mesh, rules, like=caches)
+            tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            cur = jax.ShapeDtypeStruct((), jnp.int32)
+            _, decode = model_mod.make_serve_fns(cfg)
+            lowered = jax.jit(
+                decode,
+                in_shardings=(p_sh, c_sh, batch_shardings(mesh, rules, tok),
+                              NamedSharding(mesh, P())),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,)).lower(params_struct, caches, tok, cur)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+# -- one full cell run -----------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules_extra=None, cfg_overrides=None,
+             skip_probes: bool = False,
+             microbatches: int = 1) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    cfg = configs.get_config(arch, **(cfg_overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    rules = cell_rules(arch, shape_name, multi_pod, rules_extra)
+
+    out: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "ok",
+                           "microbatches": microbatches}
+    t0 = time.time()
+    _, compiled = lower_cell(cfg, shape, mesh, rules,
+                             microbatches=microbatches)
+    out["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    out["memory"] = {
+        "argument_gib": ma.argument_size_in_bytes / 2 ** 30,
+        "output_gib": ma.output_size_in_bytes / 2 ** 30,
+        "temp_gib": ma.temp_size_in_bytes / 2 ** 30,
+        "alias_gib": ma.alias_size_in_bytes / 2 ** 30,
+    }
+    out["memory"]["per_chip_gib"] = (
+        out["memory"]["argument_gib"] + out["memory"]["temp_gib"]
+        - out["memory"]["alias_gib"])
+    full_costs = costs_from_compiled(compiled)
+    out["full_compile_costs"] = dataclasses.asdict(full_costs)
+    del compiled
+
+    if multi_pod or skip_probes:
+        return out
+
+    # -- probes (single-pod roofline) --
+    base_cfg, probes = probe_configs(cfg, shape)
+    _, c_base = lower_cell(base_cfg, shape, mesh, rules)
+    base_costs = costs_from_compiled(c_base)
+    del c_base
+    deltas = []
+    for pcfg, count in probes:
+        _, c_p = lower_cell(pcfg, shape, mesh, rules)
+        deltas.append((costs_from_compiled(c_p), count))
+        del c_p
+    corr = slstm_correction(cfg, shape, chips)
+    total = combine_costs(base_costs, deltas, corrections=corr)
+    rep = roofline_report(arch, shape, mesh_name, chips, total, cfg)
+    out["roofline"] = {
+        "flops_per_chip": total.flops,
+        "hbm_bytes_per_chip": total.hbm_bytes,
+        "bytes_accessed_per_chip": total.bytes_accessed,
+        "coll_bytes_per_chip": total.coll_bytes,
+        "coll_by_kind": total.coll_by_kind,
+        "compute_s": rep.compute_s,
+        "memory_s": rep.memory_s,
+        "collective_s": rep.collective_s,
+        "dominant": rep.dominant,
+        "step_s": rep.step_s,
+        "model_flops": rep.model_flops,
+        "useful_ratio": rep.useful_ratio,
+        "roofline_fraction": rep.roofline_fraction,
+    }
+    return out
+
+
+def cells(only_arch=None, only_shape=None):
+    for arch in configs.ARCH_NAMES:
+        if only_arch and arch != only_arch:
+            continue
+        cfg = configs.get_config(arch)
+        for shape_name in SHAPES:
+            if only_shape and shape_name != only_shape:
+                continue
+            if not shape_applicable(cfg, shape_name):
+                continue
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    todo = list(cells(args.arch, args.shape))
+    if not todo:
+        raise SystemExit("no cells selected")
+
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") == "ok":
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    meshes = []
+    if not args.multi_pod:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    with open(args.out, "a") as f:
+        for arch, shape_name in todo:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape_name, mesh_name) in done:
+                    print(f"skip {arch} {shape_name} {mesh_name} (done)")
+                    continue
+                print(f"=== {arch} {shape_name} {mesh_name}", flush=True)
+                try:
+                    res = run_cell(arch, shape_name, mp,
+                                   skip_probes=args.skip_probes)
+                except Exception as e:  # record failures, keep sweeping
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(res["error"], flush=True)
+                f.write(json.dumps(res) + "\n")
+                f.flush()
+                jax.clear_caches()
+                if res["status"] == "ok":
+                    print(f"    compile={res.get('compile_s')}s "
+                          f"mem/chip={res['memory']['per_chip_gib']:.2f}GiB"
+                          + (f" dom={res['roofline']['dominant']}"
+                             if "roofline" in res else ""), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb harness: hypothesis -> change -> re-lower -> compare.
+
+Each experiment is (cell, name, hypothesis, {rules_extra | cfg}) applied
+on top of the cell's baseline; the harness re-runs the probe lowerings and
+prints the before/after roofline terms so every iteration lands in
+EXPERIMENTS.md §Perf with its prediction and verdict.
+
+Usage:
+  python -m repro.launch.hillclimb --list
+  python -m repro.launch.hillclimb --run smollm_seqpar ...
+  python -m repro.launch.hillclimb --cell smollm-135m:train_4k \
+      --set causal_kv_trim=True --name trim
+"""
+import argparse
+import json
+from typing import Any, Dict, Optional
+
+from repro.launch import dryrun as D
+
+# name -> (arch, shape, hypothesis, rules_extra, cfg_overrides)
+EXPERIMENTS: Dict[str, tuple] = {
+    # -- smollm train_4k: memory-dominated (non-flash attention scores) --
+    "smollm_trim": (
+        "smollm-135m", "train_4k",
+        "causal KV-trim halves score-matrix FLOPs+traffic (upper-triangle "
+        "blocks never computed): memory_s ~ -45%",
+        None, {"causal_kv_trim": True}),
+    "smollm_seqpar": (
+        "smollm-135m", "train_4k",
+        "9 heads don't shard on model=16; shard the query-sequence axis "
+        "instead (context parallelism): score buffers /16 -> memory_s way "
+        "down at the cost of K/V all-gathers",
+        {"seq": "model"}, None),
+    "smollm_seqpar_trim": (
+        "smollm-135m", "train_4k",
+        "compose seqpar + trim",
+        {"seq": "model"}, {"causal_kv_trim": True}),
+    "smollm_chunk512": (
+        "smollm-135m", "train_4k",
+        "smaller q-chunk (512) halves the live score buffer; traffic "
+        "roughly unchanged -> memory_s flat, temp_gib down",
+        None, {"attn_chunk": 512}),
+
+    # -- kimi train_4k: the paper-representative MoE cell --
+    "kimi_cf1": (
+        "kimi-k2-1t-a32b", "train_4k",
+        "capacity_factor 1.25->1.0 cuts expert-FFN FLOPs and dispatch "
+        "buffers by 20% at the cost of more dropped tokens",
+        None, {"moe": None}),  # placeholder — filled in code below
+    "kimi_nofsdp": (
+        "kimi-k2-1t-a32b", "train_4k",
+        "un-FSDP the weights (d_model unsharded at rest): kills the "
+        "per-layer all-gathers -> collective_s down, memory/chip up 16x",
+        {"d_model": None}, None),
+    "kimi_trim": (
+        "kimi-k2-1t-a32b", "train_4k",
+        "causal KV-trim on the 64-head attention",
+        None, {"causal_kv_trim": True}),
+    "kimi_trim_mb8": (
+        "kimi-k2-1t-a32b", "train_4k",
+        "8 gradient-accumulation microbatches divide activation temps ~8x "
+        "(full-compile memory_analysis only; per-step costs unchanged): "
+        "190.9 -> ~25-35 GiB/chip, the fits-prescription measured",
+        None, {"causal_kv_trim": True}),
+
+    "kimi_bf16norm": (
+        "kimi-k2-1t-a32b", "train_4k",
+        "the HLO shows activation all-reduces executing in fp32 (the "
+        "norm's upcast fuses across the partitioner's AR). bf16-io norms "
+        "keep AR operands bf16: collective_s ~ -45%",
+        None, {"norm_bf16_io": True}),
+    "kimi_bf16norm_cf1": (
+        "kimi-k2-1t-a32b", "train_4k",
+        "compose bf16-io norms + capacity 1.0",
+        None, {"norm_bf16_io": True, "moe": "CF1"}),
+
+    # -- olmo train_4k: most collective-bound (X = 5.6x C) --
+    "olmo_bf16norm": (
+        "olmo-1b", "train_4k",
+        "same fp32-AR finding on a dense arch: bf16-io norms halve "
+        "activation-AR bytes",
+        None, {"norm_bf16_io": True}),
+    "olmo_nofsdp": (
+        "olmo-1b", "train_4k",
+        "1.3B params easily fit replicated-over-data: dropping FSDP "
+        "removes per-layer weight all-gathers; gradient AR remains",
+        {"d_model": None}, None),
+    "olmo_bf16norm_nofsdp": (
+        "olmo-1b", "train_4k",
+        "compose bf16-io norms + no-FSDP",
+        {"d_model": None}, {"norm_bf16_io": True}),
+    "olmo_puredp": (
+        "olmo-1b", "train_4k",
+        "bf16norm/nofsdp refuted -> the X term is per-layer TP activation "
+        "all-reduces. At 1.3B params TP buys nothing: go pure-DP-256 "
+        "(batch over data AND model, no head/ffn/vocab sharding, FSDP "
+        "keeps params sharded): activation ARs vanish, only the gradient "
+        "reduction remains. Predict X 1.54s -> <0.2s",
+        {"batch": ("data", "model"), "heads": None, "kv_heads": None,
+         "ffn": None, "vocab": None}, None),
+
+    # -- extensions beyond the three required cells --
+    "qwen2vl_trim": (
+        "qwen2-vl-72b", "train_4k",
+        "best big dense cell (43.1%): causal KV-trim should push the "
+        "memory term down ~25% and the fraction past 50%",
+        None, {"causal_kv_trim": True}),
+    "gemma2_trim": (
+        "gemma2-27b", "train_4k",
+        "gemma2's local layers already bound their KV span; trim only "
+        "helps the global half -> expect ~12% off M",
+        None, {"causal_kv_trim": True}),
+
+    # -- deepseek decode_32k: MLA absorbed decode --
+    "dsv3_decode_seqcache": (
+        "deepseek-v3-671b", "decode_32k",
+        "shard the 32k latent-cache sequence axis over model (context "
+        "parallelism): cache reads /16 -> memory_s down; adds a score "
+        "all-reduce per layer",
+        {"kv_seq": "model"}, None),
+}
+
+
+def _resolve(name):
+    arch, shape, hyp, rules_extra, cfg_over = EXPERIMENTS[name]
+    import dataclasses
+    from repro import configs
+    if name == "kimi_cf1":
+        base = configs.get_config(arch)
+        cfg_over = {"moe": dataclasses.replace(base.moe,
+                                               capacity_factor=1.0)}
+    elif cfg_over and cfg_over.get("moe") == "CF1":
+        base = configs.get_config(arch)
+        cfg_over = dict(cfg_over)
+        cfg_over["moe"] = dataclasses.replace(base.moe, capacity_factor=1.0)
+    return arch, shape, hyp, rules_extra, cfg_over
+
+
+def run_experiment(name: str, out_path: str):
+    arch, shape, hyp, rules_extra, cfg_over = _resolve(name)
+    mb = 1
+    if "_mb" in name:
+        mb = int(name.rsplit("_mb", 1)[1])
+    print(f"=== {name}: {arch} x {shape}", flush=True)
+    print(f"    hypothesis: {hyp}", flush=True)
+    res = D.run_cell(arch, shape, multi_pod=False, rules_extra=rules_extra,
+                     cfg_overrides=cfg_over, microbatches=mb,
+                     skip_probes=(mb > 1))
+    res["experiment"] = name
+    res["hypothesis"] = hyp
+    with open(out_path, "a") as f:
+        f.write(json.dumps(res) + "\n")
+    if res["status"] == "ok":
+        rf = res["roofline"]
+        print(f"    C={rf['compute_s']:.4f}s M={rf['memory_s']:.4f}s "
+              f"X={rf['collective_s']:.4f}s dom={rf['dominant']} "
+              f"mem/chip={res['memory']['per_chip_gib']:.2f}GiB "
+              f"roofline={rf['roofline_fraction']*100:.1f}%")
+    else:
+        print("    ERROR:", res["error"][:160])
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--run", nargs="+", default=[])
+    ap.add_argument("--out", default="benchmarks/results_hillclimb.jsonl")
+    args = ap.parse_args()
+    if args.list:
+        for k, v in EXPERIMENTS.items():
+            print(f"{k:24s} {v[0]} x {v[1]}")
+        return
+    import jax
+    for name in args.run:
+        run_experiment(name, args.out)
+        jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

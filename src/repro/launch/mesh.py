@@ -1,0 +1,85 @@
+"""Production meshes + per-arch sharding rules.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state): (16, 16) (data, model) single-pod, or
+(2, 16, 16) (pod, data, model) for the 2-pod = 512-chip dry-run.
+
+Sharding strategy (DESIGN.md §6), expressed as logical-axis rules:
+
+  * activations: batch -> (pod, data); heads/ffn/vocab/experts -> model (TP/EP)
+  * weights-at-rest: the "d_model" rule maps to (pod, data) — weight
+    matrices carry a d_model dimension, so they are FSDP-sharded across
+    the data axes *at rest* and all-gathered per layer by GSPMD.
+    Activations are untouched because their batch dim claims (pod, data)
+    first and a mesh axis is never assigned twice within one tensor.
+  * per-arch overrides: xlstm is pure-DP at baseline (4-head mLSTM
+    tensor-parallelism is a §Perf hillclimb, not a default); long-context
+    decode shards the KV-cache sequence axis instead of heads.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.sharding.specs import DEFAULT_RULES, MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 512 if multi_pod else 256
+    devices = jax.devices()[:ndev]
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for the production mesh, have "
+            f"{len(devices)} — dryrun.py sets "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            f"importing jax")
+    import numpy as np
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+# -- rules ---------------------------------------------------------------------
+
+def base_rules(multi_pod: bool) -> Dict[str, MeshAxes]:
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = ("pod", "data") if multi_pod else ("data",)
+    # FSDP-at-rest for weight matrices (see module docstring)
+    rules["d_model"] = ("pod", "data") if multi_pod else ("data",)
+    return rules
+
+
+ARCH_RULE_OVERRIDES: Dict[str, Dict[str, MeshAxes]] = {
+    # xlstm: 4 heads / small dims — TP pays one all-reduce per layer on a
+    # (B, nh, Qc, S) tensor for no memory win at 1.3B. Baseline is DP-only
+    # + FSDP; head-sharding is explored in §Perf.
+    "xlstm-1.3b": {"lstm_inner": None, "ffn": None, "vocab": None,
+                   "heads": None, "kv_heads": None},
+}
+
+SHAPE_RULE_OVERRIDES: Dict[str, Dict[str, MeshAxes]] = {
+    # long-context decode: one sequence, 500k-token caches — shard the
+    # cache sequence axis over the model axis (context parallelism).
+    "long_500k": {"kv_seq": "model"},
+}
+
+
+def cell_rules(arch: str, shape_name: str,
+               multi_pod: bool,
+               extra: Optional[Dict[str, MeshAxes]] = None
+               ) -> Dict[str, MeshAxes]:
+    rules = base_rules(multi_pod)
+    rules.update(ARCH_RULE_OVERRIDES.get(arch, {}))
+    rules.update(SHAPE_RULE_OVERRIDES.get(shape_name, {}))
+    if extra:
+        rules.update(extra)
+    return rules

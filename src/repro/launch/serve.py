@@ -1,0 +1,55 @@
+"""Serving launcher: batched requests through the ServeEngine with PMT
+J/token accounting.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+      --reduced --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+import repro.core as pmt
+from repro import configs
+from repro.models import model as model_mod
+from repro.serve.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m",
+                    choices=list(configs.ARCH_NAMES))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    params, _ = model_mod.init_params(jax.random.PRNGKey(args.seed), cfg)
+    monitor = pmt.PowerMonitor(["cpuutil", "tpu"])
+    engine = ServeEngine(cfg, params, batch_size=args.batch,
+                         max_len=args.max_len, monitor=monitor)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        size=rng.integers(2, 9)).tolist(),
+                    max_new_tokens=args.max_new)
+            for _ in range(args.requests)]
+    done = engine.generate(reqs)
+    n_tokens = sum(len(r.out) for r in done)
+    for i, r in enumerate(done[:4]):
+        print(f"req{i}: prompt={r.prompt} -> {r.out}")
+    j = monitor.cumulative_joules
+    print(f"served {len(done)} requests, {n_tokens} tokens, "
+          f"{j:.2f} J total, {j / max(n_tokens, 1):.4f} J/token")
+    monitor.close()
+
+
+if __name__ == "__main__":
+    main()

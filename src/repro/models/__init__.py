@@ -1,0 +1,4 @@
+from repro.models.model import (build_forward, init_params, loss_fn,
+                                make_serve_fns)
+
+__all__ = ["init_params", "build_forward", "loss_fn", "make_serve_fns"]

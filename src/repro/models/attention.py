@@ -1,0 +1,339 @@
+"""Attention: GQA with the assigned archs' variants, train/prefill/decode.
+
+Covers:
+  * grouped-query attention (all archs; MHA is the kv_heads==heads case),
+  * qk-norm on per-head q/k (qwen3),
+  * attention-logit soft-capping (gemma2),
+  * sliding-window masking for local layers (gemma2),
+  * RoPE / M-RoPE positions (applied here, built in layers.py),
+  * cross-attention (whisper decoder),
+  * a KV-cache decode path (one new token against a cache of seq_len).
+
+Implementations:
+  * ``dense``   — materialises (B, H, Sq, Skv) scores; right for short seqs
+                  and the smoke tests.
+  * ``chunked`` — lax.scan over query blocks; bounds the live score tensor
+                  to (B, H, chunk, Skv). This is the XLA path the dry-run
+                  lowers for 32k prefill (flash-style memory behaviour
+                  without a custom kernel).
+  * ``pallas``  — the flash-attention Pallas kernel (kernels/flash_attention),
+                  TPU-targeted, validated in interpret mode.
+
+The choice is per-call (``impl=``); models pick dense for tiny smoke
+configs and chunked for production shapes (see model.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.specs import annotate, shard
+
+NEG_INF = -2.0 ** 30  # large-negative for masking; safe in fp32 softmax
+
+
+# -- params -------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    """GQA projection weights.
+
+    q: (d, H, hd)   k,v: (d, KVH, hd)   o: (H, hd, d)
+    qk-norm adds per-head-dim scales (qwen3 style, applied on the head dim).
+    """
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": annotate(
+            layers.dense_init(k1, (d, h, hd)), "d_model", "heads", "head_dim"),
+        "wk": annotate(
+            layers.dense_init(k2, (d, kvh, hd)), "d_model", "kv_heads",
+            "head_dim"),
+        "wv": annotate(
+            layers.dense_init(k3, (d, kvh, hd)), "d_model", "kv_heads",
+            "head_dim"),
+        "wo": annotate(
+            layers.dense_init(k4, (h, hd, d), in_axis=(0, 1)),
+            "heads", "head_dim", "d_model"),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = annotate(jnp.ones((hd,), jnp.float32), "head_dim")
+        p["k_norm"] = annotate(jnp.ones((hd,), jnp.float32), "head_dim")
+    return p
+
+
+def _rms_head(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# -- qkv projection -----------------------------------------------------------
+
+def project_qkv(cfg: ModelConfig, p, x, positions,
+                kv_x: Optional[jnp.ndarray] = None,
+                rope: bool = True):
+    """Project hidden states to (q, k, v) with RoPE applied.
+
+    kv_x: source of k/v for cross-attention (defaults to x).
+    Returns q (B,Sq,H,hd), k,v (B,Skv,KVH,hd).
+    """
+    dt = x.dtype
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+    if cfg.qk_norm and "q_norm" in p:
+        q = _rms_head(q, p["q_norm"])
+        k = _rms_head(k, p["k_norm"])
+    if rope and positions is not None:
+        sections = cfg.m_rope_sections if cfg.m_rope else None
+        q = layers.apply_rope(q, positions, cfg.rope_theta, sections)
+        k = layers.apply_rope(k, positions, cfg.rope_theta, sections)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+# -- masks -------------------------------------------------------------------
+
+def make_mask(q_pos, kv_pos, causal: bool,
+              window: Optional[int] = None,
+              kv_valid: Optional[jnp.ndarray] = None):
+    """Boolean (B, Sq, Skv) mask; True = attend.
+
+    q_pos: (B, Sq) token positions of the queries.
+    kv_pos: (B, Skv) positions of the keys (cache slots for decode).
+    window: sliding-window size (attend iff 0 <= q-k < window).
+    kv_valid: (B, Skv) validity of cache slots (decode ring buffers).
+    """
+    diff = q_pos[:, :, None] - kv_pos[:, None, :]     # (B, Sq, Skv)
+    mask = jnp.ones(diff.shape, bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        mask &= diff < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    return mask
+
+
+# -- core attention -----------------------------------------------------------
+
+def _gqa_scores(q, k, softcap):
+    """(B,Sq,KVH,G,hd) x (B,Skv,KVH,hd) -> fp32 (B,KVH,G,Sq,Skv)."""
+    s = jnp.einsum("bqhgk,bshk->bhgqs", q, k).astype(jnp.float32)
+    return layers.softcap(s, softcap)
+
+
+def _attend_block(cfg: ModelConfig, q, k, v, mask,
+                  scale: Optional[float] = None):
+    """Dense attention for one (whole or chunked) query block.
+
+    q: (B,Sq,H,hd) k,v: (B,Skv,KVH,hd) mask: (B,Sq,Skv) -> (B,Sq,H,hd)
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
+    qg = q.reshape(b, sq, kvh, g, hd) * scale
+    s = _gqa_scores(qg, k, cfg.attn_softcap)               # (B,KVH,G,Sq,Skv)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, v.shape[-1])   # v head dim (MLA: != qk dim)
+
+
+def attention(cfg: ModelConfig, q, k, v, *,
+              q_pos, kv_pos, causal: bool = True,
+              window: Optional[int] = None,
+              kv_valid: Optional[jnp.ndarray] = None,
+              impl: str = "dense", chunk: int = 1024,
+              scale: Optional[float] = None, unroll: bool = False,
+              causal_kv_trim: bool = False):
+    """Multi-head attention over explicit q/k/v.
+
+    impl="dense"   full score tensor.
+    impl="chunked" query chunks of size ``chunk``: the live score tensor
+                   is (B, H, chunk, Skv) and the chunk body is
+                   jax.checkpoint'ed so backward recomputes scores instead
+                   of saving a per-chunk stack (flash-style memory).
+    impl="pallas"  flash-attention kernel (full-causal self-attn only).
+
+    unroll=True replaces the chunk lax.scan with a Python loop (roofline
+    probes — scan bodies are cost-counted once by XLA).
+    causal_kv_trim=True (unrolled causal self-attention only) slices K/V
+    per query chunk to the causally-visible prefix, skipping the fully
+    masked upper-triangle blocks (~2x score FLOPs at long S).
+    """
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.attn_softcap,
+            scale=scale if scale is not None else 1.0 / math.sqrt(cfg.head_dim))
+    if impl == "dense" or q.shape[1] <= chunk:
+        mask = make_mask(q_pos, kv_pos, causal, window, kv_valid)
+        return _attend_block(cfg, q, k, v, mask, scale)
+    if impl != "chunked":
+        raise ValueError(f"unknown attention impl {impl!r}")
+
+    b, sq, h, hd = q.shape
+    n_chunks, rem = divmod(sq, chunk)
+    if rem:
+        raise ValueError(f"seq {sq} not divisible by chunk {chunk}")
+
+    def chunk_body(qc, qpc, kc, vc, kv_pos_c, kv_valid_c):
+        mask = make_mask(qpc, kv_pos_c, causal, window, kv_valid_c)
+        return _attend_block(cfg, qc, kc, vc, mask, scale)
+
+    chunk_body = jax.checkpoint(chunk_body)
+
+    if unroll:
+        outs = []
+        for i in range(n_chunks):
+            sl = slice(i * chunk, (i + 1) * chunk)
+            if causal_kv_trim and causal and kv_valid is None:
+                kv_hi = (i + 1) * chunk
+                outs.append(chunk_body(
+                    q[:, sl], q_pos[:, sl], k[:, :kv_hi], v[:, :kv_hi],
+                    kv_pos[:, :kv_hi], None))
+            else:
+                outs.append(chunk_body(q[:, sl], q_pos[:, sl], k, v,
+                                       kv_pos, kv_valid))
+        out = jnp.concatenate(outs, axis=1)
+        return shard(out, "batch", "seq", "heads", "head_dim")
+
+    qs = q.reshape(b, n_chunks, chunk, h, hd).swapaxes(0, 1)
+    qp = q_pos.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def step(_, qc_qpc):
+        qc, qpc = qc_qpc
+        return None, chunk_body(qc, qpc, k, v, kv_pos, kv_valid)
+
+    _, out = jax.lax.scan(step, None, (qs, qp))
+    out = out.swapaxes(0, 1).reshape(b, sq, h, v.shape[-1])
+    return shard(out, "batch", "seq", "heads", "head_dim")
+
+
+def output_proj(p, o):
+    dt = o.dtype
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    return shard(out, "batch", "seq", "d_model")
+
+
+# -- full self-attention block (no cache) ---------------------------------------
+
+def self_attention(cfg: ModelConfig, p, x, positions, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   impl: str = "dense", chunk: int = 1024):
+    q, k, v = project_qkv(cfg, p, x, positions)
+    pos1d = positions[..., 0] if positions.ndim == 3 else positions
+    o = attention(cfg, q, k, v, q_pos=pos1d, kv_pos=pos1d, causal=causal,
+                  window=window, impl=impl, chunk=chunk)
+    return output_proj(p, o)
+
+
+def cross_attention(cfg: ModelConfig, p, x, enc_out,
+                    enc_valid: Optional[jnp.ndarray] = None,
+                    impl: str = "dense", chunk: int = 1024):
+    """Whisper-style cross attention (no RoPE, no causality)."""
+    b, sq = x.shape[:2]
+    skv = enc_out.shape[1]
+    q, k, v = project_qkv(cfg, p, x, None, kv_x=enc_out, rope=False)
+    q_pos = jnp.zeros((b, sq), jnp.int32)
+    kv_pos = jnp.zeros((b, skv), jnp.int32)
+    o = attention(cfg, q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=False,
+                  kv_valid=enc_valid, impl=impl, chunk=chunk)
+    return output_proj(p, o)
+
+
+# -- KV cache -------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: Optional[int] = None,
+                  dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Cache for one attention layer.
+
+    Full layers: (B, max_len, KVH, hd) k/v. Sliding-window layers use a
+    ring buffer of size ``window`` instead (gemma2 local layers) — decode
+    memory stays O(window).
+    """
+    size = min(max_len, window) if window else max_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    zeros = jnp.zeros(shape, dtype)
+    return {"k": zeros, "v": zeros}
+
+
+def cache_spec_axes() -> Tuple[Optional[str], ...]:
+    return ("batch", "kv_seq", "kv_heads", "head_dim")
+
+
+def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
+                          window: Optional[int] = None):
+    """One-token decode against a cache.
+
+    x: (B, 1, d). cache: {"k","v"} (B, C, KVH, hd). cur_len: scalar count
+    of tokens already in the cache (== position of the new token).
+    Returns (out (B,1,d), new_cache).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cur_len, jnp.int32)
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
+
+    cache_size = cache["k"].shape[1]
+    slot = (cur_len % cache_size) if window else cur_len
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    k = shard(k, *cache_spec_axes())
+    v = shard(v, *cache_spec_axes())
+
+    slots = jnp.arange(cache_size, dtype=jnp.int32)
+    if window:
+        # ring buffer: slot s holds the largest position p <= cur_len with
+        # p % size == s, i.e. p = cur_len - ((cur_len - s) mod size);
+        # negative p means the slot has never been written.
+        kv_pos = cur_len - jnp.mod(cur_len - slots, cache_size)
+        kv_valid = kv_pos >= 0
+        kv_pos = jnp.maximum(kv_pos, 0)
+    else:
+        kv_pos = slots
+        kv_valid = slots <= cur_len
+    kv_pos = jnp.broadcast_to(kv_pos[None], (b, cache_size))
+    kv_valid = jnp.broadcast_to(kv_valid[None], (b, cache_size))
+
+    q_pos = jnp.full((b, 1), cur_len, jnp.int32)
+    o = attention(cfg, q, k.astype(q.dtype), v.astype(q.dtype),
+                  q_pos=q_pos, kv_pos=kv_pos, causal=True, window=window,
+                  kv_valid=kv_valid, impl="dense")
+    return output_proj(p, o), {"k": k, "v": v}
+
+
+def prefill_kv_cache(cfg: ModelConfig, k, v, max_len: int,
+                     window: Optional[int] = None, dtype=jnp.bfloat16):
+    """Build a cache from prefill-computed k/v (B, S, KVH, hd)."""
+    b, s = k.shape[:2]
+    cache = init_kv_cache(cfg, b, max_len, window=window, dtype=dtype)
+    size = cache["k"].shape[1]
+    if window and s > size:
+        # keep the last `size` positions, ring-aligned so that position p
+        # lives at slot p % size.
+        start = s - size
+        k_tail, v_tail = k[:, start:], v[:, start:]
+        shift = start % size
+        k_tail = jnp.roll(k_tail, shift, axis=1)
+        v_tail = jnp.roll(v_tail, shift, axis=1)
+        return {"k": k_tail.astype(dtype), "v": v_tail.astype(dtype)}
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(dtype), (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(dtype), (0, 0, 0, 0))
+    return {"k": ck, "v": cv}

@@ -1,0 +1,270 @@
+"""Per-layer block assembly for every assigned architecture.
+
+A "block" is one layer of the stack. Its kind is a function of the layer
+index and the config:
+
+  "A"  attention + FFN (dense MLP or MoE)   — all transformer archs
+  "M"  mamba + FFN (dense MLP or MoE)       — jamba's SSM layers
+  "m"  mLSTM block (self-contained)         — xlstm
+  "s"  sLSTM block (self-contained)         — xlstm
+  "E"  bidirectional encoder block          — whisper encoder
+  "X"  decoder block with cross-attention   — whisper decoder
+
+Blocks expose four entry points with a uniform signature so model.py can
+scan over homogeneous stacks: init, forward (full sequence), decode (one
+token against a cache), and cache init.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, mamba, mla, moe, xlstm
+from repro.sharding.specs import annotate
+
+
+# -- layer-kind layout ----------------------------------------------------------
+
+def layer_kind(cfg: ModelConfig, idx: int, encoder: bool = False) -> str:
+    if encoder:
+        return "E"
+    if cfg.is_encoder_decoder:
+        return "X"
+    if cfg.family == "ssm":
+        pat = cfg.xlstm.pattern
+        return pat[idx % len(pat)]
+    if cfg.family == "hybrid":
+        return cfg.hybrid_pattern[idx % len(cfg.hybrid_pattern)]
+    return "A"
+
+
+def layer_window(cfg: ModelConfig, idx: int) -> Optional[int]:
+    """Sliding-window size for this layer (gemma2 local/global pattern)."""
+    if cfg.layer_pattern and cfg.sliding_window:
+        kind = cfg.layer_pattern[idx % len(cfg.layer_pattern)]
+        return cfg.sliding_window if kind == "L" else None
+    return cfg.sliding_window
+
+
+def attn_impl(cfg: ModelConfig, seq_len: int) -> str:
+    if cfg.attn_impl != "auto":
+        return cfg.attn_impl
+    if seq_len <= cfg.attn_chunk or seq_len % cfg.attn_chunk:
+        return "dense"   # short or non-chunk-aligned (whisper's 1500)
+    return "chunked"
+
+
+# -- init -----------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, idx: int, encoder: bool = False):
+    kind = layer_kind(cfg, idx, encoder)
+    ks = jax.random.split(key, 8)
+    if kind in ("m", "s"):
+        p = {"norm": layers.init_norm(ks[0], cfg)}
+        p["cell"] = (xlstm.init_mlstm(ks[1], cfg) if kind == "m"
+                     else xlstm.init_slstm(ks[1], cfg))
+        return p
+
+    p = {"norm_1": layers.init_norm(ks[0], cfg),
+         "norm_2": layers.init_norm(ks[1], cfg)}
+    if cfg.post_block_norm:
+        p["post_norm_1"] = layers.init_norm(ks[6], cfg)
+        p["post_norm_2"] = layers.init_norm(ks[7], cfg)
+
+    if kind == "M":
+        p["mixer"] = mamba.init_mamba(ks[2], cfg)
+    elif cfg.attention == "mla":
+        p["mixer"] = mla.init_mla(ks[2], cfg)
+    else:
+        p["mixer"] = attn.init_attention(ks[2], cfg)
+
+    if kind == "X":
+        p["norm_x"] = layers.init_norm(ks[4], cfg)
+        p["cross"] = attn.init_attention(ks[5], cfg, cross=True)
+
+    if kind != "E" and moe.is_moe_layer(cfg, idx):
+        p["ffn"] = moe.init_moe(ks[3], cfg)
+    else:
+        ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.dense_ff_dim and kind != "E":
+            ff = cfg.moe.dense_ff_dim
+        p["ffn"] = layers.init_mlp(ks[3], cfg, ff=ff)
+    return p
+
+
+# -- forward (full sequence) ------------------------------------------------------
+
+def block_forward(cfg: ModelConfig, p, x, positions, idx: int, *,
+                  enc_out=None, encoder: bool = False,
+                  collect_kv: bool = False):
+    """One block over the full sequence.
+
+    Returns (x, aux_loss, kv) — kv is the mixer state the serve path needs
+    to build a cache from prefill (None unless collect_kv).
+    """
+    kind = layer_kind(cfg, idx, encoder)
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+
+    if kind in ("m", "s"):
+        h = layers.apply_norm(cfg, p["norm"], x)
+        fwd = xlstm.mlstm_forward if kind == "m" else xlstm.slstm_forward
+        if collect_kv:
+            out, kv = fwd(cfg, p["cell"], h, return_state=True)
+            return x + out, aux, kv
+        return x + fwd(cfg, p["cell"], h), aux, None
+
+    h = layers.apply_norm(cfg, p["norm_1"], x)
+    impl = attn_impl(cfg, h.shape[1])
+    if kind == "M":
+        if collect_kv:
+            out, kv = mamba.mamba_forward(cfg, p["mixer"], h,
+                                          return_state=True)
+        else:
+            out = mamba.mamba_forward(cfg, p["mixer"], h)
+    elif cfg.attention == "mla":
+        out, kv_pair = mla.mla_self_attention(cfg, p["mixer"], h, positions,
+                                              impl=impl, chunk=cfg.attn_chunk)
+        kv = kv_pair if collect_kv else None
+    else:
+        window = layer_window(cfg, idx)
+        causal = kind != "E"
+        q, k, v = attn.project_qkv(cfg, p["mixer"], h, positions,
+                                   rope=cfg.use_rope)
+        pos1d = positions[..., 0] if positions.ndim == 3 else positions
+        o = attn.attention(cfg, q, k, v, q_pos=pos1d, kv_pos=pos1d,
+                           causal=causal, window=window, impl=impl,
+                           chunk=cfg.attn_chunk,
+                           unroll=cfg.unroll_time_chunks,
+                           causal_kv_trim=cfg.causal_kv_trim)
+        out = attn.output_proj(p["mixer"], o)
+        kv = (k, v) if collect_kv else None
+    if cfg.post_block_norm:
+        out = layers.apply_norm(cfg, p["post_norm_1"], out)
+    x = x + out
+
+    if kind == "X":
+        h = layers.apply_norm(cfg, p["norm_x"], x)
+        x = x + attn.cross_attention(cfg, p["cross"], h, enc_out)
+
+    h = layers.apply_norm(cfg, p["norm_2"], x)
+    if "router" in p["ffn"]:
+        out, aux = moe.apply_moe(cfg, p["ffn"], h)
+    else:
+        out = layers.apply_mlp(cfg, p["ffn"], h)
+    if cfg.post_block_norm:
+        out = layers.apply_norm(cfg, p["post_norm_2"], out)
+    return x + out, aux, kv
+
+
+# -- caches ------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, idx: int, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    kind = layer_kind(cfg, idx)
+    if kind == "m":
+        return xlstm.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "s":
+        return xlstm.init_slstm_cache(cfg, batch, dtype)
+    if kind == "M":
+        return mamba.init_mamba_cache(cfg, batch, dtype)
+    if cfg.attention == "mla":
+        return mla.init_mla_cache(cfg, batch, max_len, dtype)
+    window = layer_window(cfg, idx)
+    cache = attn.init_kv_cache(cfg, batch, max_len, window=window,
+                               dtype=dtype)
+    if kind == "X":
+        # cross-attention k/v are filled once from the encoder output
+        cache["xk"] = jnp.zeros(
+            (batch, cfg.enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        cache["xv"] = cache["xk"]
+    return cache
+
+
+def cache_axes(cfg: ModelConfig, idx: int):
+    kind = layer_kind(cfg, idx)
+    if kind == "m":
+        return xlstm.mlstm_cache_axes()
+    if kind == "s":
+        return xlstm.slstm_cache_axes()
+    if kind == "M":
+        return mamba.mamba_cache_axes()
+    if cfg.attention == "mla":
+        return mla.mla_cache_axes()
+    ax = {"k": attn.cache_spec_axes(), "v": attn.cache_spec_axes()}
+    if kind == "X":
+        ax["xk"] = attn.cache_spec_axes()
+        ax["xv"] = attn.cache_spec_axes()
+    return ax
+
+
+# -- decode (one token) ---------------------------------------------------------------
+
+def block_decode(cfg: ModelConfig, p, x, cache, cur_len, idx: int):
+    """One-token decode through one block. x: (B,1,d)."""
+    kind = layer_kind(cfg, idx)
+    if kind in ("m", "s"):
+        h = layers.apply_norm(cfg, p["norm"], x)
+        dec = xlstm.mlstm_decode if kind == "m" else xlstm.slstm_decode
+        out, cache = dec(cfg, p["cell"], h, cache)
+        return x + out, cache
+
+    h = layers.apply_norm(cfg, p["norm_1"], x)
+    if kind == "M":
+        out, cache = mamba.mamba_decode(cfg, p["mixer"], h, cache)
+    elif cfg.attention == "mla":
+        out, cache = mla.mla_decode_attention(cfg, p["mixer"], h, cache,
+                                              cur_len)
+    else:
+        window = layer_window(cfg, idx)
+        kv_cache = {"k": cache["k"], "v": cache["v"]}
+        out, kv_cache = attn.decode_self_attention(
+            cfg, p["mixer"], h, kv_cache, cur_len, window=window)
+        cache = dict(cache, **kv_cache)
+    if cfg.post_block_norm:
+        out = layers.apply_norm(cfg, p["post_norm_1"], out)
+    x = x + out
+
+    if kind == "X":
+        h = layers.apply_norm(cfg, p["norm_x"], x)
+        b = h.shape[0]
+        q, _, _ = attn.project_qkv(cfg, p["cross"], h, None, rope=False)
+        skv = cache["xk"].shape[1]
+        o = attn.attention(
+            cfg, q, cache["xk"].astype(q.dtype), cache["xv"].astype(q.dtype),
+            q_pos=jnp.zeros((b, 1), jnp.int32),
+            kv_pos=jnp.zeros((b, skv), jnp.int32), causal=False, impl="dense")
+        x = x + attn.output_proj(p["cross"], o)
+
+    h = layers.apply_norm(cfg, p["norm_2"], x)
+    if "router" in p["ffn"]:
+        out, _ = moe.apply_moe(cfg, p["ffn"], h)
+    else:
+        out = layers.apply_mlp(cfg, p["ffn"], h)
+    if cfg.post_block_norm:
+        out = layers.apply_norm(cfg, p["post_norm_2"], out)
+    return x + out, cache
+
+
+# -- prefill cache construction --------------------------------------------------------
+
+def prefill_block_cache(cfg: ModelConfig, idx: int, kv, max_len: int,
+                        x_enc_kv=None, dtype=jnp.bfloat16):
+    """Build this block's decode cache from prefill-collected state."""
+    kind = layer_kind(cfg, idx)
+    if kind in ("m", "s", "M"):
+        raise ValueError("state blocks build caches inside prefill")
+    if cfg.attention == "mla":
+        latent, k_rope = kv
+        return mla.prefill_mla_cache(cfg, latent, k_rope, max_len, dtype)
+    k, v = kv
+    window = layer_window(cfg, idx)
+    cache = attn.prefill_kv_cache(cfg, k, v, max_len, window=window,
+                                  dtype=dtype)
+    if kind == "X" and x_enc_kv is not None:
+        cache["xk"], cache["xv"] = (z.astype(dtype) for z in x_enc_kv)
+    return cache

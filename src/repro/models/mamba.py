@@ -1,0 +1,206 @@
+"""Mamba-1 selective-SSM block (Jamba's "M" layers).
+
+Train/prefill uses a *time-chunked* selective scan: a lax.scan over chunks
+of ``cfg.ssm_chunk`` tokens carrying the (B, d_in, N) SSM state, with an
+associative scan inside each chunk.  The (B, Q, d_in, N) discretized-state
+tensor is the only large intermediate and is bounded by the chunk size —
+this is the TPU/VMEM-minded adaptation of the CUDA selective-scan kernel
+(DESIGN.md §2): blocking over time instead of a fused warp kernel.
+
+``unroll_time_chunks=True`` (used by the roofline probe lowerings) replaces
+the outer lax.scan with a Python loop so every chunk's FLOPs appear in the
+HLO — scan bodies are otherwise counted once by XLA cost analysis.
+
+Decode is the O(1) recurrence with a {conv window, ssm state} cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.specs import annotate, shard
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.mamba.expand * cfg.d_model
+
+
+# -- params -------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig):
+    mc = cfg.mamba
+    d, din, n = cfg.d_model, d_inner(cfg), mc.d_state
+    ks = jax.random.split(key, 6)
+    di = layers.dense_init
+    # S4-style A init: -[1..N] per channel, stored as log
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :],
+                         (din, n))
+    return {
+        "in_proj": annotate(di(ks[0], (d, 2 * din)), "d_model", "mamba_inner"),
+        "conv_w": annotate(di(ks[1], (mc.d_conv, din), in_axis=0),
+                           None, "mamba_inner"),
+        "conv_b": annotate(jnp.zeros((din,), jnp.float32), "mamba_inner"),
+        "x_proj": annotate(di(ks[2], (din, mc.dt_rank + 2 * n)),
+                           "mamba_inner", None),
+        "dt_w": annotate(di(ks[3], (mc.dt_rank, din)), None, "mamba_inner"),
+        "dt_b": annotate(jnp.full((din,), -4.6, jnp.float32), "mamba_inner"),
+        "a_log": annotate(jnp.log(a), "mamba_inner", None),
+        "d_skip": annotate(jnp.ones((din,), jnp.float32), "mamba_inner"),
+        "out_proj": annotate(di(ks[4], (din, d)), "mamba_inner", "d_model"),
+        # jamba stabilizing norms on dt/B/C
+        "dt_norm": annotate(jnp.ones((mc.dt_rank,), jnp.float32), None),
+        "bc_norm": annotate(jnp.ones((2 * n,), jnp.float32), None),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# -- shared pre-scan compute -----------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, p, u):
+    dt_r = u.dtype
+    xz = u @ p["in_proj"].astype(dt_r)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return shard(x, "batch", "seq", "mamba_inner"), z
+
+
+def _ssm_inputs(cfg: ModelConfig, p, xc):
+    """Per-token SSM tensors from conv output xc (B, S, din) (fp32 math).
+
+    Returns dA (B,S,din,N) decay, dBx (B,S,din,N) input, c (B,S,N).
+    """
+    mc = cfg.mamba
+    dt = xc.dtype
+    proj = xc @ p["x_proj"].astype(dt)
+    dtr, bc = proj[..., :mc.dt_rank], proj[..., mc.dt_rank:]
+    dtr = _rms(dtr, p["dt_norm"])
+    bc = _rms(bc, p["bc_norm"])
+    b, c = jnp.split(bc, 2, axis=-1)                       # (B,S,N) each
+    delta = jax.nn.softplus(dtr @ p["dt_w"].astype(dt)
+                            + p["dt_b"].astype(dt))        # (B,S,din)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # (din,N)
+    delta32 = delta.astype(jnp.float32)
+    da = jnp.exp(delta32[..., None] * a[None, None])       # (B,S,din,N)
+    dbx = (delta32 * xc.astype(jnp.float32))[..., None] \
+        * b.astype(jnp.float32)[:, :, None, :]             # (B,S,din,N)
+    return da, dbx, c.astype(jnp.float32)
+
+
+def _chunk_scan(da, dbx, c, h0):
+    """Selective scan over one chunk. da/dbx: (B,Q,din,N), h0: (B,din,N).
+    Returns (y (B,Q,din) fp32, h_end)."""
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    h = b_cum + a_cum * h0[:, None]                        # (B,Q,din,N)
+    y = jnp.einsum("bqdn,bqn->bqd", h, c)
+    return y, h[:, -1]
+
+
+def causal_conv(cfg: ModelConfig, p, x, history=None):
+    """Depthwise causal conv1d. x: (B,S,din). history: (B,d_conv-1,din)
+    carried state for decode/chunk boundaries (zeros if None)."""
+    mc = cfg.mamba
+    k = mc.d_conv
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    w = p["conv_w"].astype(x.dtype)                        # (k, din)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    out = out + p["conv_b"].astype(x.dtype)
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+# -- train / prefill -------------------------------------------------------------
+
+def mamba_forward(cfg: ModelConfig, p, u, return_state: bool = False):
+    """Full-sequence mamba block. u: (B, S, d) -> (B, S, d)
+    (+ the decode cache when ``return_state``)."""
+    mc = cfg.mamba
+    b, s, _ = u.shape
+    dt = u.dtype
+    x, z = _split_proj(cfg, p, u)
+    xc, conv_hist = causal_conv(cfg, p, x)
+
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        q = s   # non-chunk-aligned (odd prefill lengths): single chunk
+    nc = s // q
+    din, n = x.shape[-1], mc.d_state
+    h0 = jnp.zeros((b, din, n), jnp.float32)
+
+    # chunk body is checkpointed: backward recomputes the (B, Q, din, N)
+    # discretized tensors from the chunk's conv output instead of saving a
+    # per-chunk stack of them (the selective-scan recompute trick).
+    def chunk_body(h, blk):
+        da, dbx, c = _ssm_inputs(cfg, p, blk)
+        y_i, h = _chunk_scan(da, dbx, c, h)
+        return h, y_i
+
+    chunk_body_ck = jax.checkpoint(chunk_body)
+
+    if nc == 1:
+        h, y = chunk_body_ck(h0, xc)
+    elif cfg.unroll_time_chunks:
+        ys = []
+        h = h0
+        for i in range(nc):
+            h, y_i = chunk_body_ck(h, xc[:, i * q:(i + 1) * q])
+            ys.append(y_i)
+        y = jnp.concatenate(ys, axis=1)
+    else:
+        xcs = xc.reshape(b, nc, q, din).swapaxes(0, 1)     # (nc,B,Q,din)
+        h, ys = jax.lax.scan(chunk_body_ck, h0, xcs)
+        y = ys.swapaxes(0, 1).reshape(b, s, din)
+
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(dt) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    out = shard(out, "batch", "seq", "d_model")
+    if return_state:
+        # conv history is the raw (pre-activation) input window
+        return out, {"conv": conv_hist.astype(jnp.bfloat16), "ssm": h}
+    return out
+
+
+# -- decode -----------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    mc = cfg.mamba
+    din = d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, din), dtype),
+        "ssm": jnp.zeros((batch, din, mc.d_state), jnp.float32),
+    }
+
+
+def mamba_cache_axes() -> Dict[str, Tuple]:
+    return {"conv": ("batch", None, "mamba_inner"),
+            "ssm": ("batch", "mamba_inner", None)}
+
+
+def mamba_decode(cfg: ModelConfig, p, u, cache):
+    """One-token step. u: (B,1,d). Returns (out (B,1,d), new_cache)."""
+    dt = u.dtype
+    x, z = _split_proj(cfg, p, u)
+    xc, conv_hist = causal_conv(cfg, p, x, cache["conv"].astype(dt))
+    da, dbx, c = _ssm_inputs(cfg, p, xc)                   # (B,1,din,N)
+    h = da[:, 0] * cache["ssm"] + dbx[:, 0]                # (B,din,N)
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0])[:, None]      # (B,1,din)
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(dt) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    out = shard(out, "batch", "seq", "d_model")
+    return out, {"conv": conv_hist.astype(cache["conv"].dtype), "ssm": h}

@@ -1,0 +1,182 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Train/prefill path materializes per-head k/v from the compressed latent;
+the decode path uses the *absorbed-weights* formulation so the KV cache
+holds only (kv_lora_rank + qk_rope_head_dim) floats per token:
+
+  q_lat  = q_nope @ W_UK            (query moved into latent space)
+  score  = q_lat . c_kv + q_rope . k_rope
+  ctx    = softmax(score) @ c_kv    (context in latent space)
+  out    = (ctx @ W_UV) @ W_O
+
+This is DeepSeek's decode trick: the cache is 576 floats/token instead of
+H * (192 + 128) = 40960, which is what makes 32k/128-batch decode feasible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.attention import attention
+from repro.sharding.specs import annotate, shard
+
+
+def _rms(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# -- params -------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    di = layers.dense_init
+    return {
+        "wq_a": annotate(di(ks[0], (d, m.q_lora_rank)), "d_model", "q_rank"),
+        "q_norm": annotate(jnp.ones((m.q_lora_rank,), jnp.float32), "q_rank"),
+        "wq_b": annotate(di(ks[1], (m.q_lora_rank, h, qk_hd)),
+                         "q_rank", "heads", "head_dim"),
+        # kv down-projection also produces the shared rope key
+        "wkv_a": annotate(di(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim)),
+                          "d_model", "kv_rank"),
+        "kv_norm": annotate(jnp.ones((m.kv_lora_rank,), jnp.float32),
+                            "kv_rank"),
+        "wk_b": annotate(di(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim)),
+                         "kv_rank", "heads", "head_dim"),
+        "wv_b": annotate(di(ks[4], (m.kv_lora_rank, h, m.v_head_dim)),
+                         "kv_rank", "heads", "head_dim"),
+        "wo": annotate(di(ks[5], (h, m.v_head_dim, d), in_axis=(0, 1)),
+                       "heads", "head_dim", "d_model"),
+    }
+
+
+def _project_q(cfg: ModelConfig, p, x, positions):
+    """(B,S,d) -> q_nope (B,S,H,nope), q_rope (B,S,H,rope) (rope applied)."""
+    m = cfg.mla
+    dt = x.dtype
+    ql = _rms(x @ p["wq_a"].astype(dt), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"].astype(dt))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(cfg: ModelConfig, p, x, positions):
+    """(B,S,d) -> normed latent (B,S,r), roped shared key (B,S,rope)."""
+    m = cfg.mla
+    dt = x.dtype
+    kv = x @ p["wkv_a"].astype(dt)
+    latent = _rms(kv[..., :m.kv_lora_rank], p["kv_norm"])
+    k_rope = kv[..., m.kv_lora_rank:]
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions,
+                               cfg.rope_theta)[:, :, 0, :]
+    return latent, k_rope
+
+
+# -- train / prefill -----------------------------------------------------------
+
+def mla_self_attention(cfg: ModelConfig, p, x, positions, *,
+                       impl: str = "dense", chunk: int = 1024):
+    """Full-sequence causal MLA. Returns (out, (latent, k_rope)) so the
+    serve path can build the latent cache from prefill."""
+    m = cfg.mla
+    dt = x.dtype
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    latent, k_rope = _project_kv_latent(cfg, p, x, positions)
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", latent, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", latent, p["wv_b"].astype(dt))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], m.qk_rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "kv_seq", "heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "heads", "head_dim")
+
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    o = attention(cfg, q, k, v, q_pos=positions, kv_pos=positions,
+                  causal=True, impl=impl, chunk=chunk,
+                  scale=1.0 / math.sqrt(qk_hd),
+                  unroll=cfg.unroll_time_chunks,
+                  causal_kv_trim=cfg.causal_kv_trim)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    return shard(out, "batch", "seq", "d_model"), (latent, k_rope)
+
+
+# -- decode (absorbed weights, latent cache) -------------------------------------
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    m = cfg.mla
+    return {
+        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_cache_axes() -> Dict[str, Tuple]:
+    return {"latent": ("batch", "kv_seq", "kv_rank"),
+            "k_rope": ("batch", "kv_seq", None)}
+
+
+def prefill_mla_cache(cfg: ModelConfig, latent, k_rope, max_len: int,
+                      dtype=jnp.bfloat16):
+    cache = init_mla_cache(cfg, latent.shape[0], max_len, dtype)
+    cache["latent"] = jax.lax.dynamic_update_slice(
+        cache["latent"], latent.astype(dtype), (0, 0, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(dtype), (0, 0, 0))
+    return cache
+
+
+def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len):
+    """One-token absorbed-MLA decode. x: (B,1,d)."""
+    m = cfg.mla
+    dt = x.dtype
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cur_len, jnp.int32)
+
+    q_nope, q_rope = _project_q(cfg, p, x, positions)          # (B,1,H,*)
+    latent_new, k_rope_new = _project_kv_latent(cfg, p, x, positions)
+
+    latent = jax.lax.dynamic_update_slice(
+        cache["latent"], latent_new.astype(cache["latent"].dtype),
+        (0, cur_len, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, cur_len, 0))
+    latent = shard(latent, "batch", "kv_seq", "kv_rank")
+    k_rope = shard(k_rope, "batch", "kv_seq", None)
+
+    # absorb W_UK into the query: (B,1,H,nope) @ (r,H,nope) -> (B,1,H,r)
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
+
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = 1.0 / math.sqrt(qk_hd)
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, latent.astype(dt))
+    s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope.astype(dt))
+    scores = (s_lat + s_rope).astype(jnp.float32) * scale
+
+    cache_len = latent.shape[1]
+    valid = jnp.arange(cache_len)[None, None, None, :] <= cur_len
+    scores = jnp.where(valid, scores, -2.0 ** 30)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs.astype(dt), latent.astype(dt))
+    o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
+    out = shard(out, "batch", "seq", "d_model")
+    return out, {"latent": latent, "k_rope": k_rope}

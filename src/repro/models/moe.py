@@ -1,0 +1,203 @@
+"""Mixture-of-Experts layer: sort-based dispatch, static capacity, EP-sharded.
+
+Used by kimi-k2 (384e top-8 + 1 shared), deepseek-v3 (256e top-8 + 1 shared,
+first 3 layers dense) and jamba (16e top-2, MoE every other layer).
+
+Dispatch algorithm (TPU-native adaptation of sort-based/MegaBlocks-style
+dispatch; DESIGN.md §6):
+
+  1. tokens are grouped along the batch axis into G groups that align with
+     the data shards, so routing/sorting is *local* to a shard;
+  2. per group: router top-k -> (token, expert) assignments, sorted by
+     expert id; rank-within-expert via searchsorted; assignments whose
+     rank exceeds the static capacity C are dropped (token keeps shared-
+     expert + residual path only);
+  3. an inverse index ``token_for_slot (E*C,)`` gathers tokens into the
+     expert buffer (G, E, C, d) — the only O(E*C*d) tensor; there is no
+     (T*k, d) intermediate;
+  4. expert FFNs run as one einsum with experts sharded on the "model"
+     mesh axis (EP);
+  5. combine is a scatter-add back to token layout weighted by the gate —
+     under GSPMD this lowers to partial scatters + an all-reduce over the
+     expert axis, the standard GShard combine collective.
+
+Dispatch FLOPs are therefore ~ active FLOPs x capacity_factor, never
+num_experts x dense FLOPs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import layers
+from repro.sharding.specs import annotate, shard
+
+
+# -- params -------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig):
+    """Router + expert bank (+ optional shared experts as one fused MLP)."""
+    m = cfg.moe
+    d, e, ff = cfg.d_model, m.num_experts, m.ff_dim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": annotate(layers.dense_init(k1, (d, e)), "d_model", "experts"),
+        "w_up": annotate(_expert_init(k2, (e, d, ff)), "experts", "d_model",
+                         "ffn"),
+        "w_gate": annotate(_expert_init(k3, (e, d, ff)), "experts", "d_model",
+                           "ffn"),
+        "w_down": annotate(_expert_init(k4, (e, ff, d), in_axis=1), "experts",
+                           "ffn", "d_model"),
+    }
+    if m.num_shared_experts:
+        p["shared"] = layers.init_mlp(k5, cfg, d=d,
+                                      ff=m.num_shared_experts * ff)
+    return p
+
+
+def _expert_init(key, shape, in_axis: int = 1):
+    std = 1.0 / math.sqrt(shape[in_axis])
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                       jnp.float32) * std
+
+
+# -- static sizing ------------------------------------------------------------
+
+def moe_groups(cfg: ModelConfig, batch: int) -> int:
+    """Number of routing groups: the largest power-of-two divisor of the
+    batch that does not exceed the data-shard count (32 on the production
+    mesh). Groups align with data shards so sorting stays shard-local."""
+    g = math.gcd(batch, 32)
+    return max(1, g)
+
+
+def capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    c = math.ceil(tokens_per_group * m.top_k * m.capacity_factor
+                  / m.num_experts)
+    return max(1, min(c, tokens_per_group * m.top_k))
+
+
+# -- routing -------------------------------------------------------------------
+
+def route(cfg: ModelConfig, p, xg: jnp.ndarray
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Router probabilities and top-k choice.
+
+    xg: (G, T, d) -> gates (G, T, k) fp32, expert ids (G, T, k) int32,
+    probs (G, T, E) fp32 (for the aux loss).
+    """
+    m = cfg.moe
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    # deepseek/kimi renormalize the selected gate weights to sum to one
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return gates, top_i.astype(jnp.int32), probs
+
+
+def aux_loss(probs: jnp.ndarray, top_i: jnp.ndarray, num_experts: int
+             ) -> jnp.ndarray:
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    e = num_experts
+    counts = jax.nn.one_hot(top_i, e, dtype=jnp.float32).sum((1, 2))  # (G,E)
+    f = counts / jnp.maximum(counts.sum(-1, keepdims=True), 1.0)
+    pbar = probs.mean(1)                                              # (G,E)
+    return (e * (f * pbar).sum(-1)).mean()
+
+
+# -- dispatch indices (per group, vmapped) --------------------------------------
+
+def _dispatch_indices(top_i: jnp.ndarray, cap: int, num_experts: int):
+    """Sort-based dispatch plan for one group.
+
+    top_i: (T, k) expert ids. Returns
+      token_for_slot: (E*C,) token index feeding each expert slot
+                      (sentinel T when the slot is empty),
+      slot_for_tk:    (T, k) slot index of each assignment
+                      (sentinel E*C when dropped at capacity).
+    """
+    t, k = top_i.shape
+    flat_e = top_i.reshape(-1)                       # (T*k,)
+    flat_t = jnp.arange(t * k, dtype=jnp.int32) // k  # token of assignment
+    order = jnp.argsort(flat_e, stable=True)
+    sid = jnp.take(flat_e, order)
+    stok = jnp.take(flat_t, order)
+    first = jnp.searchsorted(sid, sid, side="left")
+    rank = jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = rank < cap
+    slot = jnp.where(keep, sid * cap + rank, num_experts * cap)
+
+    token_for_slot = jnp.full((num_experts * cap + 1,), t, jnp.int32)
+    token_for_slot = token_for_slot.at[slot].set(stok, mode="drop")
+    token_for_slot = token_for_slot[:num_experts * cap]
+
+    slot_for_flat = jnp.zeros((t * k,), jnp.int32).at[order].set(slot)
+    return token_for_slot, slot_for_flat.reshape(t, k)
+
+
+# -- the layer -------------------------------------------------------------------
+
+def apply_moe(cfg: ModelConfig, p, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE FFN. x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    dt = x.dtype
+    g = moe_groups(cfg, b)
+    tg = (b // g) * s
+    cap = capacity(tg, m)
+    e = m.num_experts
+
+    xg = x.reshape(g, tg, d)
+    xg = shard(xg, "batch", None, "d_model")
+    gates, top_i, probs = route(cfg, p, xg)
+    loss = aux_loss(probs, top_i, e)
+
+    token_for_slot, slot_for_tk = jax.vmap(
+        lambda ti: _dispatch_indices(ti, cap, e))(top_i)
+
+    # dispatch: gather tokens into the expert buffer (sentinel row is zero)
+    xpad = jnp.concatenate([xg, jnp.zeros((g, 1, d), dt)], axis=1)
+    buf = jnp.take_along_axis(
+        xpad, token_for_slot[:, :, None], axis=1)        # (G, E*C, d)
+    buf = buf.reshape(g, e, cap, d)
+    buf = shard(buf, "batch", "experts", None, "d_model")
+
+    # expert FFN (EP einsum; experts sharded on "model")
+    up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    gate = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "batch", "experts", None, "ffn")
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    y = y.reshape(g, e * cap, d)
+
+    # combine: gate-weighted scatter-add back to token layout.
+    gate_for_slot = jnp.zeros((g, e * cap + 1), jnp.float32)
+    gate_for_slot = jax.vmap(lambda z, sl, gt: z.at[sl.reshape(-1)].set(
+        gt.reshape(-1), mode="drop"))(gate_for_slot, slot_for_tk, gates)
+    y = y * gate_for_slot[:, :e * cap, None].astype(dt)
+
+    out = jnp.zeros((g, tg + 1, d), dt)
+    out = jax.vmap(lambda o, tok, yy: o.at[tok].add(yy, mode="drop"))(
+        out, token_for_slot, y)
+    out = out[:, :tg].reshape(b, s, d)
+    out = shard(out, "batch", "seq", "d_model")
+
+    if "shared" in p:
+        out = out + layers.apply_mlp(cfg, p["shared"], x)
+    return out, loss.astype(jnp.float32)
+
+
+def is_moe_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    """Whether layer ``layer_idx`` uses the MoE FFN (vs a dense MLP)."""
+    m = cfg.moe
+    if m is None:
+        return False
+    if layer_idx < m.first_dense_layers:
+        return False
+    return (layer_idx % m.every_k_layers) == m.moe_layer_offset

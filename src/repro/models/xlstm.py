@@ -1,0 +1,337 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential) — xlstm-1.3b stacks them 7:1.
+
+mLSTM train/prefill uses the paper's *stabilized parallel form*: per query
+block, the full decay matrix D_ts = F_t - F_s + i_s is materialized
+(q-chunked like chunked attention, so the live tensor is (B, nh, Qc, S)),
+row-max stabilized, and contracted with V.  Decode is the O(1) recurrence
+on the (hd x hd) matrix memory.
+
+sLSTM is inherently sequential (recurrent gate input R.h_{t-1}): train uses
+lax.scan over time.  XLA cost analysis counts scan bodies once, so the
+roofline module adds the documented analytic correction for the recurrent
+matvecs (repro.roofline.costs.SLSTM_CORRECTION).
+
+State caches (decode):
+  mLSTM: C (B, nh, hd, hd), n (B, nh, hd), m (B, nh)
+  sLSTM: h, c, n, m each (B, d)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.specs import annotate, shard
+
+NEG_INF = -2.0 ** 30
+
+
+def m_inner(cfg: ModelConfig) -> int:
+    return int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+
+
+def _heads(cfg: ModelConfig):
+    return cfg.num_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    d, din, nh = cfg.d_model, m_inner(cfg), _heads(cfg)
+    xc = cfg.xlstm
+    ks = jax.random.split(key, 8)
+    di = layers.dense_init
+    return {
+        "w_up": annotate(di(ks[0], (d, 2 * din)), "d_model", "lstm_inner"),
+        "conv_w": annotate(di(ks[1], (xc.conv1d_kernel, din), in_axis=0),
+                           None, "lstm_inner"),
+        "conv_b": annotate(jnp.zeros((din,), jnp.float32), "lstm_inner"),
+        "wq": annotate(di(ks[2], (din, din)), "lstm_inner", None),
+        "wk": annotate(di(ks[3], (din, din)), "lstm_inner", None),
+        "wv": annotate(di(ks[4], (din, din)), "lstm_inner", None),
+        "w_if": annotate(di(ks[5], (din, 2 * nh)), "lstm_inner", None),
+        "b_if": annotate(jnp.concatenate(
+            [jnp.zeros((nh,)), jnp.linspace(3.0, 6.0, nh)]).astype(
+                jnp.float32), None),
+        "gn": annotate(jnp.ones((din,), jnp.float32), "lstm_inner"),
+        "w_down": annotate(di(ks[6], (din, d)), "lstm_inner", "d_model"),
+    }
+
+
+def _mlstm_pre(cfg: ModelConfig, p, x, conv_hist=None):
+    """Shared projections. x: (B,S,d) -> q,k,v (B,S,nh,hd), i/f pre-acts
+    (B,S,nh), gate z (B,S,din), new conv history (B,k-1,din)."""
+    nh = _heads(cfg)
+    dt = x.dtype
+    xz = x @ p["w_up"].astype(dt)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xm = shard(xm, "batch", "seq", "lstm_inner")
+    k_w = p["conv_w"].astype(dt)
+    kk = k_w.shape[0]
+    hist = jnp.zeros((x.shape[0], kk - 1, xm.shape[-1]), dt) \
+        if conv_hist is None else conv_hist.astype(dt)
+    xp = jnp.concatenate([hist, xm], axis=1)
+    xc = sum(xp[:, i:i + xm.shape[1]] * k_w[i] for i in range(kk))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt))
+    new_hist = xp[:, -(kk - 1):]
+
+    b, s, din = xm.shape
+    hd = din // nh
+    q = (xc @ p["wq"].astype(dt)).reshape(b, s, nh, hd)
+    k = (xc @ p["wk"].astype(dt)).reshape(b, s, nh, hd) / math.sqrt(hd)
+    v = (xm @ p["wv"].astype(dt)).reshape(b, s, nh, hd)
+    ifg = (xm @ p["w_if"].astype(dt)).astype(jnp.float32) \
+        + p["b_if"].astype(jnp.float32)
+    i_pre, f_pre = ifg[..., :nh], ifg[..., nh:]
+    return q, k, v, i_pre, f_pre, z, new_hist
+
+
+def _group_norm(h, scale, nh, eps=1e-6):
+    """Per-head group norm on (B, S, nh, hd) -> flattened (B,S,din)."""
+    h32 = h.astype(jnp.float32)
+    mu = h32.mean(-1, keepdims=True)
+    var = h32.var(-1, keepdims=True)
+    y = (h32 - mu) * jax.lax.rsqrt(var + eps)
+    b, s = h.shape[:2]
+    y = y.reshape(b, s, -1) * scale
+    return y
+
+
+def _mlstm_rows(q, k, v, fcum, kv_fcum, kv_i, mask):
+    """Stabilized parallel mLSTM for one query block.
+
+    q: (B,Qc,nh,hd), fcum: (B,Qc,nh) cumulative log-f at query positions,
+    kv_*: (B,S,nh) key-side cumulative log-f / input pre-acts,
+    mask: (B,Qc,S) True where s<=t. Returns (B,Qc,nh,hd).
+    """
+    d = fcum[:, :, None, :].transpose(0, 3, 1, 2) \
+        - kv_fcum[:, None, :, :].transpose(0, 3, 1, 2) \
+        + kv_i[:, None, :, :].transpose(0, 3, 1, 2)        # (B,nh,Qc,S)
+    d = jnp.where(mask[:, None], d, NEG_INF)
+    m = jnp.max(d, axis=-1, keepdims=True)                 # (B,nh,Qc,1)
+    dexp = jnp.exp(d - m)
+    qk = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32)
+    c = qk * dexp
+    denom = jnp.maximum(jnp.abs(c.sum(-1, keepdims=True)), jnp.exp(-m))
+    w = (c / denom).astype(v.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+
+def mlstm_forward(cfg: ModelConfig, p, x, return_state: bool = False):
+    """Full-sequence mLSTM block. x: (B,S,d) -> (B,S,d)
+    (+ the decode cache when ``return_state``)."""
+    nh = _heads(cfg)
+    dt = x.dtype
+    b, s, _ = x.shape
+    q, k, v, i_pre, f_pre, z, conv_hist = _mlstm_pre(cfg, p, x)
+    logf = jax.nn.log_sigmoid(f_pre)                       # (B,S,nh)
+    fcum = jnp.cumsum(logf, axis=1)
+
+    qc = min(cfg.attn_chunk, s)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    rows = jax.checkpoint(_mlstm_rows)   # recompute D in backward
+    if s == qc:
+        mask = pos[None, :, None] >= pos[None, None, :]
+        mask = jnp.broadcast_to(mask, (b, s, s))
+        h = rows(q, k, v, fcum, fcum, i_pre, mask)
+    else:
+        nb = s // qc
+        outs = []
+        for i in range(nb):
+            sl = slice(i * qc, (i + 1) * qc)
+            if cfg.causal_kv_trim:
+                hi = (i + 1) * qc
+                mask = pos[None, sl, None] >= pos[None, None, :hi]
+                mask = jnp.broadcast_to(mask, (b, qc, hi))
+                outs.append(rows(q[:, sl], k[:, :hi], v[:, :hi],
+                                 fcum[:, sl], fcum[:, :hi], i_pre[:, :hi],
+                                 mask))
+            else:
+                mask = pos[None, sl, None] >= pos[None, None, :]
+                mask = jnp.broadcast_to(mask, (b, qc, s))
+                outs.append(rows(q[:, sl], k, v, fcum[:, sl], fcum, i_pre,
+                                 mask))
+        h = jnp.concatenate(outs, axis=1)
+
+    y = _group_norm(h, p["gn"].astype(jnp.float32), nh).astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_down"].astype(dt)
+    out = shard(out, "batch", "seq", "d_model")
+    if not return_state:
+        return out
+    # final recurrent state from the parallel form: with stabilizer
+    # m* = max_s (F_T - F_s + i_s), the cached C/n are the exp(-m*)-scaled
+    # sums the decode recurrence expects.
+    d_end = fcum[:, -1:, :] - fcum + i_pre                 # (B,S,nh)
+    m_end = jnp.max(d_end, axis=1)                         # (B,nh)
+    w = jnp.exp(d_end - m_end[:, None, :])                 # (B,S,nh)
+    kw = k.astype(jnp.float32) * w[..., None]
+    c_end = jnp.einsum("bshk,bshv->bhkv", kw, v.astype(jnp.float32))
+    n_end = kw.sum(axis=1)                                 # (B,nh,hd)
+    cache = {"C": c_end.astype(jnp.bfloat16), "n": n_end, "m": m_end,
+             "conv": conv_hist.astype(jnp.bfloat16)}
+    return out, cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    nh = _heads(cfg)
+    din = m_inner(cfg)
+    hd = din // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), dtype),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), 0.0, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv1d_kernel - 1, din), dtype),
+    }
+
+
+def mlstm_cache_axes():
+    return {"C": ("batch", None, "lstm_inner", None),
+            "n": ("batch", None, "lstm_inner"),
+            "m": ("batch", None),
+            "conv": ("batch", None, "lstm_inner")}
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, cache):
+    """One-token mLSTM recurrence. x: (B,1,d)."""
+    nh = _heads(cfg)
+    dt = x.dtype
+    q, k, v, i_pre, f_pre, z, new_hist = _mlstm_pre(cfg, p, x,
+                                                    cache["conv"])
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]                 # (B,nh,hd)
+    i1, f1 = i_pre[:, 0], f_pre[:, 0]                      # (B,nh)
+    logf = jax.nn.log_sigmoid(f1)
+    m_new = jnp.maximum(logf + cache["m"], i1)
+    f_sc = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    i_sc = jnp.exp(i1 - m_new)[..., None]
+    kv = jnp.einsum("bhk,bhv->bhkv", k1.astype(jnp.float32),
+                    v1.astype(jnp.float32))
+    c_new = f_sc[..., None] * cache["C"].astype(jnp.float32) + i_sc[..., None] * kv
+    n_new = f_sc * cache["n"] + i_sc * k1.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", q1.astype(jnp.float32), c_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", q1.astype(jnp.float32), n_new)),
+        jnp.exp(-m_new))[..., None]
+    h = (num / den)[:, None]                               # (B,1,nh,hd)
+    y = _group_norm(h, p["gn"].astype(jnp.float32), nh).astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_down"].astype(dt)
+    out = shard(out, "batch", "seq", "d_model")
+    return out, {"C": c_new.astype(cache["C"].dtype), "n": n_new,
+                 "m": m_new, "conv": new_hist.astype(cache["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d, nh = cfg.d_model, _heads(cfg)
+    hd = d // nh
+    dff = int(cfg.xlstm.slstm_proj_factor * d)
+    ks = jax.random.split(key, 5)
+    di = layers.dense_init
+    return {
+        # input projections for i,f,z,o fused: (d, 4d)
+        "w_in": annotate(di(ks[0], (d, 4 * d)), "d_model", "lstm_inner"),
+        "b_in": annotate(jnp.concatenate(
+            [jnp.zeros((d,)), jnp.ones((d,)) * 3.0, jnp.zeros((2 * d,))]
+        ).astype(jnp.float32), "lstm_inner"),
+        # block-diagonal recurrent weights per head: (nh, hd, 4*hd)
+        "r": annotate(di(ks[1], (nh, hd, 4 * hd), in_axis=1) * 0.5,
+                      None, None, "lstm_inner"),
+        "gn": annotate(jnp.ones((d,), jnp.float32), "d_model"),
+        "ff_up": annotate(di(ks[2], (d, 2 * dff)), "d_model", "ffn"),
+        "ff_down": annotate(di(ks[3], (dff, d)), "ffn", "d_model"),
+    }
+
+
+def _slstm_cell(cfg: ModelConfig, p, gates_x, state):
+    """One step. gates_x: (B, 4d) precomputed input projections.
+    state: (h, c, n, m) each (B, d). Returns (new_state, h_out)."""
+    nh = _heads(cfg)
+    d = cfg.d_model
+    hd = d // nh
+    h, c, n, m = state
+    hh = h.reshape(-1, nh, hd)
+    rec = jnp.einsum("bhk,hkj->bhj", hh, p["r"].astype(h.dtype))
+    g = gates_x + rec.reshape(-1, 4 * d)
+    gi, gf, gz, go = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + m, gi)
+    i_sc = jnp.exp(gi - m_new)
+    f_sc = jnp.exp(jax.nn.log_sigmoid(gf) + m - m_new)
+    c_new = f_sc * c + i_sc * jnp.tanh(gz)
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new.astype(h.dtype), c_new, n_new, m_new), h_new
+
+
+def _slstm_out(cfg: ModelConfig, p, h_seq, x_dtype):
+    """GroupNorm + gated FFN on the recurrent output."""
+    nh = _heads(cfg)
+    y = _group_norm(h_seq.reshape(*h_seq.shape[:2], nh, -1),
+                    p["gn"].astype(jnp.float32), nh).astype(x_dtype)
+    up, gate = jnp.split(y @ p["ff_up"].astype(x_dtype), 2, axis=-1)
+    y = jax.nn.gelu(gate) * up
+    out = y @ p["ff_down"].astype(x_dtype)
+    return shard(out, "batch", "seq", "d_model")
+
+
+def slstm_forward(cfg: ModelConfig, p, x, return_state: bool = False):
+    """Full-sequence sLSTM (lax.scan over time). x: (B,S,d)."""
+    b, s, d = x.shape
+    dt = x.dtype
+    gates_x = (x @ p["w_in"].astype(dt)
+               + p["b_in"].astype(dt))                     # (B,S,4d)
+    state = (jnp.zeros((b, d), dt), jnp.zeros((b, d), jnp.float32),
+             jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32))
+
+    def step(st, gx):
+        st, h = _slstm_cell(cfg, p, gx, st)
+        return st, h
+
+    (h, c, n, m), hs = jax.lax.scan(step, state, gates_x.swapaxes(0, 1))
+    h_seq = hs.swapaxes(0, 1)                              # (B,S,d) fp32
+    out = _slstm_out(cfg, p, h_seq, dt)
+    if return_state:
+        return out, {"h": h.astype(jnp.bfloat16), "c": c, "n": n, "m": m}
+    return out
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), dtype),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32)}
+
+
+def slstm_cache_axes():
+    return {"h": ("batch", "d_model"), "c": ("batch", "d_model"),
+            "n": ("batch", "d_model"), "m": ("batch", "d_model")}
+
+
+def slstm_decode(cfg: ModelConfig, p, x, cache):
+    dt = x.dtype
+    gates_x = (x[:, 0] @ p["w_in"].astype(dt) + p["b_in"].astype(dt))
+    state = (cache["h"].astype(dt), cache["c"], cache["n"], cache["m"])
+    (h, c, n, m), h_out = _slstm_cell(cfg, p, gates_x, state)
+    out = _slstm_out(cfg, p, h_out[:, None], dt)
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_recurrent_flops(cfg: ModelConfig, batch: int, seq: int) -> float:
+    """Analytic FLOPs of the recurrent matvecs that XLA cost analysis
+    undercounts (scan body counted once): per step, per head, a
+    (hd x 4hd) matvec, fwd + 2x bwd."""
+    nh = _heads(cfg)
+    hd = cfg.d_model // nh
+    per_step = batch * nh * hd * 4 * hd * 2
+    return 3.0 * per_step * (seq - 1)

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (OptState, OptimizerConfig, adafactor,
+                                    adamw, clip_by_global_norm, global_norm,
+                                    make_optimizer, opt_state_logical_axes,
+                                    wsd_schedule)
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     compressed_psum_bytes)
+
+__all__ = ["OptimizerConfig", "OptState", "adamw", "adafactor",
+           "make_optimizer", "clip_by_global_norm", "wsd_schedule",
+           "compress_int8", "decompress_int8", "compressed_psum_bytes"]

@@ -1,0 +1,207 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment).
+
+Built from scratch in JAX (no optax dependency).  Adafactor matters at
+assigned-architecture scale: a 1T-param model's Adam moments (8 TB fp32)
+cannot fit 512 v5e chips, while Adafactor's factored statistics add only
+O(rows+cols) per matrix — the ≥100B configs default to it (DESIGN.md §6).
+
+The optimizer state tree mirrors the param tree, so the logical-axes tree
+used for parameter sharding shards the state identically (ZeRO-3-style
+sharding falls out of the same rules table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jnp.ndarray
+    inner: Any                       # optimizer-specific tree
+
+
+# -- schedule -----------------------------------------------------------------
+
+def wsd_schedule(cfg: OptimizerConfig, step):
+    """Warmup-stable-decay (linear warmup, cosine decay to min_lr_frac)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1.0, cfg.warmup_steps))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(1.0, cfg.decay_steps - cfg.warmup_steps),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    decay = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * decay
+
+
+# -- grad clip ------------------------------------------------------------------
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# -- AdamW ----------------------------------------------------------------------
+
+def adamw(cfg: OptimizerConfig):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner={"m": jax.tree.map(zeros, params),
+                               "v": jax.tree.map(zeros, params)})
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr = wsd_schedule(cfg, step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * g32
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+            mh, vh = m / bc1, v / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:   # decay matrices only (standard practice)
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.inner["m"], state.inner["v"],
+                           params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step=step, inner={"m": new_m, "v": new_v})
+
+    return init, update
+
+
+# -- Adafactor --------------------------------------------------------------------
+
+def _factored(p, min_dim: int) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+
+def adafactor(cfg: OptimizerConfig):
+    """Adafactor with momentum-free updates and factored second moments."""
+
+    def init(params):
+        def stat(p):
+            if _factored(p, cfg.factored_min_dim):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]),
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner=jax.tree.map(stat, params,
+                                           is_leaf=None))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr = wsd_schedule(cfg, step)
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-cfg.decay_rate)
+
+        def upd(g, s, p):
+            g32 = jnp.square(g.astype(jnp.float32)) + 1e-30
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g32.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g32.mean(-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                  1e-30))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g32
+                denom = jnp.sqrt(v)
+                new_s = {"v": v}
+            delta = g.astype(jnp.float32) / jnp.maximum(denom, 1e-30)
+            # update clipping (Adafactor's RMS-1 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = [s for s in _iter_states(state.inner, tdef)]
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_s = tdef.unflatten([o[1] for o in outs])
+        return new_p, OptState(step=step, inner=new_s)
+
+    return init, update
+
+
+def _iter_states(inner, tdef):
+    """Flatten the per-param stat dicts in param-tree order."""
+    return tdef.flatten_up_to(inner)
+
+
+# -- factory ----------------------------------------------------------------------
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw(cfg)
+    if cfg.name == "adafactor":
+        return adafactor(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def opt_state_logical_axes(params, axes_tree, opt_cfg: OptimizerConfig):
+    """Logical-axes tree for ``OptState.inner``, mirroring the params.
+
+    ``params`` may be arrays or ShapeDtypeStructs (shapes decide adafactor
+    factoring).  The ``step`` counter is always replicated (axes ()).
+    """
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    if opt_cfg.name == "adamw":
+        return {"m": axes_tree, "v": axes_tree}
+
+    def stat_axes(p, ax):
+        if _factored(p, opt_cfg.factored_min_dim):
+            return {"vr": tuple(ax[:-1]), "vc": (*ax[:-2], ax[-1])}
+        return {"v": tuple(ax)}
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_ax = tdef.flatten_up_to(axes_tree)
+    del is_axes
+    return tdef.unflatten([stat_axes(p, ax)
+                           for p, ax in zip(flat_p, flat_ax)])

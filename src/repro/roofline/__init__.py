@@ -1,0 +1,8 @@
+from repro.roofline.hlo import CollectiveStats, collective_bytes
+from repro.roofline.terms import (CellCosts, RooflineReport, combine_costs,
+                                  costs_from_compiled, model_flops,
+                                  roofline_report)
+
+__all__ = ["CollectiveStats", "collective_bytes", "CellCosts",
+           "combine_costs", "costs_from_compiled", "RooflineReport",
+           "roofline_report", "model_flops"]

@@ -1,0 +1,161 @@
+"""Collective-byte accounting from partitioned HLO text.
+
+``compiled.as_text()`` (post-SPMD) lists every collective with its result
+shape and replica groups, e.g.::
+
+  %all-reduce.2 = f32[32,512]{1,0} all-reduce(%dot.1), channel_id=1,
+      replica_groups=[2,4]<=[8], ...
+
+We sum *operand* bytes per the brief's convention:
+
+  all-reduce / all-to-all / collective-permute : operand == result
+  all-gather                                   : operand == result / group
+  reduce-scatter                               : operand == result * group
+
+Tuple-shaped results (variadic collectives, -start ops) are handled by
+summing every tensor in the tuple; ``*-done`` ops are skipped so async
+pairs are not double counted.
+
+The probe lowerings that feed the roofline are compiled with
+``scan_layers=False`` so the text contains no while loops — a flat sum
+over the module is exact (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+# one tensor shape: f32[1,2,3] (layout braces optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an instruction line: %name = <shape or tuple> <opcode>(
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        return max(1, len([t for t in first.split(",") if t.strip() != ""]))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+# ops whose result is a genuine HBM round-trip even under aggressive
+# (TPU-grade) fusion: contraction/reduction/data-movement roots.
+# Elementwise/layout ops (convert/broadcast/add/transpose/...) are treated
+# as fused into their consumers — the CPU backend leaves them top-level,
+# a TPU compile would not.
+_MAJOR_OPS = {
+    "dot", "convolution", "fusion", "custom-call", "scatter", "gather",
+    "sort", "reduce", "reduce-window", "concatenate", "pad",
+    "dynamic-slice", "dynamic-update-slice", "copy", "while", "conditional",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "rng", "rng-bit-generator", "select-and-scatter",
+    "cholesky", "triangular-solve", "fft",
+}
+
+_ENTRY_RE = re.compile(r"^ENTRY\b")
+_TOP_INSTR_RE = re.compile(
+    r"^\s{2}(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+
+
+def buffer_traffic_bytes(hlo_text: str) -> float:
+    """Idealized-fusion HBM traffic of the optimized module.
+
+    Sums result-buffer bytes (x2: write + downstream read) of the
+    top-level ENTRY instructions whose opcode is a *major* buffer producer
+    (``_MAJOR_OPS``).  Elementwise chains are assumed fused (VMEM-resident)
+    as a TPU compile would do; the CPU backend's partially-fused HLO would
+    otherwise overcount them ~10x.  This is a lower-bound traffic model;
+    XLA's unfused ``bytes accessed`` (also recorded) is the upper bound.
+    """
+    total = 0.0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if _ENTRY_RE.match(line):
+            in_entry = True
+            continue
+        if in_entry and line.startswith("}"):
+            in_entry = False
+            continue
+        if not in_entry:
+            continue
+        m = _TOP_INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _MAJOR_OPS:
+            continue
+        total += 2.0 * _shape_bytes(shape_text)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    by_kind = {k: 0.0 for k in _KINDS}
+    counts = {k: 0 for k in _KINDS}
+    for line in hlo_text.splitlines():
+        # fast reject
+        if "channel_id" not in line and "replica_groups" not in line:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        base = None
+        for k in _KINDS:
+            if op == k or op == k + "-start":
+                base = k
+                break
+        if base is None:
+            continue
+        rb = _shape_bytes(shape_text)
+        g = _group_size(line)
+        if base == "all-gather":
+            rb = rb / max(1, g)
+        elif base == "reduce-scatter":
+            rb = rb * g
+        by_kind[base] += rb
+        counts[base] += 1
+    return CollectiveStats(by_kind, counts)

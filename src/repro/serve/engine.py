@@ -1,0 +1,118 @@
+"""Serving: prefill/decode step functions + a batched request engine.
+
+``make_prefill_fn`` / ``make_decode_fn`` are the pjit-able pure steps the
+dry-run lowers (``serve_step`` for the decode_* shapes = one new token
+against a seq_len cache).
+
+``ServeEngine`` is a minimal batched server on top of them: fixed batch
+slots, synchronized decode (all slots share one position counter; slots
+are refilled between sequences — sequence-granularity continuous
+batching).  Per-slot position counters would need per-row cache scatter;
+documented as the production follow-up in DESIGN.md.
+
+PMT integration: the engine owns a PowerMonitor and reports J/token —
+the paper's energy-efficiency metric applied to serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+
+
+def make_prefill_fn(cfg: ModelConfig, max_len: int):
+    prefill, _ = model_mod.make_serve_fns(cfg)
+
+    def prefill_fn(params, batch):
+        logits, caches = prefill(params, batch, max_len)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig, greedy: bool = True,
+                   temperature: float = 1.0):
+    _, decode = model_mod.make_serve_fns(cfg)
+
+    def decode_fn(params, caches, tokens, cur_len, key=None):
+        logits, caches = decode(params, caches, tokens, cur_len)
+        if greedy or key is None:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(key, logits / temperature)
+        return nxt.astype(jnp.int32)[:, None], caches
+
+    return decode_fn
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    """Synchronized batched decoding over fixed slots."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_size: int,
+                 max_len: int, monitor=None):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.monitor = monitor
+        self._prefill = jax.jit(make_prefill_fn(cfg, max_len))
+        self._decode = jax.jit(make_decode_fn(cfg))
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve requests in waves of ``batch_size``."""
+        done: List[Request] = []
+        for i in range(0, len(requests), self.batch):
+            wave = requests[i:i + self.batch]
+            done.extend(self._run_wave(wave))
+        return done
+
+    def _run_wave(self, wave: List[Request]) -> List[Request]:
+        b = self.batch
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((b, plen), np.int32)
+        for j, r in enumerate(wave):
+            toks[j, plen - len(r.prompt):] = r.prompt   # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.is_encoder_decoder:
+            batch["frame_embeds"] = jnp.zeros(
+                (b, self.cfg.enc_len, self.cfg.d_model), jnp.bfloat16)
+
+        steps = max(r.max_new_tokens for r in wave)
+        ctx = (self.monitor.measure_step(0, tokens=b * steps)
+               if self.monitor else _null_ctx())
+        with ctx:
+            nxt, caches = self._prefill(self.params, batch)
+            nxt = nxt[:, None]
+            cur = plen
+            outs = [nxt]
+            for _ in range(steps - 1):
+                nxt, caches = self._decode(self.params, caches, nxt,
+                                           jnp.asarray(cur, jnp.int32))
+                outs.append(nxt)
+                cur += 1
+            gen = jax.block_until_ready(jnp.concatenate(outs, axis=1))
+        gen = np.asarray(gen)
+        for j, r in enumerate(wave):
+            r.out = gen[j, :r.max_new_tokens].tolist()
+        return wave
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

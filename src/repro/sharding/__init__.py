@@ -1,0 +1,6 @@
+from repro.sharding.specs import (axis_rules, current_rules, logical_to_spec,
+                                  param_sharding, shard, split_params,
+                                  DEFAULT_RULES)
+
+__all__ = ["axis_rules", "current_rules", "logical_to_spec", "shard",
+           "param_sharding", "split_params", "DEFAULT_RULES"]

@@ -1,0 +1,183 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole framework.
+
+Models annotate every parameter and key activation with *logical* axis
+names ("batch", "heads", "ffn", "experts", ...).  A rules table maps
+logical names to physical mesh axes; changing a parallelism strategy is a
+rules edit, not a model edit — which is exactly what the §Perf hillclimb
+iterates on.
+
+Outside a rules context (plain CPU tests) every helper degrades to a
+no-op, so models run unmodified on one device.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Baseline rules for the production mesh (data, model) / (pod, data, model).
+# "pod" composes with "data" for pure data parallelism across pods.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),       # token batch
+    "seq": None,                    # sequence (unsharded by default)
+    "kv_seq": None,                 # KV-cache sequence axis
+    "d_model": None,                # residual stream
+    "heads": "model",               # attention heads (TP)
+    "kv_heads": "model",            # grouped KV heads (TP)
+    "head_dim": None,
+    "ffn": "model",                 # MLP hidden (TP)
+    "vocab": "model",               # embedding/lm-head vocab (TP)
+    "experts": "model",             # MoE experts (EP)
+    "expert_cap": None,
+    "layers": None,                 # scanned layer stacks
+    "mamba_inner": "model",
+    "lstm_inner": "model",
+    "q_rank": None,                 # MLA low-rank axes
+    "kv_rank": None,
+    # long-context decode: shard the cache sequence axis instead of heads
+    # (activated by the serve path for long_500k cells via rule override).
+}
+
+_current: contextvars.ContextVar[Optional[Tuple[Dict[str, MeshAxes],
+                                                Optional[Dict[str, int]]]]] \
+    = contextvars.ContextVar("pmt_axis_rules", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Dict[str, MeshAxes]],
+               mesh_sizes: Optional[Dict[str, int]] = None):
+    """Activate a logical→mesh mapping for the enclosed region.
+
+    ``mesh_sizes`` ({mesh axis: size}) enables divisibility pruning: a
+    tensor dimension is only sharded by the longest prefix of its mapped
+    mesh axes whose product divides the dimension (GQA archs have e.g.
+    3 kv heads on a 16-way model axis — those stay replicated).
+    """
+    token = _current.set(
+        (dict(rules), dict(mesh_sizes) if mesh_sizes else None)
+        if rules is not None else None)
+    try:
+        yield
+    finally:
+        _current.reset(token)
+
+
+def current_rules() -> Optional[Dict[str, MeshAxes]]:
+    cur = _current.get()
+    return cur[0] if cur is not None else None
+
+
+def current_mesh_sizes() -> Optional[Dict[str, int]]:
+    cur = _current.get()
+    return cur[1] if cur is not None else None
+
+
+def _divisible_prefix(axes_tuple: Tuple[str, ...], dim: Optional[int],
+                      mesh_sizes: Optional[Dict[str, int]]
+                      ) -> Tuple[str, ...]:
+    if dim is None or mesh_sizes is None:
+        return axes_tuple
+    out = []
+    prod = 1
+    for a in axes_tuple:
+        prod *= mesh_sizes.get(a, 1)
+        if dim % prod:
+            break
+        out.append(a)
+    return tuple(out)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    rules: Optional[Dict[str, MeshAxes]] = None,
+                    shape: Optional[Sequence[int]] = None,
+                    mesh_sizes: Optional[Dict[str, int]] = None) -> P:
+    """Translate logical axis names to a PartitionSpec under ``rules``.
+
+    A mesh axis may be claimed by at most one tensor dimension; later
+    claims degrade to replication (standard logical-rules semantics).
+    With ``shape``+``mesh_sizes``, non-divisible dims degrade too.
+    """
+    rules = rules if rules is not None else (current_rules() or {})
+    mesh_sizes = mesh_sizes if mesh_sizes is not None \
+        else current_mesh_sizes()
+    used = set()
+    spec = []
+    for i, ax in enumerate(axes):
+        mapped = rules.get(ax) if ax is not None else None
+        if mapped is None:
+            spec.append(None)
+            continue
+        axes_tuple = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        free = tuple(a for a in axes_tuple if a not in used)
+        dim = shape[i] if shape is not None else None
+        free = _divisible_prefix(free, dim, mesh_sizes)
+        if not free:
+            spec.append(None)
+            continue
+        used.update(free)
+        spec.append(free if len(free) > 1 else free[0])
+    return P(*spec)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a with_sharding_constraint from logical axes (no-op w/o rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, logical_to_spec(axes, rules, shape=x.shape))
+
+
+# ---------------------------------------------------------------------------
+# Parameter annotation: init code returns leaves of (array, logical_axes);
+# split_params separates value tree from axes tree.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Annotated:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def annotate(value, *axes: Optional[str]) -> Annotated:
+    if hasattr(value, "ndim") and value.ndim != len(axes):
+        raise ValueError(f"axes {axes} rank-mismatch value {value.shape}")
+    return Annotated(value, tuple(axes))
+
+
+def split_params(tree):
+    """(values_tree, axes_tree) from a tree with Annotated leaves."""
+    is_leaf = lambda x: isinstance(x, Annotated)
+    values = jax.tree.map(lambda a: a.value, tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_leaf)
+    return values, axes
+
+
+def param_sharding(axes_tree, mesh, rules: Optional[Dict[str, MeshAxes]] = None,
+                   like=None):
+    """NamedSharding tree for params given their logical-axes tree.
+
+    ``like``: matching tree of arrays/ShapeDtypeStructs enabling
+    divisibility pruning per leaf.
+    """
+    rules = rules if rules is not None else DEFAULT_RULES
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    if like is None:
+        return jax.tree.map(
+            lambda ax: NamedSharding(
+                mesh, logical_to_spec(ax, rules, mesh_sizes=sizes)),
+            axes_tree, is_leaf=is_axes)
+    flat_like, tdef = jax.tree.flatten(like)
+    flat_ax = tdef.flatten_up_to(axes_tree)
+    out = [NamedSharding(mesh, logical_to_spec(ax, rules, shape=l.shape,
+                                               mesh_sizes=sizes))
+           for l, ax in zip(flat_like, flat_ax)]
+    return tdef.unflatten(out)

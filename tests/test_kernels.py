@@ -1,0 +1,194 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels.fma32 import fma32, fma32_ref
+from repro.kernels.stream import stream_triad, stream_triad_ref
+from repro.kernels.gemm import gemm, gemm_ref
+from repro.kernels.jacobi2d import jacobi2d, jacobi2d_ref
+from repro.kernels.gridder import (degridder, degridder_ref, gridder,
+                                   gridder_ref)
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_ref)
+
+
+def rng(i):
+    return jax.random.PRNGKey(i)
+
+
+# -- fma32 ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128, 128), (512, 256), (1024, 384)])
+@pytest.mark.parametrize("iters", [1, 16, 64])
+def test_fma32(shape, iters):
+    x = jax.random.normal(rng(0), shape, jnp.float32)
+    assert_allclose(fma32(x, iters=iters, interpret=True),
+                    fma32_ref(x, iters=iters), rtol=1e-6)
+
+
+# -- stream --------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(256, 128), (2048, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stream_triad(shape, dtype):
+    a = jax.random.normal(rng(1), shape).astype(dtype)
+    b = jax.random.normal(rng(2), shape).astype(dtype)
+    out = stream_triad(a, b, scalar=2.5, interpret=True)
+    ref = stream_triad_ref(a, b, scalar=2.5)
+    assert out.dtype == ref.dtype
+    assert_allclose(out.astype(np.float32), ref.astype(np.float32),
+                    rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
+                    atol=1e-6)
+
+
+# -- gemm ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("mnk", [(256, 256, 256), (512, 256, 384),
+                                 (128, 512, 640)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm(mnk, dtype):
+    m, n, k = mnk
+    a = (jax.random.normal(rng(3), (m, k)) / math.sqrt(k)).astype(dtype)
+    b = jax.random.normal(rng(4), (k, n)).astype(dtype)
+    out = gemm(a, b, block_m=128, block_n=128, block_k=128, interpret=True)
+    ref = gemm_ref(a, b)
+    assert out.dtype == jnp.float32
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+def test_gemm_block_shape_invariance():
+    a = jax.random.normal(rng(5), (512, 512), jnp.float32)
+    b = jax.random.normal(rng(6), (512, 512), jnp.float32)
+    o1 = gemm(a, b, block_m=128, block_n=128, block_k=128, interpret=True)
+    o2 = gemm(a, b, block_m=256, block_n=256, block_k=512, interpret=True)
+    assert_allclose(o1, o2, rtol=1e-5, atol=1e-4)
+
+
+# -- jacobi2d ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,bh", [((256, 128), 64), ((512, 256), 128),
+                                      ((128, 384), 128)])
+def test_jacobi2d(shape, bh):
+    x = jax.random.normal(rng(7), shape, jnp.float32)
+    assert_allclose(jacobi2d(x, block_h=bh, interpret=True),
+                    jacobi2d_ref(x), rtol=1e-6, atol=1e-6)
+
+
+def test_jacobi2d_boundary_rows_kept():
+    x = jax.random.normal(rng(8), (256, 128), jnp.float32)
+    out = jacobi2d(x, block_h=64, interpret=True)
+    assert_allclose(out[0], x[0])
+    assert_allclose(out[-1], x[-1])
+    assert_allclose(out[:, 0], x[:, 0])
+
+
+# -- gridder / degridder ------------------------------------------------------------
+
+@pytest.mark.parametrize("p,s,v,bv", [(128, 2, 128, 128), (256, 3, 256, 128),
+                                      (128, 1, 512, 256)])
+def test_gridder(p, s, v, bv):
+    lm = jax.random.uniform(rng(9), (p, 2), minval=-0.5, maxval=0.5)
+    uv = jax.random.uniform(rng(10), (s, v, 2), minval=-2.0, maxval=2.0)
+    vis = jax.random.normal(rng(11), (s, v, 2), jnp.float32)
+    assert_allclose(gridder(lm, uv, vis, block_v=bv, interpret=True),
+                    gridder_ref(lm, uv, vis), rtol=1e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("p,s,v", [(128, 2, 128), (256, 2, 256)])
+def test_degridder(p, s, v):
+    lm = jax.random.uniform(rng(12), (p, 2), minval=-0.5, maxval=0.5)
+    uv = jax.random.uniform(rng(13), (s, v, 2), minval=-2.0, maxval=2.0)
+    sub = jax.random.normal(rng(14), (s, p, 2), jnp.float32)
+    assert_allclose(degridder(lm, uv, sub, interpret=True),
+                    degridder_ref(lm, uv, sub), rtol=1e-4, atol=2e-3)
+
+
+def test_gridder_degridder_adjoint():
+    """<G(vis), sub> == <vis, G^T(sub)> — the pair is a true adjoint."""
+    p, s, v = 128, 2, 128
+    lm = jax.random.uniform(rng(15), (p, 2), minval=-0.5, maxval=0.5)
+    uv = jax.random.uniform(rng(16), (s, v, 2), minval=-1.0, maxval=1.0)
+    vis = jax.random.normal(rng(17), (s, v, 2), jnp.float32)
+    sub = jax.random.normal(rng(18), (s, p, 2), jnp.float32)
+    g = gridder(lm, uv, vis, interpret=True)
+    gt = degridder(lm, uv, sub, interpret=True)
+    # complex inner products: <a,b> = sum(re*re + im*im) under adjointness
+    lhs = float(jnp.sum(g * sub))
+    rhs = float(jnp.sum(vis * gt))
+    assert abs(lhs - rhs) / max(abs(lhs), 1e-3) < 1e-3
+
+
+# -- flash attention ------------------------------------------------------------------
+
+def _fa_ref_4d(q, k, v, **kw):
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], hd)
+    ref = flash_attention_ref(qf, kf, vf, **kw)
+    return ref.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (9, 3)])
+@pytest.mark.parametrize("s", [256, 512])
+def test_flash_gqa_causal(h, kvh, s):
+    hd, b = 64, 2
+    q = jax.random.normal(rng(19), (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(rng(20), (b, s, kvh, hd), jnp.float32)
+    v = jax.random.normal(rng(21), (b, s, kvh, hd), jnp.float32)
+    kw = dict(causal=True, scale=1.0 / math.sqrt(hd))
+    out = flash_attention(q, k, v, block_q=128, block_k=128,
+                          interpret=True, **kw)
+    assert_allclose(out, _fa_ref_4d(q, k, v, **kw), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window,softcap", [(128, None), (None, 30.0),
+                                            (64, 50.0)])
+def test_flash_window_softcap(window, softcap):
+    b, s, h, kvh, hd = 1, 512, 4, 2, 64
+    q = jax.random.normal(rng(22), (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(rng(23), (b, s, kvh, hd), jnp.float32)
+    v = jax.random.normal(rng(24), (b, s, kvh, hd), jnp.float32)
+    kw = dict(causal=True, window=window, softcap=softcap,
+              scale=1.0 / math.sqrt(hd))
+    out = flash_attention(q, k, v, block_q=128, block_k=128,
+                          interpret=True, **kw)
+    assert_allclose(out, _fa_ref_4d(q, k, v, **kw), rtol=3e-4, atol=3e-4)
+
+
+def test_flash_bf16():
+    b, s, h, kvh, hd = 1, 256, 4, 4, 64
+    q = jax.random.normal(rng(25), (b, s, h, hd)).astype(jnp.bfloat16)
+    k = jax.random.normal(rng(26), (b, s, kvh, hd)).astype(jnp.bfloat16)
+    v = jax.random.normal(rng(27), (b, s, kvh, hd)).astype(jnp.bfloat16)
+    kw = dict(causal=True, scale=1.0 / math.sqrt(hd))
+    out = flash_attention(q, k, v, interpret=True, **kw)
+    ref = _fa_ref_4d(q, k, v, **kw)
+    assert out.dtype == jnp.bfloat16
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    rtol=0.05, atol=0.05)
+
+
+def test_flash_grad_matches_ref():
+    b, s, h, kvh, hd = 1, 256, 4, 2, 32
+    q = jax.random.normal(rng(28), (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(rng(29), (b, s, kvh, hd), jnp.float32)
+    v = jax.random.normal(rng(30), (b, s, kvh, hd), jnp.float32)
+    kw = dict(causal=True, scale=1.0 / math.sqrt(hd))
+
+    def f_pallas(q_):
+        return (flash_attention(q_, k, v, interpret=True, **kw) ** 2).sum()
+
+    def f_ref(q_):
+        return (_fa_ref_4d(q_, k, v, **kw) ** 2).sum()
+
+    g1 = jax.grad(f_pallas)(q)
+    g2 = jax.grad(f_ref)(q)
+    assert_allclose(g1, g2, rtol=1e-3, atol=1e-3)

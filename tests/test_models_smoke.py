@@ -1,0 +1,95 @@
+"""Per-arch smoke tests (deliverable f): reduced config of the same
+family, one forward/train step on CPU, output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.optim.optimizers import OptimizerConfig
+from repro.train.steps import init_train_state, make_train_step
+
+B, S = 2, 64
+
+
+def make_batch(cfg, with_targets=True):
+    batch = {"tokens": jnp.full((B, S), 3, jnp.int32)}
+    if with_targets:
+        batch["targets"] = jnp.ones((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = 0.01 * jnp.ones(
+            (B, configs.patch_len(cfg, S), cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["frame_embeds"] = 0.01 * jnp.ones(
+            (B, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_forward_shapes_no_nans(arch):
+    cfg = configs.get_config(arch, reduced=True)
+    params, axes = M.init_params(jax.random.PRNGKey(0), cfg)
+    fwd = M.build_forward(cfg)
+    hidden, aux = jax.jit(fwd)(params, make_batch(cfg, with_targets=False))
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_train_step_no_nans(arch):
+    cfg = configs.get_config(arch, reduced=True)
+    ocfg = OptimizerConfig(name=cfg.optimizer, warmup_steps=2, decay_steps=10)
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    state, metrics = step(state, make_batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state.opt.step) == 1
+    # params actually moved
+    l0 = jax.tree.leaves(state.params)[0]
+    assert np.isfinite(np.asarray(l0, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_scan_matches_loop(arch):
+    """lax.scan over layer units == Python loop (roofline probes rely
+    on this equivalence)."""
+    import dataclasses
+    cfg = configs.get_config(arch, reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params, _ = M.init_params(jax.random.PRNGKey(1), cfg)
+    batch = make_batch(cfg, with_targets=False)
+    h1, _ = jax.jit(M.build_forward(cfg))(params, batch)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False,
+                               unroll_time_chunks=True)
+    h2, _ = jax.jit(M.build_forward(cfg2))(params, batch)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_counts_match_table():
+    """Full-config analytic param counts are in the published ballpark."""
+    expect = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "deepseek-v3-671b": (0.6e12, 0.75e12),
+        "smollm-135m": (0.12e9, 0.15e9),
+        "qwen3-0.6b": (0.4e9, 0.8e9),
+        "olmo-1b": (1.0e9, 1.4e9),
+        "gemma2-27b": (25e9, 30e9),   # 27.2B incl. the 1.18B tied embed
+        "qwen2-vl-72b": (65e9, 80e9),
+        # our mLSTM uses full (xLSTM-7B-style) q/k/v projections rather
+        # than the 1.3B paper model's block-diagonal ones -> ~3.5B
+        "xlstm-1.3b": (3.0e9, 4.0e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"
+
+
+def test_moe_active_params_much_smaller():
+    cfg = configs.get_config("kimi-k2-1t-a32b")
+    assert cfg.active_param_count() < 0.1 * cfg.param_count()

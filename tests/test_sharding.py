@@ -1,0 +1,144 @@
+"""Property tests (hypothesis) on the sharding rules and MoE dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.specs import (DEFAULT_RULES, logical_to_spec)
+
+AXES = ["batch", "seq", "d_model", "heads", "kv_heads", "head_dim", "ffn",
+        "vocab", "experts", "layers", None]
+
+
+@given(st.lists(st.sampled_from(AXES), min_size=1, max_size=5))
+@settings(max_examples=200, deadline=None)
+def test_no_mesh_axis_claimed_twice(axes):
+    spec = logical_to_spec(axes, DEFAULT_RULES)
+    used = []
+    for entry in spec:
+        if entry is None:
+            continue
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        used.extend(entries)
+    assert len(used) == len(set(used)), f"{axes} -> {spec}"
+
+
+@given(st.lists(st.sampled_from(AXES), min_size=1, max_size=5),
+       st.lists(st.integers(min_value=1, max_value=64), min_size=1,
+                max_size=5))
+@settings(max_examples=200, deadline=None)
+def test_divisibility_pruning(axes, dims):
+    n = min(len(axes), len(dims))
+    axes, dims = axes[:n], dims[:n]
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    spec = logical_to_spec(axes, DEFAULT_RULES, shape=dims, mesh_sizes=sizes)
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([sizes[e] for e in entries]))
+        assert dim % prod == 0, f"{axes} {dims} -> {spec}"
+
+
+def test_rules_spec_examples():
+    spec = logical_to_spec(["batch", "seq", "d_model"], DEFAULT_RULES)
+    assert spec == P(("pod", "data"), None, None)
+    spec = logical_to_spec(["experts", "d_model", "ffn"], DEFAULT_RULES)
+    assert spec == P("model", None, None)  # ffn degrades: model taken
+
+
+# -- MoE dispatch invariants ------------------------------------------------------
+
+from repro.configs.base import MoEConfig, ModelConfig
+from repro.models import moe
+
+
+def tiny_moe_cfg(num_experts=8, top_k=2, cf=1.25):
+    return ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64,
+        moe=MoEConfig(num_experts=num_experts, top_k=top_k, ff_dim=16,
+                      capacity_factor=cf))
+
+
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=4, max_value=16),
+       st.integers(min_value=2, max_value=8),
+       st.integers(min_value=1, max_value=3))
+@settings(max_examples=25, deadline=None)
+def test_moe_dispatch_conservation(b, s, e, k):
+    """Every kept assignment lands in exactly one slot; dropped tokens
+    contribute zero; gate weights are renormalized top-k probs."""
+    k = min(k, e)
+    cfg = tiny_moe_cfg(num_experts=e, top_k=k)
+    key = jax.random.PRNGKey(b * 100 + s)
+    p = moe.init_moe(key, cfg)
+    from repro.sharding.specs import split_params
+    p, _ = split_params(p)
+    x = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    out, aux = moe.apply_moe(cfg, p, x)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) >= 0.99  # load-balance loss >= 1 at optimum
+
+
+def test_moe_forced_routing_matches_dense_expert():
+    """Router forced to expert 0 (huge logit column): apply_moe must equal
+    running expert 0's SwiGLU FFN densely on every token."""
+    cfg = tiny_moe_cfg(num_experts=4, top_k=1, cf=8.0)  # no drops
+    d = cfg.d_model
+    key = jax.random.PRNGKey(0)
+    p0 = moe.init_moe(key, cfg)
+    from repro.sharding.specs import split_params
+    p, _ = split_params(p0)
+    router = jnp.zeros((d, 4)).at[:, 0].set(100.0)
+    p["router"] = router
+    # positive inputs so the forced router column is a large POSITIVE
+    # logit (100 * sum(x)) for every token
+    x = jnp.abs(jax.random.normal(key, (2, 8, d), jnp.float32)) + 0.1
+    out, _ = moe.apply_moe(cfg, p, x)
+    w_up, w_gate, w_down = p["w_up"][0], p["w_gate"][0], p["w_down"][0]
+    expected = (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(min_value=2, max_value=64),
+       st.integers(min_value=2, max_value=16),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=50, deadline=None)
+def test_capacity_bounds(tokens, e, k):
+    k = min(k, e)
+    m = MoEConfig(num_experts=e, top_k=k, ff_dim=8, capacity_factor=1.25)
+    c = moe.capacity(tokens, m)
+    assert 1 <= c <= tokens * k
+    assert c * e >= tokens * k  # capacity covers perfect balance
+
+
+# -- dispatch index plan properties ------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=32),
+       st.integers(min_value=2, max_value=8),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=50, deadline=None)
+def test_dispatch_indices_properties(t, e, k, seed):
+    k = min(k, e)
+    cap = moe.capacity(t, MoEConfig(num_experts=e, top_k=k, ff_dim=8))
+    top_i = jax.random.randint(jax.random.PRNGKey(seed), (t, k), 0, e)
+    tfs, sft = moe._dispatch_indices(top_i, cap, e)
+    tfs, sft = np.asarray(tfs), np.asarray(sft)
+    # every non-sentinel slot points at a valid token
+    assert ((tfs == t) | ((tfs >= 0) & (tfs < t))).all()
+    # kept assignments round-trip: slot_for_tk[token, j] -> token_for_slot
+    for tok in range(t):
+        for j in range(k):
+            slot = sft[tok, j]
+            if slot < e * cap:
+                assert tfs[slot] == tok
+    # no expert exceeds capacity
+    kept = sft[sft < e * cap]
+    experts = kept // cap
+    counts = np.bincount(experts, minlength=e)
+    assert (counts <= cap).all()

