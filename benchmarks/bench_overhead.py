@@ -4,7 +4,11 @@ cumulative when decorators stack.
 We measure (a) the raw read()-pair cost per backend (the C++-API
 analogue), (b) the decorator overhead on a no-op function for 1..3
 stacked decorators, verifying overhead grows ~linearly with stacking and
-stays inside the paper's Python envelope.
+stays inside the paper's Python envelope, and (c) blocking ``@measure``
+vs ``session.region`` on the same dummy backend — the Session redesign's
+hot-path claim: region entry/exit is clock reads + a span append, with
+resolution deferred to the shared ring sampler, so per-region overhead
+must come in at least 2x below the blocking decorator.
 """
 from __future__ import annotations
 
@@ -13,11 +17,18 @@ import time
 import repro.core as pmt
 
 
-def _time_per_call(fn, n=200):
-    t0 = time.perf_counter()
-    for _ in range(n):
-        fn()
-    return (time.perf_counter() - t0) / n
+def _time_per_call(fn, n=200, repeats=5):
+    """Best-of-``repeats`` mean over ``n`` calls (min filters scheduler
+    noise — the background sampler and the container's neighbours both
+    add tail jitter that is not the API's own overhead)."""
+    fn()  # warm up
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / n)
+    return best
 
 
 def main(csv=False):
@@ -40,6 +51,8 @@ def main(csv=False):
         us = _time_per_call(fn, n=100) * 1e6
         rows.append((f"decorator_x{stack}", us))
 
+    session_ratio = bench_session_vs_blocking(rows)
+
     print("# PMT overhead (paper: ~1 ms C++ / ~10 ms Python per region)")
     print(f"{'case':22s} {'us/call':>10s} {'paper budget':>14s}")
     budget = {"read_pair": 1_000.0, "decorator": 10_000.0}
@@ -52,10 +65,44 @@ def main(csv=False):
         print(f"{name:22s} {us:10.1f} {'<= ' + str(int(b * mult)):>14s}"
               f" {'OK' if within else 'OVER'}")
     print(f"# overall: {'PASS' if ok else 'FAIL'} vs paper envelope")
+    print(f"# session.region vs blocking @measure: {session_ratio:.1f}x "
+          f"lower per-region overhead "
+          f"({'PASS' if session_ratio >= 2.0 else 'FAIL'} vs 2x target)")
     if csv:
         for name, us in rows:
             print(f"overhead_{name},{us:.2f},paper_env_ok={ok}")
+        print(f"overhead_session_speedup,{session_ratio:.2f},"
+              f"target_2x_ok={session_ratio >= 2.0}")
     return rows
+
+
+def bench_session_vs_blocking(rows, n=2000):
+    """Hot-path comparison on the dummy backend.
+
+    Blocking mode: the classic ``@pmt.measure`` wrapper — two synchronous
+    ``Sensor.read()`` calls (lock, sample, trapezoid integration, State)
+    bracketing every call.  Session mode: ``session.region`` enter/exit —
+    sensor-clock timestamps plus a span append; joules resolve later
+    against the shared ring buffer, off the measured path.
+    """
+    blocking = pmt.measure("dummy")(lambda: None)
+    us_blocking = _time_per_call(blocking, n=n, repeats=9) * 1e6
+
+    with pmt.Session(["dummy"]) as sess:
+        def region_call():
+            with sess.region("bench"):
+                pass
+
+        us_session = _time_per_call(region_call, n=n, repeats=9) * 1e6
+        # Resolution stays correct even though it's off the hot path:
+        # constant-watts dummy over a real sleep must yield positive J.
+        with sess.region("check") as r:
+            time.sleep(0.002)
+        assert r.measurements[0].joules > 0.0
+
+    rows.append(("measure_blocking", us_blocking))
+    rows.append(("session_region", us_session))
+    return us_blocking / max(us_session, 1e-9)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,58 @@
-"""PMT quickstart — the paper's Listings 1 and 2, in this framework.
+"""PMT quickstart — the unified ``pmt.Session`` API, plus the paper's
+classic Listings 1 and 2 as the shims they have become.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+
+Migration table (old call -> new call):
+
+    sensor = pmt.create("x")             sess = pmt.Session(["x"])
+    a = sensor.read(); work(); b = ...   with sess.region("roi") as r: work()
+    sensor.joules(a, b)                  r.measurement.joules
+    @pmt.measure("x")                    with sess.region("roi"):
+    with pmt.Region("x") as r: ...       with sess.region("roi") as r: ...
+    sensor.start_dump_thread(f)          sess.add_exporter(pmt.CsvExporter(f))
+    pmt.PowerMonitor(["x"])              pmt.PowerMonitor(session=sess)
+
+The old calls all still work — they now draw shared sensors from the
+process-wide pool instead of constructing private copies.
 """
+import contextlib
+import os
 import time
 
 import repro.core as pmt
 
 
+def session_mode():
+    """The unified API: one shared background sampler per backend,
+    non-blocking nested regions, structured export."""
+    with contextlib.suppress(FileNotFoundError):
+        os.remove("/tmp/pmt_regions.jsonl")   # exporter appends
+    with pmt.Session(["cpuutil", "tpu"]) as sess:
+        mem = sess.add_exporter(pmt.MemoryExporter())
+        sess.add_exporter(pmt.JsonlExporter("/tmp/pmt_regions.jsonl"))
+
+        with sess.region("pipeline"):                 # nests
+            with sess.region("load"):
+                time.sleep(0.2)
+            with sess.region("compute", tokens=512) as r:
+                time.sleep(0.5)
+
+        print(f"compute: {r.measurements.total_joules():.4f} J "
+              f"across {len(r.measurements)} sensors")
+        sess.flush()                                  # resolve + export rest
+        for rec in mem.records:
+            print(f"  {rec.path:18s} {rec.sensor:8s} {rec.joules:9.4f} J "
+                  f"{rec.watts:8.3f} W {rec.seconds:6.3f} s")
+    print("structured export -> /tmp/pmt_regions.jsonl "
+          f"({len(pmt.read_jsonl('/tmp/pmt_regions.jsonl'))} records)")
+
+
 def listing1_measurement_mode():
-    """C++ Listing 1: create -> read -> work -> read -> derive."""
+    """C++ Listing 1: create -> read -> work -> read -> derive.
+
+    Still supported verbatim; the Session equivalent is region() above.
+    """
     sensor = pmt.create("cpuutil")          # measured host-CPU backend
     start = sensor.read()
     time.sleep(1.0)                          # the paper sleeps 5 s; 1 s here
@@ -19,7 +63,8 @@ def listing1_measurement_mode():
 
 
 def listing2_decorators():
-    """Python Listing 2: stacked decorators, one line per backend."""
+    """Python Listing 2: stacked decorators — now shims drawing shared
+    sensors from the default session's pool."""
 
     @pmt.measure("tpu")        # modeled accelerator sensor
     @pmt.measure("cpuutil")    # measured host sensor
@@ -46,7 +91,9 @@ def dump_mode():
 
 
 if __name__ == "__main__":
-    print("== measurement mode (paper Listing 1)")
+    print("== session mode (the unified API)")
+    session_mode()
+    print("\n== measurement mode (paper Listing 1, classic shim)")
     listing1_measurement_mode()
     print("\n== decorators, stacked (paper Listing 2 / Fig. 2)")
     listing2_decorators()

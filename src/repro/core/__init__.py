@@ -4,27 +4,41 @@ The paper's primary contribution (Corda, Veenboer, Tolley, 2022): a
 high-level library with a standard interface for measuring the energy use
 of devices in critical application sections.
 
-Usage mirrors the paper's Listings 1 and 2::
+The unified entry point is :class:`pmt.Session`: one refcounted
+:class:`SensorPool` of shared sensors, one lazily-started background
+:class:`RingSampler` per backend, non-blocking nested regions that
+resolve against the ring buffer, and pluggable exporters::
 
     import repro.core as pmt
 
-    # C++-style measurement mode (Listing 1)
-    sensor = pmt.create("cpuutil")
-    start = sensor.read(); work(); end = sensor.read()
-    print(sensor.joules(start, end), "J")
-    print(sensor.watts(start, end), "W")
-    print(sensor.seconds(start, end), "s")
+    with pmt.Session(["cpuutil", "tpu"]) as sess:
+        sess.add_exporter(pmt.JsonlExporter("energy.jsonl"))
+        with sess.region("prefill"):
+            ...
+        with sess.region("decode", tokens=128) as r:
+            ...
+        print(r.measurements.total_joules(), "J")
 
-    # Python decorator mode (Listing 2), stacked backends
-    @pmt.measure("tpu")
-    @pmt.measure("cpuutil")
-    def my_application(): ...
-    measures = my_application()
-    for m in measures: print(m)
+Region entry/exit never touch a sensor on the caller's thread — spans
+are timestamps resolved later by interpolating the sampler's cumulative
+joules counter — so concurrent serve requests, the train loop, and the
+decorators below can all measure through one sampler per backend.
 
-    # dump mode
-    sensor.start_dump_thread("timeline.pmt"); work()
-    sensor.stop_dump_thread()
+``pmt.region("roi", backends=["x"])`` opens a region on the implicit
+default session for quick scripts.  Classic surfaces (paper Listings
+1/2) remain as shims drawing shared sensors from the default pool:
+
+    ======================================  =================================
+    old call                                new (Session) call
+    ======================================  =================================
+    ``sensor = pmt.create("x")``            ``sess = pmt.Session(["x"])``
+    ``a = sensor.read(); ...; b = read()``  ``with sess.region("roi") as r:``
+    ``sensor.joules(a, b)``                 ``r.measurement.joules``
+    ``@pmt.measure("x")``                   ``with sess.region("roi"):``
+    ``with pmt.Region("x") as r:``          ``with sess.region("roi") as r:``
+    ``sensor.start_dump_thread(f)``         ``sess.add_exporter(CsvExporter(f))``
+    ``pmt.PowerMonitor(["x"])``             ``pmt.PowerMonitor(["x"], session=s)``
+    ======================================  =================================
 
 Backends: rapl, sysfs, cpuutil, nvml, tpu (analytical XLA-cost sensor —
 the TPU adaptation), dummy. See DESIGN.md §2 for measured-vs-modeled
@@ -35,6 +49,8 @@ from repro.core.decorators import (Measurement, Measurements, Region, dump,
 from repro.core.dumpfile import (DumpHeader, DumpRecord, average_watts, read_dump,
                              total_joules)
 from repro.core.energy_model import TPU_V5E, EnergyModel, HardwareSpec
+from repro.core.export import (CsvExporter, Exporter, JsonlExporter,
+                               MemoryExporter, RegionRecord, read_jsonl)
 from repro.core.metrics import (EfficiencyReport, ed2p, edp, gflops_per_watt,
                                 joules_per_token, tokens_per_joule)
 from repro.core.monitor import (PowerMonitor, StepEnergy, StragglerVerdict,
@@ -43,6 +59,9 @@ from repro.core.registry import (available_backend_names, backend_names,
                                  create, get_backend, register_backend)
 from repro.core.sampler import DumpThread, RingSampler
 from repro.core.sensor import Sample, Sensor, SensorError
+from repro.core.session import (RegionHandle, SensorLease, SensorPool,
+                                Session, default_pool, default_session,
+                                region, set_default_session)
 from repro.core.state import State, joules, rail_joules, seconds, watts
 
 __all__ = [
@@ -52,7 +71,13 @@ __all__ = [
     # registry
     "create", "get_backend", "register_backend",
     "backend_names", "available_backend_names",
-    # modes
+    # session facade
+    "Session", "SensorPool", "SensorLease", "RegionHandle", "region",
+    "default_session", "set_default_session", "default_pool",
+    # exporters
+    "Exporter", "RegionRecord", "CsvExporter", "JsonlExporter",
+    "MemoryExporter", "read_jsonl",
+    # classic modes (shims over the default session)
     "measure", "dump", "Region", "Measurement", "Measurements",
     "DumpThread", "RingSampler",
     "DumpHeader", "DumpRecord", "read_dump", "total_joules", "average_watts",

@@ -1,4 +1,4 @@
-"""Python decorators — the paper's Listing 2 interface.
+"""Classic PMT surfaces — now thin shims over the implicit default session.
 
     import repro.core as pmt
 
@@ -17,22 +17,34 @@ Semantics preserved from the paper:
     own return value is available as ``measures.result``;
   * decorators stack — ``@pmt.measure("tpu")`` above ``@pmt.measure("cpuutil")``
     yields both measurements in one list (paper Fig. 2 stacks GPU on CPU);
-  * overhead is cumulative per decorator (benchmarked in
-    benchmarks/bench_overhead.py against the paper's ~10 ms Python claim);
   * ``@pmt.dump(backend, filename=...)`` is measurement's dump-mode twin.
 
-Backends may be passed by name (constructed via the registry, one fresh
-sensor per decorated function) or as an existing Sensor instance (so a
-framework-owned TpuCostModelSensor can be shared).
+What changed (the ``pmt.Session`` redesign): sensors are no longer
+constructed privately per decorated function.  Every shim draws its
+sensor from the process-wide default :class:`~repro.core.session.SensorPool`
+(the same pool behind ``pmt.Session`` / ``pmt.region``), so a decorator,
+the serve engine, and the train loop measuring the same backend all
+share one sensor (and, for Region consumers, one background sampler).
+``pmt.Region`` resolves against the shared ring buffer instead of
+issuing its own reads; its per-backend shim sessions are closed at
+interpreter exit.
+
+Deprecation note: these shims stay supported, but new code should use
+:class:`pmt.Session` directly — ``with session.region("roi"):`` is
+non-blocking on the hot path and nests; ``@pmt.measure`` still performs
+two synchronous reads around the call (the paper's Listing 2 contract
+requires materialised results at return time).
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import functools
-from typing import Any, List, Optional, Union
+import threading
+import weakref
+from typing import Any, Dict, List, Optional, Union
 
-from repro.core import registry
-from repro.core.sensor import Sensor
+from repro.core.sensor import Sensor, SensorError
 from repro.core.state import State
 
 
@@ -75,25 +87,77 @@ class Measurements(List[Measurement]):
         return sum(m.joules for m in self)
 
 
-def _resolve(backend: Union[str, Sensor], **kwargs) -> Sensor:
-    if isinstance(backend, Sensor):
-        return backend
-    return registry.create(backend, **kwargs)
+def _pooled(backend: Union[str, Sensor], sampling: bool = False, **kwargs):
+    """A lease on a shared sensor from the default pool."""
+    from repro.core.session import default_pool
+
+    return default_pool().acquire(backend, sampling=sampling, **kwargs)
+
+
+def _adopt_leases(wrapper, leases) -> None:
+    """Tie pool leases to a decorated function's lifetime.
+
+    The wrapper holds the leases (so the sensors stay pooled while it
+    is callable) and releases them when it is garbage collected —
+    without this, dynamically-created decorators would grow the pool
+    unboundedly with entries nothing can ever release.
+    """
+    wrapper.__pmt_leases__ = leases
+    wrapper.__pmt_sensors__ = [l.sensor for l in leases]
+    for lease in leases:
+        weakref.finalize(wrapper, lease.release)
+
+
+# Single-backend sessions backing the Region shim, one per pool key, so
+# Region("dummy") resolves only dummy even when the default session has
+# other backends attached.
+_shim_sessions: Dict[Any, "object"] = {}
+_shim_lock = threading.Lock()
+
+
+def _shim_session(backend: Union[str, Sensor], **kwargs):
+    from repro.core.session import Session, SensorPool, default_pool
+
+    key = SensorPool._key_for(backend, kwargs)
+    with _shim_lock:
+        sess = _shim_sessions.get(key)
+        if sess is None or sess._closed:
+            sess = Session(pool=default_pool())
+            sess.attach(backend, **kwargs)
+            _shim_sessions[key] = sess
+        return sess
+
+
+@atexit.register
+def _close_shim_sessions() -> None:  # pragma: no cover - teardown
+    with _shim_lock:
+        sessions = list(_shim_sessions.values())
+        _shim_sessions.clear()
+    for sess in sessions:
+        try:
+            sess.close()
+        except Exception:
+            pass
 
 
 def measure(*backends: Union[str, Sensor], label: Optional[str] = None,
             **backend_kwargs):
-    """Measurement-mode decorator (paper mode 2).
+    """Measurement-mode decorator (paper mode 2) — blocking by contract.
 
-    One sensor per listed backend is read before and after the wrapped
-    call.  Multiple backends in one decorator and stacked decorators both
-    work and produce a flat :class:`Measurements` list.
+    One pooled sensor per listed backend is read before and after the
+    wrapped call.  Multiple backends in one decorator and stacked
+    decorators both work and produce a flat :class:`Measurements` list.
+
+    Prefer ``session.region(...)`` for hot paths: this decorator must
+    return resolved measurements, so it reads synchronously on the
+    caller's thread (see benchmarks/bench_overhead.py for the gap).
     """
     if not backends:
         raise ValueError("pmt.measure requires at least one backend")
 
     def decorate(fn):
-        sensors = [_resolve(b, **backend_kwargs) for b in backends]
+        leases = [_pooled(b, **backend_kwargs) for b in backends]
+        sensors = [l.sensor for l in leases]
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
@@ -116,7 +180,7 @@ def measure(*backends: Union[str, Sensor], label: Optional[str] = None,
                 out.result = inner
             return out
 
-        wrapper.__pmt_sensors__ = sensors  # exposed for tests/benchmarks
+        _adopt_leases(wrapper, leases)  # __pmt_sensors__ for tests/benchmarks
         return wrapper
 
     return decorate
@@ -129,49 +193,66 @@ def dump(backend: Union[str, Sensor], filename: str,
     Runs a background dump thread for the duration of the wrapped call,
     writing the power timeline to ``filename``; the wrapped function's own
     return value passes through unchanged (measurements live in the file).
+
+    The sensor is pooled; the dump thread is private to this decorator,
+    so two dump decorators over the same backend coexist (each owns its
+    file).
     """
 
     def decorate(fn):
-        sensor = _resolve(backend, **backend_kwargs)
+        from repro.core.sampler import DumpThread
+
+        lease = _pooled(backend, **backend_kwargs)
+        sensor = lease.sensor
+        running = threading.Lock()
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
-            sensor.start_dump_thread(filename, period_s=period_s)
+            # One dump at a time per decorated function: a concurrent
+            # second call would truncate and interleave the same file.
+            if not running.acquire(blocking=False):
+                raise SensorError(
+                    f"dump thread already running for {filename!r}")
+            thread = DumpThread(sensor, filename, period_s=period_s)
+            thread.start()
             try:
                 return fn(*args, **kwargs)
             finally:
-                sensor.stop_dump_thread()
+                thread.stop()
+                running.release()
 
-        wrapper.__pmt_sensors__ = [sensor]
+        _adopt_leases(wrapper, [lease])
         return wrapper
 
     return decorate
 
 
 class Region:
-    """Imperative measurement-mode helper (the C++ Listing 1 shape)::
+    """Imperative measurement helper (the C++ Listing 1 shape)::
 
         with pmt.Region(sensor) as r:
             work()
         print(r.measurement)
+
+    Now a shim over a pooled single-backend session region: entry/exit
+    are non-blocking; the measurement resolves against the shared ring
+    buffer when the block exits (at most one closing sample).
     """
 
     def __init__(self, sensor: Union[str, Sensor], label: Optional[str] = None,
                  **backend_kwargs):
-        self._sensor = _resolve(sensor, **backend_kwargs)
+        self._session = _shim_session(sensor, **backend_kwargs)
         self._label = label
         self.measurement: Optional[Measurement] = None
 
     def __enter__(self) -> "Region":
-        self._start = self._sensor.read()
+        self._handle = self._session.region(self._label)
+        self._handle.__enter__()
         return self
 
     def __exit__(self, *exc) -> bool:
-        end = self._sensor.read()
-        self.measurement = Measurement(
-            sensor=self._sensor.name, kind=self._sensor.kind,
-            joules=Sensor.joules(self._start, end),
-            watts=Sensor.watts(self._start, end),
-            seconds=Sensor.seconds(self._start, end),
-            start=self._start, end=end, label=self._label)
+        self._handle.__exit__(*exc)
+        m = self._handle.measurements[0]
+        # Old Region reported the caller's label verbatim (not a path).
+        self.measurement = dataclasses.replace(m, label=self._label)
         return False

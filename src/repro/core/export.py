@@ -1,0 +1,172 @@
+"""Structured export of resolved session regions.
+
+A :class:`repro.core.session.Session` resolves every finished region into
+one :class:`RegionRecord` per attached sensor and hands it to each
+registered exporter.  Exporters are deliberately dumb sinks — resolution
+(ring-buffer interpolation, nesting paths) happens in the session; an
+exporter only serialises.
+
+Built-in exporters:
+
+  * :class:`CsvExporter`   — one flushed CSV row per record (the
+    PowerMonitor energy-log format, generalised to arbitrary regions).
+  * :class:`JsonlExporter` — one JSON object per line; round-trips via
+    :func:`read_jsonl`.
+  * :class:`MemoryExporter` — in-memory record stream with subscriber
+    callbacks, for dashboards/tests that want records as they resolve.
+
+Exporters must tolerate concurrent ``emit`` calls: sessions resolve
+regions from whichever thread first asks for a measurement.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import threading
+from typing import Callable, List, Optional, TextIO
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionRecord:
+    """One sensor's resolved measurement of one session region."""
+
+    path: str            # nesting path, e.g. "serve/wave0/prefill"
+    label: str           # leaf label, e.g. "prefill"
+    depth: int           # nesting depth (0 = top-level region)
+    sensor: str
+    kind: str            # measured | modeled | hybrid
+    start_s: float       # sensor-clock timestamp at region entry
+    end_s: float         # sensor-clock timestamp at region exit
+    seconds: float
+    joules: float
+    watts: float
+    flops: Optional[float] = None
+    tokens: Optional[int] = None
+
+    def as_json(self) -> str:
+        d = dataclasses.asdict(self)
+        return json.dumps(d, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, line: str) -> "RegionRecord":
+        d = json.loads(line)
+        return cls(**d)
+
+
+class Exporter:
+    """Base class: override ``emit``; ``close`` is optional."""
+
+    def emit(self, record: RegionRecord) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class CsvExporter(Exporter):
+    """Append-mode CSV sink, one flushed line per record."""
+
+    HEADER = ("path,label,depth,sensor,kind,start_s,end_s,seconds,"
+              "joules,watts,flops,tokens\n")
+
+    def __init__(self, path: str):
+        self._lock = threading.Lock()
+        self._f: Optional[TextIO] = open(path, "a", buffering=1,
+                                         newline="")
+        self._writer = csv.writer(self._f, lineterminator="\n")
+        if self._f.tell() == 0:
+            self._f.write(self.HEADER)
+
+    def emit(self, r: RegionRecord) -> None:
+        with self._lock:
+            if self._f is None:
+                return
+            # csv.writer so user-supplied path/label survive commas.
+            self._writer.writerow([
+                r.path, r.label, r.depth, r.sensor, r.kind,
+                f"{r.start_s:.6f}", f"{r.end_s:.6f}", f"{r.seconds:.6f}",
+                f"{r.joules:.6f}", f"{r.watts:.3f}",
+                "" if r.flops is None else f"{r.flops:.0f}",
+                "" if r.tokens is None else r.tokens])
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+
+class JsonlExporter(Exporter):
+    """One JSON object per line; read back with :func:`read_jsonl`."""
+
+    def __init__(self, path: str):
+        self._lock = threading.Lock()
+        self._f: Optional[TextIO] = open(path, "a", buffering=1)
+
+    def emit(self, r: RegionRecord) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.write(r.as_json() + "\n")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+
+def read_jsonl(path: str) -> List[RegionRecord]:
+    """Parse a JSONL export back into records (skips blank lines)."""
+    out: List[RegionRecord] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(RegionRecord.from_json(line))
+    return out
+
+
+class MemoryExporter(Exporter):
+    """In-memory subscriber stream.
+
+    Keeps every emitted record in ``records`` (bounded by ``maxlen``) and
+    fans each one out to subscriber callbacks as it resolves — the seam a
+    live dashboard or a per-request energy attributor hangs off.
+    """
+
+    def __init__(self, maxlen: Optional[int] = None):
+        self._lock = threading.Lock()
+        self._records: List[RegionRecord] = []
+        self._maxlen = maxlen
+        self._subs: List[Callable[[RegionRecord], None]] = []
+
+    def subscribe(self, fn: Callable[[RegionRecord], None]) -> Callable[[], None]:
+        """Register ``fn`` for future records; returns an unsubscribe."""
+        with self._lock:
+            self._subs.append(fn)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                if fn in self._subs:
+                    self._subs.remove(fn)
+
+        return unsubscribe
+
+    def emit(self, r: RegionRecord) -> None:
+        with self._lock:
+            self._records.append(r)
+            if self._maxlen is not None and len(self._records) > self._maxlen:
+                del self._records[:len(self._records) - self._maxlen]
+            subs = list(self._subs)
+        for fn in subs:
+            fn(r)
+
+    @property
+    def records(self) -> List[RegionRecord]:
+        with self._lock:
+            return list(self._records)
+
+    def total_joules(self, sensor: Optional[str] = None) -> float:
+        return sum(r.joules for r in self.records
+                   if sensor is None or r.sensor == sensor)

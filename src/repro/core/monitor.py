@@ -5,6 +5,14 @@ attribution over one or more sensors, a CSV energy log, cumulative
 accounting that survives checkpoint/restart, and power-based straggler
 detection for the fault-tolerance stack.
 
+Since the ``pmt.Session`` redesign the monitor no longer polls sensors
+itself: ``measure_step`` opens a session region, so step energy resolves
+against the shared background ring sampler.  A monitor can run on its own
+session (default; sensors still shared via the process pool) or be handed
+an existing one, in which case the serve engine, the train loop, and the
+monitor all attach to the same sampler per backend instead of
+double-polling.
+
 JAX-awareness: dispatch is asynchronous, so a step is only attributed the
 energy between explicit ``block_until_ready`` boundaries — the caller (or
 the provided ``measure_step`` context manager, which blocks on exit if
@@ -19,10 +27,9 @@ import statistics
 import threading
 from typing import Dict, List, Optional, Sequence, TextIO, Union
 
-from repro.core import registry
 from repro.core.metrics import EfficiencyReport
 from repro.core.sensor import Sensor
-from repro.core.state import State
+from repro.core.session import Session
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,21 +55,33 @@ class PowerMonitor:
 
     Args:
       sensors: backend names or Sensor instances (stacked like the paper's
-        multi-decorator usage — e.g. ["cpuutil", "tpu"]).
+        multi-decorator usage — e.g. ["cpuutil", "tpu"]).  May be empty
+        when ``session`` already has backends attached.
       log_path: optional CSV energy log (append mode, crash-tolerant:
         one flushed line per step).
       initial_joules: cumulative joules carried over from a checkpoint.
+      session: an existing :class:`pmt.Session` to measure through; the
+        monitor attaches its sensors to it and does NOT close it.  When
+        omitted the monitor owns a private session on the shared pool.
     """
 
     CSV_HEADER = ("step,sensor,kind,joules,seconds,watts,flops,tokens,"
                   "gflops_per_watt,edp\n")
 
-    def __init__(self, sensors: Sequence[Union[str, Sensor]],
+    def __init__(self, sensors: Sequence[Union[str, Sensor]] = (),
                  log_path: Optional[str] = None,
-                 initial_joules: float = 0.0):
-        self.sensors: List[Sensor] = [
-            s if isinstance(s, Sensor) else registry.create(s)
-            for s in sensors]
+                 initial_joules: float = 0.0,
+                 session: Optional[Session] = None):
+        self._owns_session = session is None
+        self._session = session if session is not None else Session()
+        try:
+            for s in sensors:
+                self._session.attach(s)
+        except BaseException:
+            if self._owns_session:
+                self._session.close()
+            raise
+        self.sensors: List[Sensor] = self._session.sensors
         if not self.sensors:
             raise ValueError("PowerMonitor needs at least one sensor")
         self._records: List[StepEnergy] = []
@@ -74,29 +93,35 @@ class PowerMonitor:
             if self._log.tell() == 0:
                 self._log.write(self.CSV_HEADER)
 
+    @property
+    def session(self) -> Session:
+        return self._session
+
     # -- per-step measurement --------------------------------------------
     @contextlib.contextmanager
     def measure_step(self, step: int, flops: Optional[float] = None,
                      tokens: Optional[int] = None):
         """Context manager measuring one fenced step across all sensors.
 
+        A thin wrapper over ``session.region(...)`` — entry/exit touch no
+        sensors on this thread; the step resolves against the shared ring
+        buffer at exit (at most one closing sample per backend).
+
         The caller must ensure device work is complete before the block
         exits (``jax.block_until_ready`` on the step outputs).
         """
-        starts = [s.read() for s in self.sensors]
+        handle = self._session.region(f"step{step}", flops=flops,
+                                      tokens=tokens)
         box = _StepBox()
+        handle.__enter__()
         try:
             yield box
         finally:
-            ends = [s.read() for s in self.sensors]
-            recs = []
-            for sensor, st, en in zip(self.sensors, starts, ends):
-                recs.append(StepEnergy(
-                    step=step, sensor=sensor.name, kind=sensor.kind,
-                    joules=Sensor.joules(st, en),
-                    seconds=Sensor.seconds(st, en),
-                    watts=Sensor.watts(st, en),
-                    flops=flops, tokens=tokens))
+            handle.__exit__(None, None, None)
+            recs = [StepEnergy(
+                step=step, sensor=m.sensor, kind=m.kind, joules=m.joules,
+                seconds=m.seconds, watts=m.watts, flops=flops,
+                tokens=tokens) for m in handle.measurements]
             with self._lock:
                 self._records.extend(recs)
                 self._cumulative_joules += sum(r.joules for r in recs)
@@ -138,12 +163,17 @@ class PowerMonitor:
         if self._log is not None:
             self._log.close()
             self._log = None
+        if self._owns_session:
+            self._session.close()
 
 
 class _StepBox:
     """Filled with the step's records when measure_step exits."""
 
-    records: List[StepEnergy] = ()
+    def __init__(self):
+        # Instance attribute, not a shared class-level default: two
+        # concurrent steps must never see each other's records.
+        self.records: List[StepEnergy] = []
 
 
 # -- fleet-level straggler detection (fault-tolerance integration) ---------

@@ -23,9 +23,21 @@ def backend_names() -> List[str]:
 
 
 def available_backend_names() -> List[str]:
-    """Backends that can actually produce readings on this host."""
+    """Backends that can actually produce readings on this host.
+
+    A backend whose ``is_available()`` itself raises (broken sysfs tree,
+    driver missing mid-probe) is treated as unavailable rather than
+    letting one bad backend take down enumeration for all of them.
+    """
     _ensure_builtin()
-    return sorted(n for n, c in _REGISTRY.items() if c.is_available())
+    out = []
+    for n, c in _REGISTRY.items():
+        try:
+            if c.is_available():
+                out.append(n)
+        except Exception:
+            continue
+    return sorted(out)
 
 
 def get_backend(name: str):

@@ -17,9 +17,9 @@ RAPL-500ms observation), so requests below the floor are clamped.
 """
 from __future__ import annotations
 
-import collections
+import bisect
 import threading
-from typing import Deque, List, Optional
+from typing import List, Optional, Tuple
 
 from repro.core.dumpfile import DumpWriter
 from repro.core.sensor import Sensor
@@ -89,23 +89,78 @@ class DumpThread(_PeriodicThread):
 
 
 class RingSampler(_PeriodicThread):
-    """In-memory sampler with a bounded ring buffer of States."""
+    """In-memory sampler with a bounded buffer of timestamp-ordered States.
+
+    This is the shared sampling service behind ``pmt.Session``: one ring
+    per backend, many consumers resolving their region spans against it
+    by timestamp instead of issuing synchronous reads on their own hot
+    paths (see repro.core.session).
+
+    The buffer holds samples in non-decreasing timestamp order — the
+    read *and* the append are serialised by ``_sample_lock``, otherwise
+    two concurrent ``sample_now`` calls could append out of order and
+    break the bisect-based span resolution.  ``_buf_lock`` guards only
+    the list mutation, so ``window``/``snapshot`` readers never wait on
+    sensor I/O (RAPL/NVML reads take milliseconds).  When the buffer
+    exceeds ``maxlen`` the older half is compacted away (amortised
+    O(1)/append).
+    """
 
     def __init__(self, sensor: Sensor, period_s: Optional[float] = None,
                  maxlen: int = 100_000):
         super().__init__(clamp_period(sensor, period_s))
         self._sensor = sensor
-        self._buf: Deque[State] = collections.deque(maxlen=maxlen)
+        self._maxlen = maxlen
+        self._buf: List[State] = []
+        self._ts: List[float] = []
+        self._sample_lock = threading.Lock()
         self._buf_lock = threading.Lock()
 
+    @property
+    def sensor(self) -> Sensor:
+        return self._sensor
+
     def _tick(self) -> None:
-        st = self._sensor.read()
+        with self._sample_lock:
+            st = self._sensor.read()
+            with self._buf_lock:
+                self._buf.append(st)
+                self._ts.append(st.timestamp_s)
+                if len(self._buf) > self._maxlen:
+                    half = len(self._buf) // 2
+                    del self._buf[:half]
+                    del self._ts[:half]
+
+    def sample_now(self) -> State:
+        """Take one sample on the calling thread, off the period.
+
+        Used by span resolution to close an interval the background
+        thread has not reached yet; safe to call concurrently with the
+        thread (read + append are a single critical section).
+        """
+        self._tick()
         with self._buf_lock:
-            self._buf.append(st)
+            return self._buf[-1]
+
+    def window(self, t0: float, t1: float
+               ) -> Tuple[List[State], List[float]]:
+        """Samples bracketing ``[t0, t1]``: the last one at/before t0
+        through the first one after t1.  O(log n + window) — resolution
+        never copies the whole buffer."""
+        with self._buf_lock:
+            lo = bisect.bisect_right(self._ts, t0) - 1
+            if lo < 0:
+                lo = 0
+            hi = bisect.bisect_right(self._ts, t1) + 1
+            return self._buf[lo:hi], self._ts[lo:hi]
 
     def snapshot(self) -> List[State]:
         with self._buf_lock:
             return list(self._buf)
+
+    def last(self) -> Optional[State]:
+        with self._buf_lock:
+            return self._buf[-1] if self._buf else None
 
     def __enter__(self) -> "RingSampler":
         self.start()

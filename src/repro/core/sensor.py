@@ -89,6 +89,15 @@ class Sensor(abc.ABC):
         """Read the backend once. Must be cheap and thread-safe."""
 
     # -- public PMT API ---------------------------------------------------
+    def now(self) -> float:
+        """Current time on this sensor's clock (the ``State`` timebase).
+
+        Session regions timestamp their spans with this so they resolve
+        against ring-buffer samples taken by the same clock — including
+        injected virtual clocks in tests.
+        """
+        return self._clock()
+
     def read(self) -> State:
         """Take one reading, returning a :class:`State`.
 

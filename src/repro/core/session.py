@@ -1,0 +1,574 @@
+"""``pmt.Session`` — the unified measurement facade.
+
+The paper exposes three modes (read-pairs, decorators, dump files); this
+reproduction additionally grew a ``PowerMonitor`` for the training loop.
+Each of those constructed and polled its own sensors, which means (a)
+blocking ``_sample()`` calls on the caller's hot path and (b) N private
+copies of the same backend when the serve engine, train loop, and a
+decorator all measure at once.
+
+A :class:`Session` inverts that: sensors live in a refcounted
+:class:`SensorPool` (one shared, lazily-started background
+:class:`~repro.core.sampler.RingSampler` per backend), and consumers open
+*regions*::
+
+    with pmt.Session(["cpuutil", "tpu"]) as sess:
+        with sess.region("prefill"):
+            ...
+        with sess.region("decode", tokens=128) as r:
+            ...
+    print(r.measurements.total_joules())
+
+Region entry/exit only reads the sensor clock and appends a span — no
+sensor I/O on the caller's thread.  Spans resolve lazily against the ring
+buffer (linear interpolation of the cumulative-joules counter at the two
+span timestamps; one on-demand closing sample if the background thread
+has not covered the span yet).  Regions nest (paths like
+``"serve/wave0/prefill"``) and are thread-safe, so concurrent serve
+requests can each open their own span against the same sampler.
+
+Resolved regions flow to pluggable exporters (see repro.core.export).
+
+The classic surfaces — ``@pmt.measure``, ``pmt.Region``, ``@pmt.dump``,
+``pmt.PowerMonitor`` — are thin shims drawing their sensors from the
+process-wide :func:`default_pool`, so everything in one process shares
+one sampler per backend.  :func:`default_session` is the implicit
+session behind the module-level :func:`region` convenience (and
+swappable via :func:`set_default_session`)::
+
+    pmt.region("roi", backends=["cpuutil"])   # implicit-session region
+"""
+from __future__ import annotations
+
+import atexit
+import bisect
+import collections
+import itertools
+import threading
+from typing import (Any, Deque, Dict, List, Optional, Sequence, Tuple,
+                    Union)
+
+from repro.core import registry
+from repro.core.export import Exporter, RegionRecord
+from repro.core.sampler import RingSampler
+from repro.core.sensor import Sensor, SensorError
+from repro.core.state import State
+
+BackendSpec = Union[str, Sensor]
+
+
+# ---------------------------------------------------------------------------
+# SensorPool — refcounted shared sensors + ring samplers
+# ---------------------------------------------------------------------------
+
+class SensorLease:
+    """A consumer's handle on a pooled sensor.
+
+    Holding a lease pins the sensor (and, for sampling leases, its
+    background ring sampler) alive; ``release()`` — or releasing the
+    owning session — lets the pool stop the sampler once the last
+    sampling consumer detaches.
+    """
+
+    def __init__(self, pool: "SensorPool", key: Any, sensor: Sensor,
+                 sampling: bool):
+        self._pool = pool
+        self._key = key
+        self.sensor = sensor
+        self.sampling = sampling
+        self._released = False
+
+    @property
+    def sampler(self) -> Optional[RingSampler]:
+        return self._pool._sampler_for(self._key)
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._pool._release(self._key, self.sampling)
+
+    def __repr__(self):
+        return (f"<SensorLease {self.sensor.name!r} "
+                f"sampling={self.sampling}>")
+
+
+class _PoolEntry:
+    __slots__ = ("sensor", "sampler", "refs", "sampling_refs", "period_s")
+
+    def __init__(self, sensor: Sensor, period_s: Optional[float]):
+        self.sensor = sensor
+        self.sampler: Optional[RingSampler] = None
+        self.refs = 0
+        self.sampling_refs = 0
+        self.period_s = period_s
+
+
+class SensorPool:
+    """Refcounted registry of live sensors and their ring samplers.
+
+    Keyed by ``(backend name, construction kwargs)`` — two consumers
+    asking for ``"cpuutil"`` get the *same* sensor and the same background
+    sampler; passing an existing :class:`Sensor` instance pools by
+    identity so framework-owned sensors can be shared too.  The sampler
+    starts lazily with the first sampling consumer and stops (joined)
+    when the last one releases.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: Dict[Any, _PoolEntry] = {}
+
+    @staticmethod
+    def _key_for(spec: BackendSpec, kwargs: Dict[str, Any]) -> Any:
+        if isinstance(spec, Sensor):
+            return ("instance", id(spec))
+        try:
+            return (spec, tuple(sorted(kwargs.items())))
+        except TypeError:
+            # unhashable kwarg (rare): fall back to a repr key so at
+            # least identical reprs still share.
+            return (spec, repr(sorted(kwargs.items(), key=lambda kv: kv[0])))
+
+    def acquire(self, spec: BackendSpec, *, sampling: bool = True,
+                period_s: Optional[float] = None,
+                **backend_kwargs) -> SensorLease:
+        """Check out a shared sensor (and its sampler when ``sampling``)."""
+        key = self._key_for(spec, backend_kwargs)
+        start_sampler: Optional[RingSampler] = None
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                sensor = (spec if isinstance(spec, Sensor)
+                          else registry.create(spec, **backend_kwargs))
+                entry = _PoolEntry(sensor, period_s)
+                self._entries[key] = entry
+            entry.refs += 1
+            if sampling:
+                entry.sampling_refs += 1
+                if entry.sampler is None:
+                    entry.sampler = RingSampler(
+                        entry.sensor, period_s=period_s or entry.period_s)
+                    start_sampler = entry.sampler
+        if start_sampler is not None:
+            # Start outside the pool lock; seed one synchronous sample so
+            # every span opened after acquire has a left bracket.
+            start_sampler.start()
+            start_sampler.sample_now()
+        return SensorLease(self, key, entry.sensor, sampling)
+
+    def _sampler_for(self, key: Any) -> Optional[RingSampler]:
+        with self._lock:
+            entry = self._entries.get(key)
+            return entry.sampler if entry is not None else None
+
+    def _release(self, key: Any, sampling: bool) -> None:
+        stop_sampler: Optional[RingSampler] = None
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                return
+            entry.refs -= 1
+            if sampling:
+                entry.sampling_refs -= 1
+                if entry.sampling_refs <= 0 and entry.sampler is not None:
+                    stop_sampler = entry.sampler
+                    entry.sampler = None
+            if entry.refs <= 0:
+                del self._entries[key]
+        if stop_sampler is not None:
+            stop_sampler.stop(join=True)
+
+    def live_sampler_count(self) -> int:
+        with self._lock:
+            return sum(1 for e in self._entries.values()
+                       if e.sampler is not None)
+
+    def close(self) -> None:
+        """Force-stop every sampler (process shutdown path)."""
+        with self._lock:
+            samplers = [e.sampler for e in self._entries.values()
+                        if e.sampler is not None]
+            self._entries.clear()
+        for s in samplers:
+            s.stop(join=True)
+
+
+_default_pool = SensorPool()
+
+
+def default_pool() -> SensorPool:
+    """The process-wide pool the implicit default session draws from."""
+    return _default_pool
+
+
+# ---------------------------------------------------------------------------
+# Span resolution — interpolate the cumulative-joules counter
+# ---------------------------------------------------------------------------
+
+def _joules_at(samples: Sequence[State], ts: Sequence[float], t: float
+               ) -> float:
+    """Cumulative joules at sensor-clock time ``t``, linearly interpolated.
+
+    Clamps outside the sampled range (the resolver takes a closing sample
+    first, so clamping only under-counts by less than one period at the
+    open end).  Duplicate timestamps (virtual clocks) collapse to the
+    later sample, which carries the up-to-date counter.
+    """
+    if not samples:
+        raise SensorError("ring buffer empty; sampler not started?")
+    i = bisect.bisect_right(ts, t)
+    if i <= 0:
+        return samples[0].joules
+    if i >= len(samples):
+        return samples[-1].joules
+    lo, hi = samples[i - 1], samples[i]
+    dt = hi.timestamp_s - lo.timestamp_s
+    if dt <= 0.0:
+        return hi.joules
+    frac = (t - lo.timestamp_s) / dt
+    return lo.joules + frac * (hi.joules - lo.joules)
+
+
+class _Span:
+    """An unresolved region interval: timestamps only, no sensor data."""
+
+    __slots__ = ("path", "label", "depth", "flops", "tokens",
+                 "t0", "t1", "snap", "resolved")
+
+    def __init__(self, path: str, label: str, depth: int,
+                 flops: Optional[float], tokens: Optional[int],
+                 t0: Dict[Any, float], snap):
+        self.path = path
+        self.label = label
+        self.depth = depth
+        self.flops = flops
+        self.tokens = tokens
+        self.t0 = t0                      # pool key -> entry timestamp
+        self.t1: Dict[Any, float] = {}    # pool key -> exit timestamp
+        self.snap = snap                  # clock snapshot at entry
+        self.resolved: Optional["Measurements"] = None
+
+
+class RegionHandle:
+    """Context manager for one region; resolves lazily after exit.
+
+    Entry/exit are non-blocking (clock reads + list append).  Accessing
+    :attr:`measurements` after exit resolves the span against the ring
+    buffers — taking at most one closing sample per sensor — caches the
+    result, and emits one :class:`RegionRecord` per sensor to the
+    session's exporters.
+    """
+
+    def __init__(self, session: "Session", label: Optional[str],
+                 flops: Optional[float], tokens: Optional[int]):
+        self._session = session
+        self._label = label
+        self._flops = flops
+        self._tokens = tokens
+        self._span: Optional[_Span] = None
+
+    def __enter__(self) -> "RegionHandle":
+        self._span = self._session._open_span(self._label, self._flops,
+                                              self._tokens)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._session._close_span(self._span)
+        return False
+
+    @property
+    def measurements(self) -> "Measurements":
+        if self._span is None:
+            raise SensorError("region never entered")
+        if not self._span.t1:
+            raise SensorError("region still open; exit it before resolving")
+        return self._session._resolve(self._span)
+
+    @property
+    def measurement(self) -> "Measurement":
+        """First sensor's measurement (single-backend convenience)."""
+        return self.measurements[0]
+
+
+class Session:
+    """Shared-sampler measurement facade (see module docstring).
+
+    Args:
+      backends: backend names or Sensor instances this session measures
+        by default.  More can be attached later via :meth:`attach`.
+      pool: the SensorPool to draw sensors from; defaults to the
+        process-wide pool so independent sessions share samplers.
+      period_s: sampling period request, clamped per backend to its
+        ``native_period_s`` floor.
+      exporters: initial exporter sinks (see :mod:`repro.core.export`).
+      max_pending: bound on unresolved spans retained for ``flush()``;
+        oldest spans drop first (their handles still resolve — the bound
+        only limits what an eventual flush will export).
+    """
+
+    def __init__(self, backends: Sequence[BackendSpec] = (),
+                 *, pool: Optional[SensorPool] = None,
+                 period_s: Optional[float] = None,
+                 exporters: Sequence[Exporter] = (),
+                 max_pending: int = 65536):
+        self._pool = pool if pool is not None else default_pool()
+        self._period_s = period_s
+        self._lock = threading.Lock()
+        self._leases: "collections.OrderedDict[Any, SensorLease]" = \
+            collections.OrderedDict()
+        self._exporters: List[Exporter] = list(exporters)
+        # Serialises span resolution: two threads racing handle.measurements
+        # against flush() must not both compute/emit the same span.
+        self._resolve_lock = threading.Lock()
+        self._pending: Deque[_Span] = collections.deque(maxlen=max_pending)
+        self._tls = threading.local()
+        self._anon = itertools.count(1)
+        self._closed = False
+        # Hot-path snapshots: regions open/close without the session lock
+        # (tuple replacement is atomic; a momentarily stale snapshot just
+        # measures the backend set as of region entry).  The clock
+        # snapshot pre-binds each sensor's clock callable so a span
+        # timestamp is one call, no attribute dispatch.
+        self._lease_snapshot: Tuple[SensorLease, ...] = ()
+        self._clock_snapshot: Tuple[Tuple[Any, Any], ...] = ()
+        try:
+            for b in backends:
+                self.attach(b)
+        except BaseException:
+            # A later backend failed (typo'd name, probe error): release
+            # what was already acquired or its sampler outlives us.
+            self._release_leases()
+            raise
+
+    def _release_leases(self) -> None:
+        with self._lock:
+            leases = list(self._leases.values())
+            self._leases.clear()
+            self._lease_snapshot = ()
+            self._clock_snapshot = ()
+        for lease in leases:
+            lease.release()
+
+    # -- sensor management ---------------------------------------------------
+    def attach(self, backend: BackendSpec, **backend_kwargs) -> Sensor:
+        """Attach a backend to this session (idempotent), return its sensor."""
+        if self._closed:
+            raise SensorError("session is closed")
+        key = SensorPool._key_for(backend, backend_kwargs)
+        with self._lock:
+            lease = self._leases.get(key)
+            if lease is None:
+                lease = self._pool.acquire(
+                    backend, sampling=True, period_s=self._period_s,
+                    **backend_kwargs)
+                self._leases[key] = lease
+                self._lease_snapshot = tuple(self._leases.values())
+                self._clock_snapshot = tuple(
+                    (l._key, l.sensor._clock) for l in self._lease_snapshot)
+            return lease.sensor
+
+    @property
+    def sensors(self) -> List[Sensor]:
+        with self._lock:
+            return [lease.sensor for lease in self._leases.values()]
+
+    def add_exporter(self, exporter: Exporter) -> Exporter:
+        with self._lock:
+            self._exporters.append(exporter)
+        return exporter
+
+    # -- regions -------------------------------------------------------------
+    def region(self, label: Optional[str] = None, *,
+               flops: Optional[float] = None,
+               tokens: Optional[int] = None) -> RegionHandle:
+        """Open a (nestable, thread-safe, non-blocking) measured region."""
+        return RegionHandle(self, label, flops, tokens)
+
+    def _label_stack(self) -> List[str]:
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        return stack
+
+    def _open_span(self, label: Optional[str], flops: Optional[float],
+                   tokens: Optional[int]) -> _Span:
+        if self._closed:
+            raise SensorError("session is closed")
+        leases = self._lease_snapshot
+        if not leases:
+            raise SensorError(
+                "session has no backends; pass them to Session(...) or "
+                "call session.attach(...)")
+        if label is None:
+            label = f"region{next(self._anon)}"
+        stack = self._label_stack()
+        path = "/".join(stack + [label]) if stack else label
+        # Spans key their timestamps by pool key, not sensor name — two
+        # pooled sensors may share a name (same backend, different kwargs).
+        snap = self._clock_snapshot
+        span = _Span(path, label, len(stack), flops, tokens,
+                     {k: clk() for k, clk in snap}, snap)
+        stack.append(label)
+        return span
+
+    def _close_span(self, span: Optional[_Span]) -> None:
+        if span is None:
+            return
+        snap = self._clock_snapshot
+        if snap is span.snap:        # common case: backend set unchanged
+            span.t1 = {k: clk() for k, clk in snap}
+        else:                        # a backend attached mid-span
+            t0 = span.t0
+            span.t1 = {k: clk() for k, clk in snap if k in t0}
+        stack = self._label_stack()
+        if stack and stack[-1] == span.label:
+            stack.pop()
+        self._pending.append(span)
+
+    def _resolve(self, span: _Span) -> "Measurements":
+        from repro.core.decorators import Measurement, Measurements
+
+        with self._resolve_lock:
+            if span.resolved is not None:
+                return span.resolved
+            with self._lock:
+                leases = [l for l in self._leases.values()
+                          if l._key in span.t1]
+            out = Measurements()
+            records: List[RegionRecord] = []
+            for lease in leases:
+                name = lease.sensor.name
+                t0, t1 = span.t0[lease._key], span.t1[lease._key]
+                sampler = lease.sampler
+                if sampler is None:
+                    raise SensorError(f"sampler for {name!r} already stopped")
+                samples, ts = sampler.window(t0, t1)
+                if not samples or ts[-1] < t1:
+                    sampler.sample_now()
+                    samples, ts = sampler.window(t0, t1)
+                j0 = _joules_at(samples, ts, t0)
+                j1 = _joules_at(samples, ts, t1)
+                joules = max(0.0, j1 - j0)
+                secs = t1 - t0
+                watts = joules / secs if secs > 0 else 0.0
+                # States synthesized at the span endpoints, so downstream
+                # code written against read()-pair results keeps working.
+                start = State(timestamp_s=t0, joules=j0)
+                end = State(timestamp_s=t1, joules=j1)
+                out.append(Measurement(
+                    sensor=name, kind=lease.sensor.kind, joules=joules,
+                    watts=watts, seconds=secs, start=start, end=end,
+                    label=span.path))
+                records.append(RegionRecord(
+                    path=span.path, label=span.label, depth=span.depth,
+                    sensor=name, kind=lease.sensor.kind, start_s=t0, end_s=t1,
+                    seconds=secs, joules=joules, watts=watts,
+                    flops=span.flops, tokens=span.tokens))
+            span.resolved = out
+            with self._lock:
+                exporters = list(self._exporters)
+            for exp in exporters:
+                for rec in records:
+                    exp.emit(rec)
+            return out
+
+    def flush(self) -> List["Measurements"]:
+        """Resolve every pending span (emitting to exporters); drain them.
+
+        Spans join the pending queue only when their region exits, so
+        everything here is closed and resolvable.
+        """
+        out = []
+        while True:
+            try:
+                span = self._pending.popleft()
+            except IndexError:
+                return out
+            out.append(self._resolve(span))
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Flush, close exporters, release every lease (idempotent)."""
+        if self._closed:
+            return
+        self.flush()
+        self._closed = True
+        with self._lock:
+            exporters = list(self._exporters)
+            self._exporters.clear()
+        self._release_leases()
+        for exp in exporters:
+            exp.close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def __repr__(self):
+        names = [s.name for s in self.sensors]
+        return f"<Session backends={names} closed={self._closed}>"
+
+
+# ---------------------------------------------------------------------------
+# Implicit default session — what the legacy shims ride on
+# ---------------------------------------------------------------------------
+
+_default_session: Optional[Session] = None
+_default_lock = threading.Lock()
+
+
+def default_session() -> Session:
+    """The process-wide implicit session behind module-level ``region``.
+
+    Created lazily with no backends (``region(..., backends=...)``
+    attaches what it needs) and torn down at interpreter exit.  It
+    draws from the same :func:`default_pool` as the classic shims, so
+    everything shares one sampler per backend either way.
+    """
+    global _default_session
+    with _default_lock:
+        if _default_session is None or _default_session._closed:
+            _default_session = Session(pool=default_pool())
+        return _default_session
+
+
+def region(label: Optional[str] = None, *,
+           backends: Sequence[BackendSpec] = (),
+           flops: Optional[float] = None,
+           tokens: Optional[int] = None) -> RegionHandle:
+    """Open a region on the implicit default session::
+
+        with pmt.region("roi", backends=["cpuutil"]) as r:
+            work()
+        print(r.measurement)
+
+    ``backends`` attach to the default session (idempotent); omit them
+    once attached.  For anything beyond quick scripts, construct an
+    explicit :class:`Session`.
+    """
+    sess = default_session()
+    for b in backends:
+        sess.attach(b)
+    return sess.region(label, flops=flops, tokens=tokens)
+
+
+def set_default_session(session: Optional[Session]) -> Optional[Session]:
+    """Swap the implicit default session; returns the previous one."""
+    global _default_session
+    with _default_lock:
+        prev, _default_session = _default_session, session
+        return prev
+
+
+@atexit.register
+def _shutdown() -> None:  # pragma: no cover - interpreter teardown
+    with _default_lock:
+        sess = _default_session
+    if sess is not None:
+        try:
+            sess.close()
+        except Exception:
+            pass

@@ -1,0 +1,12 @@
+"""Pallas-TPU API compatibility.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` across
+jax releases; resolve whichever this interpreter ships so the kernels
+run on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

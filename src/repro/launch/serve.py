@@ -32,9 +32,13 @@ def main(argv=None):
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
     params, _ = model_mod.init_params(jax.random.PRNGKey(args.seed), cfg)
-    monitor = pmt.PowerMonitor(["cpuutil", "tpu"])
+    # One session shared by the monitor and the engine: one background
+    # sampler per backend, every wave a region resolved off its ring.
+    session = pmt.Session(["cpuutil", "tpu"])
+    monitor = pmt.PowerMonitor(session=session)
     engine = ServeEngine(cfg, params, batch_size=args.batch,
-                         max_len=args.max_len, monitor=monitor)
+                         max_len=args.max_len, monitor=monitor,
+                         session=session)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
@@ -49,6 +53,7 @@ def main(argv=None):
     print(f"served {len(done)} requests, {n_tokens} tokens, "
           f"{j:.2f} J total, {j / max(n_tokens, 1):.4f} J/token")
     monitor.close()
+    session.close()
 
 
 if __name__ == "__main__":

@@ -31,7 +31,8 @@ from repro.launch.mesh import base_rules, make_production_mesh, \
     make_smoke_mesh
 from repro.optim.optimizers import OptimizerConfig
 from repro.sharding.specs import axis_rules
-from repro.train.steps import init_train_state, make_train_step
+from repro.train.steps import (init_train_state, make_measured_train_step,
+                               make_train_step)
 
 
 def parse_args(argv=None):
@@ -50,6 +51,8 @@ def parse_args(argv=None):
     ap.add_argument("--mesh", choices=["smoke", "prod", "prod2"],
                     default="smoke")
     ap.add_argument("--energy-log", default="")
+    ap.add_argument("--energy-jsonl", default="",
+                    help="structured per-region JSONL export path")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     return ap.parse_args(argv)
@@ -73,8 +76,14 @@ def main(argv=None):
                       global_batch=args.batch, seed=args.seed)
     ds = SyntheticLMDataset(dcfg)
 
-    monitor = pmt.PowerMonitor(
-        ["cpuutil", "tpu"], log_path=args.energy_log or None)
+    # One shared measurement session for the whole run: the monitor, any
+    # serve engine, and ad-hoc regions all resolve off the same background
+    # sampler per backend (drawn from the process-wide pool).
+    session = pmt.Session(["cpuutil", "tpu"])
+    if args.energy_jsonl:
+        session.add_exporter(pmt.JsonlExporter(args.energy_jsonl))
+    monitor = pmt.PowerMonitor(log_path=args.energy_log or None,
+                               session=session)
     mgr = (CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
            if args.ckpt_dir else None)
 
@@ -86,20 +95,20 @@ def main(argv=None):
             state, meta = restore(args.ckpt_dir, state)
             start_step = meta.data_step
             monitor = pmt.PowerMonitor(
-                ["cpuutil", "tpu"], log_path=args.energy_log or None,
-                initial_joules=meta.cumulative_joules)
+                log_path=args.energy_log or None,
+                initial_joules=meta.cumulative_joules, session=session)
             print(f"resumed step={meta.step} "
                   f"joules={meta.cumulative_joules:.1f}")
 
         step_fn = jax.jit(make_train_step(cfg, ocfg,
                                           microbatches=args.microbatches))
         tokens_per_step = args.batch * args.seq
+        measured_step = make_measured_train_step(
+            step_fn, monitor, tokens_per_step=tokens_per_step)
         t_start = time.time()
         for s in range(start_step + 1, args.steps + 1):
             batch = {k: jnp.asarray(v) for k, v in ds.batch(s).items()}
-            with monitor.measure_step(s, tokens=tokens_per_step) as box:
-                state, metrics = step_fn(state, batch)
-                jax.block_until_ready(metrics["loss"])
+            state, metrics, box = measured_step(state, batch, s)
             if mgr:
                 sd = monitor.state_dict()
                 mgr.maybe_save(s, state, CheckpointMeta(
@@ -121,6 +130,7 @@ def main(argv=None):
           f"total energy {monitor.cumulative_joules:.1f} J "
           f"(cpuutil measured + tpu modeled)")
     monitor.close()
+    session.close()
     return state
 
 

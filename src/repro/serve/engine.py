@@ -10,11 +10,16 @@ are refilled between sequences — sequence-granularity continuous
 batching).  Per-slot position counters would need per-row cache scatter;
 documented as the production follow-up in DESIGN.md.
 
-PMT integration: the engine owns a PowerMonitor and reports J/token —
-the paper's energy-efficiency metric applied to serving.
+PMT integration: each wave runs inside a ``pmt.Session`` region, so the
+engine shares one background sampler per backend with the train loop and
+any monitors on the same session (no per-wave blocking sensor reads on
+the serving thread), and reports J/token — the paper's energy-efficiency
+metric applied to serving.  Passing a ``PowerMonitor`` still works; the
+monitor itself now routes through a session.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -59,15 +64,25 @@ class Request:
 
 
 class ServeEngine:
-    """Synchronized batched decoding over fixed slots."""
+    """Synchronized batched decoding over fixed slots.
+
+    Measurement plumbing (either or both may be given):
+      session: a ``pmt.Session`` — each wave becomes a nested region
+        (``serve/wave<N>``) resolved off the shared ring sampler.
+      monitor: a ``PowerMonitor`` — kept for J/token accounting and
+        back-compat; pass ``monitor.session`` as ``session`` to share
+        one sampler between both (see launch/serve.py).
+    """
 
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
-                 max_len: int, monitor=None):
+                 max_len: int, monitor=None, session=None):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.monitor = monitor
+        self.session = session
+        self._wave_count = 0
         self._prefill = jax.jit(make_prefill_fn(cfg, max_len))
         self._decode = jax.jit(make_decode_fn(cfg))
 
@@ -78,6 +93,14 @@ class ServeEngine:
             wave = requests[i:i + self.batch]
             done.extend(self._run_wave(wave))
         return done
+
+    def _measure_ctx(self, wave_id: int, tokens: int):
+        if self.monitor is not None:
+            return self.monitor.measure_step(wave_id, tokens=tokens)
+        if self.session is not None:
+            return self.session.region(f"serve/wave{wave_id}",
+                                       tokens=tokens)
+        return contextlib.nullcontext()
 
     def _run_wave(self, wave: List[Request]) -> List[Request]:
         b = self.batch
@@ -91,9 +114,9 @@ class ServeEngine:
                 (b, self.cfg.enc_len, self.cfg.d_model), jnp.bfloat16)
 
         steps = max(r.max_new_tokens for r in wave)
-        ctx = (self.monitor.measure_step(0, tokens=b * steps)
-               if self.monitor else _null_ctx())
-        with ctx:
+        wave_id = self._wave_count
+        self._wave_count += 1
+        with self._measure_ctx(wave_id, tokens=b * steps):
             nxt, caches = self._prefill(self.params, batch)
             nxt = nxt[:, None]
             cur = plen
@@ -108,11 +131,3 @@ class ServeEngine:
         for j, r in enumerate(wave):
             r.out = gen[j, :r.max_new_tokens].tolist()
         return wave
-
-
-class _null_ctx:
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *a):
-        return False

@@ -9,11 +9,17 @@ Microbatch accumulation (``microbatches > 1``) is a Python-unrolled loop
 (not lax.scan) for two reasons: XLA overlaps each microbatch's gradient
 reduction with the next microbatch's compute (async collectives), and the
 roofline accounting stays exact (scan bodies are cost-counted once).
+
+Energy measurement goes through a shared ``pmt.Session``
+(:func:`make_measured_train_step`): the step runs inside a session
+region fenced by ``block_until_ready``, so the train loop resolves its
+per-step energy off the same background sampler the serve engine and any
+monitors use — no blocking sensor reads interleaved with dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,3 +90,28 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
         return TrainState(params=params, opt=opt), metrics
 
     return train_step
+
+
+def make_measured_train_step(step_fn: Callable, monitor,
+                             tokens_per_step: Optional[int] = None,
+                             flops_per_step: Optional[float] = None,
+                             fence_key: str = "loss"):
+    """Wrap a (jitted) train step with fenced PMT measurement.
+
+    ``monitor`` is a :class:`repro.core.PowerMonitor`; its session region
+    brackets the step, and ``metrics[fence_key]`` is blocked on before
+    the region exits so asynchronous dispatch can't leak a step's tail
+    into its successor.
+
+    Returns ``measured(state, batch, step) -> (state, metrics, box)``
+    where ``box.records`` carries the step's :class:`StepEnergy` rows.
+    """
+
+    def measured(state, batch, step: int):
+        with monitor.measure_step(step, flops=flops_per_step,
+                                  tokens=tokens_per_step) as box:
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics[fence_key])
+        return state, metrics, box
+
+    return measured

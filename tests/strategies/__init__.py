@@ -1,0 +1,159 @@
+"""Shared Hypothesis strategies + settings profiles for property tests.
+
+Import ``given`` / ``settings`` / ``st`` from here instead of from
+``hypothesis`` directly::
+
+    from strategies import HAS_HYPOTHESIS, given, settings, st
+
+Where hypothesis is installed this re-exports the real thing, registers
+the shared settings profiles (``ci`` / ``dev``; select with the
+``HYPOTHESIS_PROFILE`` env var), and exposes ``STANDARD_SETTINGS`` /
+``THOROUGH_SETTINGS`` decorators for consistent test intensity.
+
+Where hypothesis is **absent** (the minimal container), property tests
+degrade gracefully instead of killing collection: the fallback ``given``
+runs each test against a small deterministic grid of in-bounds values
+drawn from the declared ``st.floats`` strategies — far weaker than real
+property testing, but the identities still get exercised and the rest of
+the suite still runs.
+"""
+from __future__ import annotations
+
+import os
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.register_profile("dev", max_examples=100, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+
+    STANDARD_SETTINGS = settings(max_examples=50, deadline=None)
+    THOROUGH_SETTINGS = settings(max_examples=500, deadline=None)
+
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    import random
+
+    class _Strategy:
+        """Base stand-in: boundary examples + seeded random draws."""
+
+        def fixed(self):
+            return []
+
+        def one(self, rng: random.Random):  # pragma: no cover - abstract
+            raise NotImplementedError
+
+        def draws(self, rng: random.Random, n: int):
+            out = list(self.fixed())[:n]
+            while len(out) < n:
+                out.append(self.one(rng))
+            return out
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0, **_):
+            self.lo = float(min_value)
+            self.hi = float(max_value)
+
+        def fixed(self):
+            return [self.lo, self.hi, 0.5 * (self.lo + self.hi)]
+
+        def one(self, rng):
+            return rng.uniform(self.lo, self.hi)
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=1, **_):
+            self.lo = int(min_value)
+            self.hi = int(max_value)
+
+        def fixed(self):
+            return [self.lo, self.hi, (self.lo + self.hi) // 2]
+
+        def one(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def fixed(self):
+            return [self.elements[0], self.elements[-1]]
+
+        def one(self, rng):
+            return rng.choice(self.elements)
+
+    class _Lists(_Strategy):
+        def __init__(self, elements: _Strategy, min_size=0, max_size=5, **_):
+            self.elements = elements
+            self.lo = int(min_size)
+            self.hi = int(max_size)
+
+        def one(self, rng):
+            size = rng.randint(self.lo, self.hi)
+            return [self.elements.one(rng) for _ in range(size)]
+
+    class _StFallback:
+        """Only what this repo's property tests use; extend as needed."""
+
+        floats = staticmethod(_Floats)
+        integers = staticmethod(_Integers)
+        sampled_from = staticmethod(_SampledFrom)
+        lists = staticmethod(_Lists)
+
+        def __getattr__(self, name):
+            raise NotImplementedError(
+                f"strategies fallback has no st.{name}; install hypothesis "
+                f"(see requirements-dev.txt) or add a stub here")
+
+    st = _StFallback()
+
+    _N_EXAMPLES = 5
+
+    def given(*pos_strategies, **kw_strategies):
+        """Deterministic-grid replacement for ``hypothesis.given``.
+
+        Positional strategies map to the test's positional parameters in
+        order; keyword strategies by name — the two styles this repo's
+        property tests use.
+        """
+
+        def decorate(fn):
+            def runner(*fargs, **fkwargs):
+                rng = random.Random(0)
+                pos_cols = [s.draws(rng, _N_EXAMPLES)
+                            for s in pos_strategies]
+                kw_cols = {name: strat.draws(rng, _N_EXAMPLES)
+                           for name, strat in kw_strategies.items()}
+                for i in range(_N_EXAMPLES):
+                    fn(*fargs, *[c[i] for c in pos_cols],
+                       **fkwargs,
+                       **{name: col[i] for name, col in kw_cols.items()})
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return decorate
+
+    def settings(*args, **kwargs):
+        """No-op replacement for ``hypothesis.settings`` (decorator form)."""
+        if args and callable(args[0]):   # used bare: @settings
+            return args[0]
+
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    def _identity(fn):
+        return fn
+
+    STANDARD_SETTINGS = _identity
+    THOROUGH_SETTINGS = _identity
+
+__all__ = ["HAS_HYPOTHESIS", "given", "settings", "st",
+           "STANDARD_SETTINGS", "THOROUGH_SETTINGS"]

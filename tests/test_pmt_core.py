@@ -5,8 +5,9 @@ import threading
 import time
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+# Shared strategies package: real hypothesis when installed, a
+# deterministic-grid fallback otherwise (see tests/strategies).
+from strategies import HAS_HYPOTHESIS, given, settings, st
 
 import repro.core as pmt
 from repro.core.sensor import Sample, Sensor, SensorError

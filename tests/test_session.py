@@ -1,0 +1,408 @@
+"""Tests for the unified pmt.Session API: shared sampling service,
+nested non-blocking regions, pool refcounting, exporters, and the
+backward-compat shims that ride on the default session."""
+import threading
+import time
+
+import pytest
+
+import repro.core as pmt
+from repro.core.sensor import Sample, Sensor
+from repro.core.session import SensorPool, Session
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# Regions: resolution correctness, nesting, concurrency
+# ---------------------------------------------------------------------------
+
+def test_region_resolves_exact_joules_with_virtual_clock():
+    clk = FakeClock()
+    sensor = pmt.create("dummy", watts=100.0, clock=clk)
+    with Session([sensor], pool=SensorPool()) as sess:
+        with sess.region("roi") as r:
+            clk.advance(2.0)
+        m = r.measurements[0]
+    # constant 100 W over 2 s, resolved off the ring buffer
+    assert m.joules == pytest.approx(200.0)
+    assert m.watts == pytest.approx(100.0)
+    assert m.seconds == pytest.approx(2.0)
+    assert m.label == "roi"
+
+
+def test_region_entry_exit_touch_no_sensor():
+    """The non-blocking contract: open/close must not call _sample()."""
+
+    class CountingSensor(Sensor):
+        name = "counting"
+        kind = "modeled"
+        native_period_s = 3600.0  # background thread effectively idle
+
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.samples = 0
+
+        def _sample(self):
+            self.samples += 1
+            return Sample(watts=1.0)
+
+    sensor = CountingSensor()
+    with Session([sensor], pool=SensorPool()) as sess:
+        time.sleep(0.05)                 # let the thread's initial tick land
+        before = sensor.samples          # pool seed + thread start samples
+        for _ in range(50):
+            with sess.region("hot"):
+                pass
+        assert sensor.samples == before  # zero reads on the hot path
+        sess.flush()                     # resolution may sample (off-path)
+    assert sensor.samples > before
+
+
+def test_nested_regions_paths_and_depth():
+    with Session(["dummy"], pool=SensorPool()) as sess:
+        mem = sess.add_exporter(pmt.MemoryExporter())
+        with sess.region("outer"):
+            with sess.region("mid"):
+                with sess.region("leaf"):
+                    pass
+        sess.flush()
+        paths = sorted((r.path, r.depth) for r in mem.records)
+    assert paths == [("outer", 0), ("outer/mid", 1), ("outer/mid/leaf", 2)]
+
+
+def test_concurrent_regions_from_many_threads():
+    clk_errors = []
+    with Session(["dummy"], pool=SensorPool()) as sess:
+        results = {}
+
+        def work(i):
+            try:
+                with sess.region(f"t{i}") as r:
+                    time.sleep(0.002)
+                results[i] = r.measurements[0]
+            except Exception as e:  # pragma: no cover
+                clk_errors.append(e)
+
+        threads = [threading.Thread(target=work, args=(i,))
+                   for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not clk_errors
+    assert len(results) == 16
+    for i, m in results.items():
+        assert m.label == f"t{i}"
+        assert m.seconds > 0 and m.joules >= 0.0
+
+
+def test_multi_sensor_aggregation():
+    with Session(["dummy", "tpu"], pool=SensorPool()) as sess:
+        with sess.region("both") as r:
+            time.sleep(0.005)
+        ms = r.measurements
+    assert {m.sensor for m in ms} == {"dummy", "tpu"}
+    assert ms.total_joules() >= 0.0
+    assert ms.by_sensor("tpu").kind == "modeled"
+
+
+def test_region_on_empty_session_raises():
+    with Session(pool=SensorPool()) as sess:
+        with pytest.raises(pmt.SensorError):
+            with sess.region("nope"):
+                pass
+
+
+def test_region_resolution_before_exit_raises():
+    with Session(["dummy"], pool=SensorPool()) as sess:
+        with sess.region("open") as r:
+            with pytest.raises(pmt.SensorError):
+                r.measurements
+
+
+# ---------------------------------------------------------------------------
+# SensorPool refcounting
+# ---------------------------------------------------------------------------
+
+def test_pool_shares_one_sampler_and_stops_on_last_detach():
+    pool = SensorPool()
+    a = pool.acquire("dummy")
+    b = pool.acquire("dummy")
+    assert a.sensor is b.sensor
+    sampler = a.sampler
+    assert sampler is b.sampler and sampler.is_alive()
+    assert pool.live_sampler_count() == 1
+
+    a.release()
+    assert sampler.is_alive()            # b still holds it
+    assert pool.live_sampler_count() == 1
+    b.release()
+    assert not sampler.is_alive()        # last consumer detached
+    assert pool.live_sampler_count() == 0
+
+
+def test_pool_release_is_idempotent():
+    pool = SensorPool()
+    a = pool.acquire("dummy")
+    b = pool.acquire("dummy")
+    a.release()
+    a.release()                          # double release must not steal b's ref
+    assert b.sampler is not None and b.sampler.is_alive()
+    b.release()
+    assert pool.live_sampler_count() == 0
+
+
+def test_pool_distinguishes_backend_kwargs():
+    pool = SensorPool()
+    a = pool.acquire("dummy", watts=5.0)
+    b = pool.acquire("dummy", watts=9.0)
+    try:
+        assert a.sensor is not b.sensor
+        assert pool.live_sampler_count() == 2
+    finally:
+        a.release()
+        b.release()
+
+
+def test_sessions_share_pool_sampler():
+    pool = SensorPool()
+    with Session(["dummy"], pool=pool) as s1:
+        with Session(["dummy"], pool=pool) as s2:
+            assert s1.sensors[0] is s2.sensors[0]
+            assert pool.live_sampler_count() == 1
+        assert pool.live_sampler_count() == 1    # s1 still attached
+    assert pool.live_sampler_count() == 0
+
+
+def test_failed_session_constructor_releases_acquired_leases():
+    pool = SensorPool()
+    with pytest.raises(KeyError):
+        Session(["dummy", "not-a-backend"], pool=pool)
+    # the dummy sampler acquired before the failure must not leak
+    assert pool.live_sampler_count() == 0
+
+
+def test_decorator_lease_released_when_wrapper_collected():
+    import gc
+
+    from repro.core.session import default_pool
+
+    sensor = pmt.create("dummy", watts=3.0)
+    wrapped = pmt.measure(sensor)(lambda: None)
+    key = ("instance", id(sensor))
+    assert key in default_pool()._entries
+    del wrapped
+    gc.collect()
+    assert key not in default_pool()._entries
+
+
+def test_monitor_on_shared_session_uses_same_sampler():
+    pool = SensorPool()
+    with Session(["dummy"], pool=pool) as sess:
+        mon = pmt.PowerMonitor(session=sess)
+        with mon.measure_step(0, tokens=4) as box:
+            time.sleep(0.002)
+        assert box.records and box.records[0].sensor == "dummy"
+        assert pool.live_sampler_count() == 1    # no second sampler
+        mon.close()                              # does not close shared session
+        with sess.region("still-works"):
+            pass
+    assert pool.live_sampler_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def test_jsonl_exporter_roundtrip(tmp_path):
+    path = str(tmp_path / "regions.jsonl")
+    clk = FakeClock()
+    sensor = pmt.create("dummy", watts=50.0, clock=clk)
+    with Session([sensor], pool=SensorPool(),
+                 exporters=[pmt.JsonlExporter(path)]) as sess:
+        with sess.region("a", tokens=32):
+            clk.advance(1.0)
+        with sess.region("b", flops=1e9):
+            clk.advance(0.5)
+        sess.flush()
+    recs = pmt.read_jsonl(path)
+    assert [r.path for r in recs] == ["a", "b"]
+    assert recs[0].joules == pytest.approx(50.0)
+    assert recs[0].tokens == 32 and recs[0].flops is None
+    assert recs[1].joules == pytest.approx(25.0)
+    assert recs[1].flops == pytest.approx(1e9) and recs[1].tokens is None
+    for r in recs:
+        assert isinstance(r, pmt.RegionRecord)
+        assert r.sensor == "dummy" and r.kind == "modeled"
+
+
+def test_csv_exporter_writes_header_and_rows(tmp_path):
+    path = str(tmp_path / "regions.csv")
+    with Session(["dummy"], pool=SensorPool(),
+                 exporters=[pmt.CsvExporter(path)]) as sess:
+        with sess.region("x"):
+            time.sleep(0.002)
+        sess.flush()
+    lines = open(path).read().strip().splitlines()
+    assert lines[0].startswith("path,label,depth,sensor")
+    assert len(lines) == 2 and lines[1].startswith("x,x,0,dummy")
+
+
+def test_csv_exporter_escapes_commas_in_labels(tmp_path):
+    import csv as csv_mod
+
+    path = str(tmp_path / "commas.csv")
+    with Session(["dummy"], pool=SensorPool(),
+                 exporters=[pmt.CsvExporter(path)]) as sess:
+        with sess.region("load, transform"):
+            pass
+        sess.flush()
+    with open(path, newline="") as f:
+        rows = list(csv_mod.reader(f))
+    assert len(rows) == 2
+    assert len(rows[1]) == len(rows[0])          # columns stay aligned
+    assert rows[1][0] == "load, transform"
+
+
+def test_memory_exporter_subscriber_stream():
+    seen = []
+    mem = pmt.MemoryExporter()
+    unsubscribe = mem.subscribe(seen.append)
+    with Session(["dummy"], pool=SensorPool(), exporters=[mem]) as sess:
+        with sess.region("one") as r:
+            pass
+        r.measurements          # resolution triggers emission
+        assert [x.path for x in seen] == ["one"]
+        unsubscribe()
+        with sess.region("two"):
+            pass
+        sess.flush()
+    assert [x.path for x in seen] == ["one"]     # unsubscribed before "two"
+    assert [x.path for x in mem.records] == ["one", "two"]
+    assert mem.total_joules() >= 0.0
+
+
+def test_records_emitted_exactly_once():
+    mem = pmt.MemoryExporter()
+    with Session(["dummy"], pool=SensorPool(), exporters=[mem]) as sess:
+        with sess.region("once") as r:
+            pass
+        r.measurements
+        r.measurements          # cached — must not re-emit
+        sess.flush()            # already resolved — must not re-emit
+    assert len(mem.records) == 1
+
+
+# ---------------------------------------------------------------------------
+# Backward-compat shims
+# ---------------------------------------------------------------------------
+
+def test_measure_shim_still_returns_measurements():
+    @pmt.measure("dummy")
+    def app():
+        time.sleep(0.002)
+        return "ok"
+
+    out = app()
+    assert isinstance(out, pmt.Measurements)
+    assert out.result == "ok"
+    assert out[0].sensor == "dummy"
+    assert out[0].joules == pytest.approx(out[0].watts * out[0].seconds,
+                                          rel=1e-6)
+
+
+def test_measure_shim_pools_sensors_across_decorators():
+    @pmt.measure("dummy")
+    def f():
+        return 1
+
+    @pmt.measure("dummy")
+    def g():
+        return 2
+
+    # The redesign's whole point: no private per-decorator sensors.
+    assert f.__pmt_sensors__[0] is g.__pmt_sensors__[0]
+    assert (f() .result, g().result) == (1, 2)
+
+
+def test_region_shim_resolves_only_its_backend():
+    with pmt.Region("dummy", label="roi") as r:
+        time.sleep(0.002)
+    m = r.measurement
+    assert m is not None and m.sensor == "dummy" and m.label == "roi"
+    assert m.seconds > 0
+
+
+def test_module_level_region_rides_default_session():
+    with pmt.region("quick", backends=["dummy"]) as r:
+        time.sleep(0.002)
+    m = r.measurement
+    assert m.sensor == "dummy" and m.seconds > 0
+    # backends stick to the default session once attached
+    with pmt.region("again") as r2:
+        pass
+    assert r2.measurements[0].sensor == "dummy"
+
+
+def test_dump_decorator_rejects_concurrent_runs(tmp_path):
+    path = str(tmp_path / "dump.pmt")
+    release = threading.Event()
+    errs = []
+
+    @pmt.dump("dummy", filename=path, period_s=0.005)
+    def slow():
+        release.wait(timeout=5.0)
+
+    t = threading.Thread(target=slow)
+    t.start()
+    time.sleep(0.02)          # first dump is live
+    try:
+        with pytest.raises(pmt.SensorError):
+            slow()            # second concurrent run must be refused
+    finally:
+        release.set()
+        t.join()
+    # sequential re-run is fine once the first finished
+    release.set()
+    slow()
+    hdr, recs = pmt.read_dump(path)
+    assert len(recs) >= 2
+
+
+def test_step_box_records_are_instance_scoped():
+    from repro.core.monitor import _StepBox
+
+    a, b = _StepBox(), _StepBox()
+    a.records.append("x")
+    assert b.records == []               # the old class-attribute footgun
+
+
+def test_available_backends_survive_broken_is_available():
+    class Broken(Sensor):
+        name = "broken"
+
+        @classmethod
+        def is_available(cls):
+            raise RuntimeError("probe exploded")
+
+        def _sample(self):
+            return Sample(watts=1.0)
+
+    pmt.register_backend("broken", Broken)
+    try:
+        names = pmt.available_backend_names()
+        assert "broken" not in names
+        assert "dummy" in names          # enumeration not taken down
+    finally:
+        from repro.core import registry
+        registry._REGISTRY.pop("broken", None)

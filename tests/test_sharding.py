@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+# Real hypothesis when installed; deterministic-grid fallback otherwise.
+from strategies import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.specs import (DEFAULT_RULES, logical_to_spec)

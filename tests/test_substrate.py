@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# Real hypothesis when installed; deterministic-grid fallback otherwise.
+from strategies import given, settings, st
 
 from repro.data.pipeline import (DataConfig, SyntheticLMDataset,
                                  host_batch_iterator)
