@@ -1,0 +1,114 @@
+"""Batch span-resolution throughput — scalar vs vectorized.
+
+The array-core resolver (repro.core.resolver) resolves many closed spans
+per backend in one pass: a single seqlock copy of the ring, one
+``np.searchsorted`` over every span endpoint, one fused interpolation of
+the cumulative-joules counter.  The previous revision resolved each span
+on its own: bisect over Python lists + scalar lerp, twice per span.
+
+This benchmark isolates that resolution math on a synthetic timeline
+(no sensors, no threads): spans/second for both paths plus the speedup,
+across a batch of spans against a ring of N samples.  Run with --smoke
+for CI-sized inputs.
+
+Usage: PYTHONPATH=src python benchmarks/bench_resolve.py [--smoke] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.resolver import batch_joules_at
+from repro.core.session import _joules_at
+from repro.core.state import State
+
+
+def build_timeline(n: int, seed: int = 0):
+    """Synthetic cumulative-joules timeline with duplicate timestamps
+    (virtual-clock style) sprinkled in."""
+    rng = np.random.default_rng(seed)
+    dt = rng.uniform(0.0005, 0.0015, size=n)
+    dt[rng.random(n) < 0.01] = 0.0          # duplicates
+    ts = np.cumsum(dt)
+    watts = 40.0 + 10.0 * np.sin(ts * 3.0)
+    js = np.cumsum(watts * dt)
+    return ts, js
+
+
+def make_spans(ts: np.ndarray, m: int, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    lo, hi = float(ts[0]), float(ts[-1])
+    t0 = rng.uniform(lo, hi, size=m)
+    t1 = np.minimum(hi, t0 + rng.uniform(0.001, 0.05, size=m))
+    return t0, t1
+
+
+def measure_resolve_throughput(timeline_n: int = 100_000,
+                               spans_m: int = 4096,
+                               repeats: int = 5) -> dict:
+    """Returns ``{scalar_spans_per_s, vectorized_spans_per_s, speedup,
+    timeline_n, spans_m, max_abs_err_j}``."""
+    ts, js = build_timeline(timeline_n)
+    t0, t1 = make_spans(ts, spans_m)
+
+    # Scalar path operates on the legacy list-of-State representation.
+    states = [State(timestamp_s=float(t), joules=float(j))
+              for t, j in zip(ts, js)]
+    ts_list = [float(t) for t in ts]
+
+    def run_vectorized():
+        return batch_joules_at(ts, js, t1) - batch_joules_at(ts, js, t0)
+
+    def run_scalar():
+        return [(_joules_at(states, ts_list, b)
+                 - _joules_at(states, ts_list, a))
+                for a, b in zip(t0, t1)]
+
+    best_v = best_s = float("inf")
+    for _ in range(repeats):
+        t = time.perf_counter()
+        jv = run_vectorized()
+        best_v = min(best_v, time.perf_counter() - t)
+        t = time.perf_counter()
+        jsc = run_scalar()
+        best_s = min(best_s, time.perf_counter() - t)
+    err = float(np.max(np.abs(jv - np.array(jsc))))
+    return {
+        "timeline_n": timeline_n,
+        "spans_m": spans_m,
+        "scalar_spans_per_s": spans_m / best_s,
+        "vectorized_spans_per_s": spans_m / best_v,
+        "speedup": best_s / best_v,
+        "max_abs_err_j": err,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized inputs")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+    n, m = (20_000, 512) if args.smoke else (100_000, 4096)
+    r = measure_resolve_throughput(timeline_n=n, spans_m=m,
+                                   repeats=3 if args.smoke else 5)
+    print("# PMT batch resolution: scalar (per-span bisect+lerp) vs "
+          "vectorized (one searchsorted pass)")
+    print(f"timeline={r['timeline_n']} samples, batch={r['spans_m']} spans")
+    print(f"scalar:     {r['scalar_spans_per_s']:12.0f} spans/s")
+    print(f"vectorized: {r['vectorized_spans_per_s']:12.0f} spans/s")
+    print(f"speedup:    {r['speedup']:12.1f}x   "
+          f"(max |dJ| = {r['max_abs_err_j']:.2e} J)")
+    assert r["max_abs_err_j"] < 1e-9, "vectorized path diverged from scalar"
+    if args.csv:
+        print(f"resolve_scalar_spans_per_s,{r['scalar_spans_per_s']:.0f}")
+        print(f"resolve_vectorized_spans_per_s,"
+              f"{r['vectorized_spans_per_s']:.0f}")
+        print(f"resolve_speedup,{r['speedup']:.2f}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

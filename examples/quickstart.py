@@ -25,7 +25,33 @@ import repro.core as pmt
 
 def session_mode():
     """The unified API: one shared background sampler per backend,
-    non-blocking nested regions, structured export."""
+    non-blocking nested regions, structured export.
+
+    Performance model (the array-core redesign):
+
+      * The background sampler writes into a preallocated NumPy ring —
+        zero Python allocations per tick in steady state, readers use
+        seqlock retries instead of locks, so sampling never stalls and
+        nothing stalls on sampling.
+      * ``region(...)`` entry/exit reads only the sensor clock: exit is
+        an O(1) span enqueue (a few microseconds), ~an order of
+        magnitude cheaper than resolving on close (see
+        benchmarks/bench_overhead.py and BENCH_overhead.json).
+      * Resolution happens on a background resolver thread, many spans
+        per batch in one vectorized ``np.searchsorted`` pass, then fans
+        out to exporters.
+
+    When do results become available?  ``r.measurements`` is
+    *future-style*: the value exists (a) as soon as the resolver has
+    processed the span — typically within a couple of sampling periods
+    of region exit, with records reaching exporters on their own — or
+    (b) immediately when you ask: ``r.measurements``, ``sess.flush()``
+    and ``sess.close()`` all resolve synchronously, taking at most one
+    closing sensor sample per backend.  Loops that only export (serve
+    waves, train steps) never wait.  A region that outlives the ring
+    (capacity x period) resolves with ``window_evicted=True`` instead of
+    silently under-reporting energy.
+    """
     with contextlib.suppress(FileNotFoundError):
         os.remove("/tmp/pmt_regions.jsonl")   # exporter appends
     with pmt.Session(["cpuutil", "tpu"]) as sess:
@@ -38,9 +64,14 @@ def session_mode():
             with sess.region("compute", tokens=512) as r:
                 time.sleep(0.5)
 
+        # Region exit was O(1); asking for the numbers resolves the span
+        # (or returns the cached result if the resolver got there first).
+        was_async = r.resolved
         print(f"compute: {r.measurements.total_joules():.4f} J "
-              f"across {len(r.measurements)} sensors")
+              f"across {len(r.measurements)} sensors "
+              f"(resolved in background: {was_async})")
         sess.flush()                                  # resolve + export rest
+        print(f"session stats: {sess.stats()}")
         for rec in mem.records:
             print(f"  {rec.path:18s} {rec.sensor:8s} {rec.joules:9.4f} J "
                   f"{rec.watts:8.3f} W {rec.seconds:6.3f} s")

@@ -19,10 +19,14 @@ resolve against the ring buffer, and pluggable exporters::
             ...
         print(r.measurements.total_joules(), "J")
 
-Region entry/exit never touch a sensor on the caller's thread — spans
-are timestamps resolved later by interpolating the sampler's cumulative
-joules counter — so concurrent serve requests, the train loop, and the
-decorators below can all measure through one sampler per backend.
+Region entry/exit never touch a sensor on the caller's thread — exit is
+an O(1) span enqueue, and a background resolver batch-resolves spans
+against the sampler's preallocated NumPy ring (one vectorized
+``np.searchsorted`` pass per backend, exporter fan-out off-path) — so
+concurrent serve requests, the train loop, and the decorators below can
+all measure through one sampler per backend without waiting on each
+other.  ``measurements`` is future-style: it blocks (resolving
+synchronously) only when the number is actually asked for.
 
 ``pmt.region("roi", backends=["x"])`` opens a region on the implicit
 default session for quick scripts.  Classic surfaces (paper Listings
@@ -57,7 +61,9 @@ from repro.core.monitor import (PowerMonitor, StepEnergy, StragglerVerdict,
                                 detect_stragglers)
 from repro.core.registry import (available_backend_names, backend_names,
                                  create, get_backend, register_backend)
-from repro.core.sampler import DumpThread, RingSampler
+from repro.core.resolver import SpanResolver, batch_joules_at
+from repro.core.sampler import (DumpThread, LegacyRingSampler, RingSampler,
+                                SamplerWindowEvicted, make_ring_sampler)
 from repro.core.sensor import Sample, Sensor, SensorError
 from repro.core.session import (RegionHandle, SensorLease, SensorPool,
                                 Session, default_pool, default_session,
@@ -79,7 +85,8 @@ __all__ = [
     "MemoryExporter", "read_jsonl",
     # classic modes (shims over the default session)
     "measure", "dump", "Region", "Measurement", "Measurements",
-    "DumpThread", "RingSampler",
+    "DumpThread", "RingSampler", "LegacyRingSampler", "make_ring_sampler",
+    "SamplerWindowEvicted", "SpanResolver", "batch_joules_at",
     "DumpHeader", "DumpRecord", "read_dump", "total_joules", "average_watts",
     # energy model & metrics
     "EnergyModel", "HardwareSpec", "TPU_V5E",

@@ -50,7 +50,13 @@ from repro.core.state import State
 
 @dataclasses.dataclass(frozen=True)
 class Measurement:
-    """One backend's measurement of one region of interest."""
+    """One backend's measurement of one region of interest.
+
+    ``window_evicted`` flags a session region that outlived the sampling
+    ring: its bracketing start sample was overwritten before resolution,
+    so ``joules`` covers a truncated window (see
+    ``repro.core.sampler.SamplerWindowEvicted``).
+    """
 
     sensor: str
     kind: str
@@ -60,6 +66,7 @@ class Measurement:
     start: State
     end: State
     label: Optional[str] = None
+    window_evicted: bool = False
 
     def __str__(self) -> str:
         tag = f"{self.sensor}" + (f"[{self.label}]" if self.label else "")

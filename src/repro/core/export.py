@@ -43,6 +43,9 @@ class RegionRecord:
     watts: float
     flops: Optional[float] = None
     tokens: Optional[int] = None
+    # True when the region outlived the sampling ring and resolved from
+    # a truncated window (energy under-reported; see SamplerWindowEvicted).
+    window_evicted: bool = False
 
     def as_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -68,7 +71,7 @@ class CsvExporter(Exporter):
     """Append-mode CSV sink, one flushed line per record."""
 
     HEADER = ("path,label,depth,sensor,kind,start_s,end_s,seconds,"
-              "joules,watts,flops,tokens\n")
+              "joules,watts,flops,tokens,window_evicted\n")
 
     def __init__(self, path: str):
         self._lock = threading.Lock()
@@ -88,7 +91,8 @@ class CsvExporter(Exporter):
                 f"{r.start_s:.6f}", f"{r.end_s:.6f}", f"{r.seconds:.6f}",
                 f"{r.joules:.6f}", f"{r.watts:.3f}",
                 "" if r.flops is None else f"{r.flops:.0f}",
-                "" if r.tokens is None else r.tokens])
+                "" if r.tokens is None else r.tokens,
+                int(r.window_evicted)])
 
     def close(self) -> None:
         with self._lock:

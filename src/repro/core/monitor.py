@@ -11,7 +11,11 @@ against the shared background ring sampler.  A monitor can run on its own
 session (default; sensors still shared via the process pool) or be handed
 an existing one, in which case the serve engine, the train loop, and the
 monitor all attach to the same sampler per backend instead of
-double-polling.
+double-polling.  ``measure_step(..., blocking=False)`` keeps even
+resolution off the loop: step exit enqueues the span, the monitor's
+records/CSV/cumulative counters update when the session's background
+resolver finishes it, and reads of accumulated state settle in-flight
+steps first.
 
 JAX-awareness: dispatch is asynchronous, so a step is only attributed the
 energy between explicit ``block_until_ready`` boundaries — the caller (or
@@ -28,7 +32,7 @@ import threading
 from typing import Dict, List, Optional, Sequence, TextIO, Union
 
 from repro.core.metrics import EfficiencyReport
-from repro.core.sensor import Sensor
+from repro.core.sensor import Sensor, SensorError
 from repro.core.session import Session
 
 
@@ -86,6 +90,7 @@ class PowerMonitor:
             raise ValueError("PowerMonitor needs at least one sensor")
         self._records: List[StepEnergy] = []
         self._cumulative_joules = float(initial_joules)
+        self._inflight: set = set()      # non-blocking boxes not yet settled
         self._lock = threading.Lock()
         self._log: Optional[TextIO] = None
         if log_path:
@@ -100,36 +105,54 @@ class PowerMonitor:
     # -- per-step measurement --------------------------------------------
     @contextlib.contextmanager
     def measure_step(self, step: int, flops: Optional[float] = None,
-                     tokens: Optional[int] = None):
+                     tokens: Optional[int] = None, blocking: bool = True):
         """Context manager measuring one fenced step across all sensors.
 
         A thin wrapper over ``session.region(...)`` — entry/exit touch no
-        sensors on this thread; the step resolves against the shared ring
-        buffer at exit (at most one closing sample per backend).
+        sensors on this thread.  With ``blocking=True`` (the classic
+        contract) the step resolves against the shared ring buffer at
+        exit and ``box.records`` is materialised before the ``with``
+        block returns.  With ``blocking=False`` exit is O(1): the span
+        resolves on the session's background resolver thread, the
+        monitor's accounting/CSV update when it does, and ``box.records``
+        only blocks (resolving synchronously) if actually read — the
+        hot-loop mode ``make_measured_train_step`` and the serve engine
+        use.
 
         The caller must ensure device work is complete before the block
         exits (``jax.block_until_ready`` on the step outputs).
         """
-        handle = self._session.region(f"step{step}", flops=flops,
-                                      tokens=tokens)
         box = _StepBox()
+
+        def finish(measurements):
+            recs = [StepEnergy(
+                step=step, sensor=m.sensor, kind=m.kind, joules=m.joules,
+                seconds=m.seconds, watts=m.watts, flops=flops,
+                tokens=tokens) for m in measurements]
+            with self._lock:
+                self._records.extend(recs)
+                self._cumulative_joules += sum(r.joules for r in recs)
+                self._inflight.discard(box)
+                for r in recs:
+                    self._write_log(r)
+            box._records = recs
+
+        handle = self._session.region(f"step{step}", flops=flops,
+                                      tokens=tokens, on_resolved=finish)
+        box._handle = handle
         handle.__enter__()
         try:
             yield box
         finally:
-            handle.__exit__(None, None, None)
-            recs = [StepEnergy(
-                step=step, sensor=m.sensor, kind=m.kind, joules=m.joules,
-                seconds=m.seconds, watts=m.watts, flops=flops,
-                tokens=tokens) for m in handle.measurements]
             with self._lock:
-                self._records.extend(recs)
-                self._cumulative_joules += sum(r.joules for r in recs)
-            for r in recs:
-                self._write_log(r)
-            box.records = recs
+                self._inflight.add(box)
+            handle.__exit__(None, None, None)
+            if blocking:
+                handle.measurements     # forces resolution -> finish()
 
     def _write_log(self, r: StepEnergy) -> None:
+        # Caller holds self._lock (records may finish on the resolver
+        # thread and a user thread concurrently).
         if self._log is None:
             return
         rep = r.report()
@@ -140,14 +163,31 @@ class PowerMonitor:
             f"{'' if r.tokens is None else r.tokens},"
             f"{'' if g is None else f'{g:.3f}'},{rep.edp:.6f}\n")
 
+    def _settle(self) -> None:
+        """Resolve any outstanding non-blocking steps (before reading
+        accumulated state).  Takes the session resolve path, so call
+        *outside* ``self._lock``.  Boxes whose span errored (sampler
+        stopped) or fell off the session's auto-resolve queue are
+        settled here too — forcing via the handle either recovers the
+        records or retires the box, so the in-flight set cannot leak.
+        """
+        with self._lock:
+            boxes = list(self._inflight)
+        for box in boxes:
+            box.records                  # forces resolution (or [] on error)
+            with self._lock:
+                self._inflight.discard(box)
+
     # -- cumulative accounting (checkpointable) -----------------------------
     @property
     def cumulative_joules(self) -> float:
+        self._settle()
         with self._lock:
             return self._cumulative_joules
 
     def state_dict(self) -> Dict[str, float]:
         """Energy state persisted inside checkpoints (DESIGN.md §3)."""
+        self._settle()
         with self._lock:
             recent = self._records[-32:]
             j_per_step = (statistics.fmean(r.joules for r in recent)
@@ -156,24 +196,54 @@ class PowerMonitor:
                     "joules_per_step_ema": j_per_step}
 
     def records(self) -> List[StepEnergy]:
+        self._settle()
         with self._lock:
             return list(self._records)
 
     def close(self) -> None:
-        if self._log is not None:
-            self._log.close()
-            self._log = None
+        try:
+            self._settle()         # flush in-flight async steps first
+        except SensorError:        # session already torn down
+            pass
+        with self._lock:
+            if self._log is not None:
+                self._log.close()
+                self._log = None
         if self._owns_session:
             self._session.close()
 
 
 class _StepBox:
-    """Filled with the step's records when measure_step exits."""
+    """Carries one step's :class:`StepEnergy` records.
+
+    Blocking steps fill it before ``measure_step`` exits.  Non-blocking
+    steps fill it when the background resolver finishes the span —
+    reading :attr:`records` earlier forces resolution on the calling
+    thread (future-style), so a loop that logs every Nth step only pays
+    resolution on those steps.
+    """
 
     def __init__(self):
-        # Instance attribute, not a shared class-level default: two
+        # Instance attributes, not shared class-level defaults: two
         # concurrent steps must never see each other's records.
-        self.records: List[StepEnergy] = []
+        self._records: Optional[List[StepEnergy]] = None
+        self._handle = None
+
+    @property
+    def records(self) -> List[StepEnergy]:
+        if self._records is None:
+            if self._handle is not None:
+                try:
+                    self._handle.measurements   # triggers finish() callback
+                except SensorError:
+                    pass                        # still open / sampler gone
+            if self._records is None:
+                self._records = []
+        return self._records
+
+    @records.setter
+    def records(self, value: List[StepEnergy]) -> None:
+        self._records = value
 
 
 # -- fleet-level straggler detection (fault-tolerance integration) ---------

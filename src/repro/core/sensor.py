@@ -98,6 +98,29 @@ class Sensor(abc.ABC):
         """
         return self._clock()
 
+    def _read_locked(self):
+        """One sample under ``self._lock``: ``(timestamp, joules, Sample)``.
+
+        Shared between :meth:`read` (State-building public API) and
+        :meth:`read_raw` (the array-ring sampler's allocation-light path).
+        """
+        t = self._clock()
+        s = self._sample()
+        if s.joules is not None:
+            jl = s.joules
+        else:
+            if s.watts is None:
+                raise SensorError(
+                    f"backend {self.name!r} returned neither joules nor watts")
+            if self._last_t is not None:
+                dt = max(0.0, t - self._last_t)
+                w_prev = self._last_w if self._last_w is not None else s.watts
+                self._accum_joules += 0.5 * (w_prev + s.watts) * dt
+            jl = self._accum_joules
+        self._last_t = t
+        self._last_w = s.watts
+        return t, jl, s
+
     def read(self) -> State:
         """Take one reading, returning a :class:`State`.
 
@@ -105,23 +128,23 @@ class Sensor(abc.ABC):
         consecutive reads into the cumulative joules counter.
         """
         with self._lock:
-            t = self._clock()
-            s = self._sample()
-            if s.joules is not None:
-                jl = s.joules
-            else:
-                if s.watts is None:
-                    raise SensorError(
-                        f"backend {self.name!r} returned neither joules nor watts")
-                if self._last_t is not None:
-                    dt = max(0.0, t - self._last_t)
-                    w_prev = self._last_w if self._last_w is not None else s.watts
-                    self._accum_joules += 0.5 * (w_prev + s.watts) * dt
-                jl = self._accum_joules
-            self._last_t = t
-            self._last_w = s.watts
+            t, jl, s = self._read_locked()
             return State(timestamp_s=t, joules=jl, watts=s.watts,
                          rails=dict(s.rails))
+
+    def read_raw(self):
+        """Take one reading as bare floats: ``(timestamp_s, joules, watts)``.
+
+        ``watts`` is NaN when the backend reports no instantaneous power.
+        This is the sampling hot path used by the array ring sampler: no
+        :class:`State` (or any other object meant to outlive the call) is
+        constructed, so a steady-state sampler tick retains zero Python
+        allocations.  Per-rail readings are not carried — rails stay a
+        ``read()``/dump-mode concern.
+        """
+        with self._lock:
+            t, jl, s = self._read_locked()
+            return t, jl, (float("nan") if s.watts is None else s.watts)
 
     # Derivations — instance methods per the C++ API, also importable as
     # free functions from repro.core.state.

@@ -19,13 +19,29 @@ A :class:`Session` inverts that: sensors live in a refcounted
             ...
     print(r.measurements.total_joules())
 
-Region entry/exit only reads the sensor clock and appends a span — no
-sensor I/O on the caller's thread.  Spans resolve lazily against the ring
-buffer (linear interpolation of the cumulative-joules counter at the two
-span timestamps; one on-demand closing sample if the background thread
-has not covered the span yet).  Regions nest (paths like
-``"serve/wave0/prefill"``) and are thread-safe, so concurrent serve
-requests can each open their own span against the same sampler.
+The measurement hot path allocates nothing durable and reads no sensor:
+
+  * region *entry* reads each backend's clock and pins the span start on
+    the ring (so wraparound over it is detectable);
+  * region *exit* is O(1) — it reads the clocks again, appends the span
+    to a bounded queue, and wakes the background resolver.
+
+Resolution happens off-path in :mod:`repro.core.resolver`: a background
+thread batch-resolves many spans per backend with one vectorized pass
+(``np.searchsorted`` over all endpoints, fused interpolation of the
+cumulative-joules counter) once the ring's timeline covers them, then
+fans the records out to exporters.  ``RegionHandle.measurements`` is
+future-style — it blocks (resolving synchronously, at most one closing
+sample per backend) only if the caller actually asks for the number, so
+serve/train loops that just export never wait.  Results therefore become
+available either ~one sampling period after region exit (async) or
+immediately on ``measurements``/``flush()``/``close()`` (forced).
+
+Regions nest (paths like ``"serve/wave0/prefill"``) and are thread-safe,
+so concurrent serve requests can each open their own span against the
+same sampler.  A span that outlives the ring capacity resolves with
+``window_evicted=True`` (and a ``SamplerWindowEvicted`` warning) instead
+of silently under-reporting energy.
 
 Resolved regions flow to pluggable exporters (see repro.core.export).
 
@@ -45,12 +61,14 @@ import bisect
 import collections
 import itertools
 import threading
-from typing import (Any, Deque, Dict, List, Optional, Sequence, Tuple,
-                    Union)
+import warnings
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple, Union)
 
 from repro.core import registry
+from repro.core import resolver as resolver_mod
 from repro.core.export import Exporter, RegionRecord
-from repro.core.sampler import RingSampler
+from repro.core.sampler import make_ring_sampler
 from repro.core.sensor import Sensor, SensorError
 from repro.core.state import State
 
@@ -79,7 +97,7 @@ class SensorLease:
         self._released = False
 
     @property
-    def sampler(self) -> Optional[RingSampler]:
+    def sampler(self):
         return self._pool._sampler_for(self._key)
 
     def release(self) -> None:
@@ -97,7 +115,7 @@ class _PoolEntry:
 
     def __init__(self, sensor: Sensor, period_s: Optional[float]):
         self.sensor = sensor
-        self.sampler: Optional[RingSampler] = None
+        self.sampler = None
         self.refs = 0
         self.sampling_refs = 0
         self.period_s = period_s
@@ -134,7 +152,7 @@ class SensorPool:
                 **backend_kwargs) -> SensorLease:
         """Check out a shared sensor (and its sampler when ``sampling``)."""
         key = self._key_for(spec, backend_kwargs)
-        start_sampler: Optional[RingSampler] = None
+        start_sampler = None
         with self._lock:
             entry = self._entries.get(key)
             if entry is None:
@@ -146,7 +164,7 @@ class SensorPool:
             if sampling:
                 entry.sampling_refs += 1
                 if entry.sampler is None:
-                    entry.sampler = RingSampler(
+                    entry.sampler = make_ring_sampler(
                         entry.sensor, period_s=period_s or entry.period_s)
                     start_sampler = entry.sampler
         if start_sampler is not None:
@@ -156,13 +174,13 @@ class SensorPool:
             start_sampler.sample_now()
         return SensorLease(self, key, entry.sensor, sampling)
 
-    def _sampler_for(self, key: Any) -> Optional[RingSampler]:
+    def _sampler_for(self, key: Any):
         with self._lock:
             entry = self._entries.get(key)
             return entry.sampler if entry is not None else None
 
     def _release(self, key: Any, sampling: bool) -> None:
-        stop_sampler: Optional[RingSampler] = None
+        stop_sampler = None
         with self._lock:
             entry = self._entries.get(key)
             if entry is None:
@@ -209,6 +227,8 @@ def _joules_at(samples: Sequence[State], ts: Sequence[float], t: float
                ) -> float:
     """Cumulative joules at sensor-clock time ``t``, linearly interpolated.
 
+    The scalar reference for :func:`repro.core.resolver.batch_joules_at`
+    (and the resolution path for the ``PMT_LEGACY_RING=1`` list core).
     Clamps outside the sampled range (the resolver takes a closing sample
     first, so clamping only under-counts by less than one period at the
     open end).  Duplicate timestamps (virtual clocks) collapse to the
@@ -233,11 +253,13 @@ class _Span:
     """An unresolved region interval: timestamps only, no sensor data."""
 
     __slots__ = ("path", "label", "depth", "flops", "tokens",
-                 "t0", "t1", "snap", "resolved")
+                 "t0", "t1", "snap", "pins", "resolved", "error",
+                 "on_resolved", "seq")
 
     def __init__(self, path: str, label: str, depth: int,
                  flops: Optional[float], tokens: Optional[int],
-                 t0: Dict[Any, float], snap):
+                 t0: Dict[Any, float], snap, pins,
+                 on_resolved):
         self.path = path
         self.label = label
         self.depth = depth
@@ -245,31 +267,40 @@ class _Span:
         self.tokens = tokens
         self.t0 = t0                      # pool key -> entry timestamp
         self.t1: Dict[Any, float] = {}    # pool key -> exit timestamp
-        self.snap = snap                  # clock snapshot at entry
-        self.resolved: Optional["Measurements"] = None
+        self.snap = snap                  # (key, clock) snapshot at entry
+        self.pins = pins                  # pool key -> (sampler, pin token)
+        self.resolved = None              # Measurements once resolved
+        self.error: Optional[BaseException] = None
+        self.on_resolved = on_resolved    # callback(Measurements), once
+        self.seq = 0                      # close order (set at close)
 
 
 class RegionHandle:
-    """Context manager for one region; resolves lazily after exit.
+    """Context manager for one region; resolves asynchronously after exit.
 
-    Entry/exit are non-blocking (clock reads + list append).  Accessing
-    :attr:`measurements` after exit resolves the span against the ring
-    buffers — taking at most one closing sample per sensor — caches the
-    result, and emits one :class:`RegionRecord` per sensor to the
-    session's exporters.
+    Entry/exit are non-blocking (clock reads, a ring pin, a queue
+    append).  :attr:`measurements` is future-style: if the background
+    resolver already finished the span it returns the cached result;
+    otherwise it resolves synchronously on the calling thread (taking at
+    most one closing sample per sensor).  Either way the span's
+    :class:`RegionRecord`\\ s are emitted to the session's exporters
+    exactly once.
     """
 
     def __init__(self, session: "Session", label: Optional[str],
-                 flops: Optional[float], tokens: Optional[int]):
+                 flops: Optional[float], tokens: Optional[int],
+                 on_resolved=None):
         self._session = session
         self._label = label
         self._flops = flops
         self._tokens = tokens
+        self._on_resolved = on_resolved
         self._span: Optional[_Span] = None
 
     def __enter__(self) -> "RegionHandle":
         self._span = self._session._open_span(self._label, self._flops,
-                                              self._tokens)
+                                              self._tokens,
+                                              self._on_resolved)
         return self
 
     def __exit__(self, *exc) -> bool:
@@ -277,12 +308,18 @@ class RegionHandle:
         return False
 
     @property
+    def resolved(self) -> bool:
+        """Whether the background resolver already finished this span
+        (non-blocking peek)."""
+        return self._span is not None and self._span.resolved is not None
+
+    @property
     def measurements(self) -> "Measurements":
         if self._span is None:
             raise SensorError("region never entered")
         if not self._span.t1:
             raise SensorError("region still open; exit it before resolving")
-        return self._session._resolve(self._span)
+        return self._session._resolve_blocking(self._span)
 
     @property
     def measurement(self) -> "Measurement":
@@ -301,9 +338,10 @@ class Session:
       period_s: sampling period request, clamped per backend to its
         ``native_period_s`` floor.
       exporters: initial exporter sinks (see :mod:`repro.core.export`).
-      max_pending: bound on unresolved spans retained for ``flush()``;
-        oldest spans drop first (their handles still resolve — the bound
-        only limits what an eventual flush will export).
+      max_pending: bound on spans queued for (or awaiting) background
+        resolution; on overflow the oldest span is dropped from the
+        *auto-resolve* path — its handle still resolves on access, the
+        drop is counted in :meth:`stats`, never silent.
     """
 
     def __init__(self, backends: Sequence[BackendSpec] = (),
@@ -313,30 +351,56 @@ class Session:
                  max_pending: int = 65536):
         self._pool = pool if pool is not None else default_pool()
         self._period_s = period_s
+        self._max_pending = max_pending
         self._lock = threading.Lock()
         self._leases: "collections.OrderedDict[Any, SensorLease]" = \
             collections.OrderedDict()
         self._exporters: List[Exporter] = list(exporters)
-        # Serialises span resolution: two threads racing handle.measurements
-        # against flush() must not both compute/emit the same span.
+        # Serialises span resolution (background batches, blocking
+        # accesses, flush): exporters see each span exactly once, in
+        # close order for the batched path.
         self._resolve_lock = threading.Lock()
-        self._pending: Deque[_Span] = collections.deque(maxlen=max_pending)
+        # Closed spans ride _queue (lock-free append on the hot path)
+        # until the resolver claims them into _waiting; _waiting holds
+        # spans whose rings don't cover t1 yet; background-settled spans
+        # park in _flushable so flush() can still return them.  All
+        # three under _resolve_lock.
+        self._queue: Deque[_Span] = collections.deque()
+        self._waiting: List[_Span] = []
+        self._flushable: Deque[_Span] = collections.deque(
+            maxlen=max_pending)
+        self._close_seq = itertools.count(1)
+        # Exporter emissions and on_resolved callbacks never run under
+        # _resolve_lock (a callback touching the session would
+        # self-deadlock): resolution appends to _emit_queue and the
+        # resolving thread drains it FIFO after releasing the lock.
+        # RLock so a callback that itself forces resolution can drain
+        # its own nested emissions.
+        self._emit_queue: Deque[tuple] = collections.deque()
+        self._emit_lock = threading.RLock()
+        self._resolver: Optional[resolver_mod.SpanResolver] = None
+        self._stats = {"resolved": 0, "evicted": 0, "dropped": 0,
+                       "resolve_errors": 0}
         self._tls = threading.local()
         self._anon = itertools.count(1)
         self._closed = False
-        # Hot-path snapshots: regions open/close without the session lock
-        # (tuple replacement is atomic; a momentarily stale snapshot just
-        # measures the backend set as of region entry).  The clock
-        # snapshot pre-binds each sensor's clock callable so a span
-        # timestamp is one call, no attribute dispatch.
+        # Hot-path snapshot: regions open/close without the session lock
+        # (attribute replacement is atomic; a momentarily stale snapshot
+        # just measures the backend set as of region entry).  One tuple
+        # holds both views so open/close never see mismatched halves:
+        #   open3:  (key, clock, sampler) — entry timestamps + ring pins
+        #   pairs:  (key, clock)          — exit timestamps
+        # pre-bound so a span timestamp is one call, no attribute
+        # dispatch.
         self._lease_snapshot: Tuple[SensorLease, ...] = ()
-        self._clock_snapshot: Tuple[Tuple[Any, Any], ...] = ()
+        self._hot_snapshot: Tuple[Tuple, Tuple] = ((), ())
         try:
             for b in backends:
                 self.attach(b)
         except BaseException:
             # A later backend failed (typo'd name, probe error): release
             # what was already acquired or its sampler outlives us.
+            self._stop_resolver()
             self._release_leases()
             raise
 
@@ -345,9 +409,18 @@ class Session:
             leases = list(self._leases.values())
             self._leases.clear()
             self._lease_snapshot = ()
-            self._clock_snapshot = ()
+            self._hot_snapshot = ((), ())
         for lease in leases:
             lease.release()
+
+    def _stop_resolver(self) -> None:
+        res = self._resolver
+        if res is not None:
+            res.stop(join=True)
+            if res.is_alive():  # pragma: no cover - stuck sensor I/O
+                warnings.warn("pmt resolver thread did not stop within "
+                              "timeout; leaking daemon thread")
+            self._resolver = None
 
     # -- sensor management ---------------------------------------------------
     def attach(self, backend: BackendSpec, **backend_kwargs) -> Sensor:
@@ -363,9 +436,18 @@ class Session:
                     **backend_kwargs)
                 self._leases[key] = lease
                 self._lease_snapshot = tuple(self._leases.values())
-                self._clock_snapshot = tuple(
-                    (l._key, l.sensor._clock) for l in self._lease_snapshot)
+                open3 = tuple((l._key, l.sensor._clock, l.sampler)
+                              for l in self._lease_snapshot)
+                self._hot_snapshot = (
+                    open3, tuple((k, clk) for k, clk, _ in open3))
+            if self._resolver is None:
+                self._resolver = resolver_mod.SpanResolver(self)
+                self._resolver.start()
             return lease.sensor
+
+    def _lease_by_key(self, key: Any) -> Optional[SensorLease]:
+        with self._lock:
+            return self._leases.get(key)
 
     @property
     def sensors(self) -> List[Sensor]:
@@ -380,9 +462,16 @@ class Session:
     # -- regions -------------------------------------------------------------
     def region(self, label: Optional[str] = None, *,
                flops: Optional[float] = None,
-               tokens: Optional[int] = None) -> RegionHandle:
-        """Open a (nestable, thread-safe, non-blocking) measured region."""
-        return RegionHandle(self, label, flops, tokens)
+               tokens: Optional[int] = None,
+               on_resolved: Optional[Callable] = None) -> RegionHandle:
+        """Open a (nestable, thread-safe, non-blocking) measured region.
+
+        ``on_resolved`` is called exactly once with the span's
+        ``Measurements`` when it resolves — on the background resolver
+        thread, or on whichever thread forces resolution first.
+        """
+        return RegionHandle(self, label, flops, tokens,
+                            on_resolved=on_resolved)
 
     def _label_stack(self) -> List[str]:
         stack = getattr(self._tls, "stack", None)
@@ -391,11 +480,11 @@ class Session:
         return stack
 
     def _open_span(self, label: Optional[str], flops: Optional[float],
-                   tokens: Optional[int]) -> _Span:
+                   tokens: Optional[int], on_resolved) -> _Span:
         if self._closed:
             raise SensorError("session is closed")
-        leases = self._lease_snapshot
-        if not leases:
+        open3, pairs = self._hot_snapshot
+        if not open3:
             raise SensorError(
                 "session has no backends; pass them to Session(...) or "
                 "call session.attach(...)")
@@ -405,94 +494,230 @@ class Session:
         path = "/".join(stack + [label]) if stack else label
         # Spans key their timestamps by pool key, not sensor name — two
         # pooled sensors may share a name (same backend, different kwargs).
-        snap = self._clock_snapshot
-        span = _Span(path, label, len(stack), flops, tokens,
-                     {k: clk() for k, clk in snap}, snap)
+        t0: Dict[Any, float] = {}
+        pins: Dict[Any, Tuple[Any, int]] = {}
+        for k, clk, sampler in open3:
+            t = clk()
+            t0[k] = t
+            pins[k] = (sampler, sampler.pin(t))
+        span = _Span(path, label, len(stack), flops, tokens, t0, pairs,
+                     pins, on_resolved)
         stack.append(label)
         return span
 
     def _close_span(self, span: Optional[_Span]) -> None:
         if span is None:
             return
-        snap = self._clock_snapshot
-        if snap is span.snap:        # common case: backend set unchanged
-            span.t1 = {k: clk() for k, clk in snap}
+        pairs = self._hot_snapshot[1]
+        if pairs is span.snap:       # common case: backend set unchanged
+            span.t1 = {k: clk() for k, clk in pairs}
         else:                        # a backend attached mid-span
             t0 = span.t0
-            span.t1 = {k: clk() for k, clk in snap if k in t0}
+            span.t1 = {k: clk() for k, clk in pairs if k in t0}
         stack = self._label_stack()
         if stack and stack[-1] == span.label:
             stack.pop()
-        self._pending.append(span)
+        span.seq = next(self._close_seq)
+        # O(1) hand-off to the background resolver; no locks, no sensor
+        # I/O, no resolution work on the caller's thread.  The wake event
+        # stays set while the resolver is busy (it clears only right
+        # before a drain), so a burst of closes costs one event set plus
+        # an is_set() check per region — and because every clear is
+        # followed by a drain, a span appended before the check can
+        # never be stranded (no lost wakeup).
+        q = self._queue
+        if len(q) >= self._max_pending:
+            try:
+                old = q.popleft()
+            except IndexError:      # racing drain emptied it — fine
+                pass
+            else:
+                self._drop_span(old)
+        q.append(span)
+        res = self._resolver
+        if res is not None and not res.wake.is_set():
+            res.wake.set()
 
-    def _resolve(self, span: _Span) -> "Measurements":
-        from repro.core.decorators import Measurement, Measurements
+    def _unpin_span(self, span: _Span) -> None:
+        for sampler, tok in span.pins.values():
+            sampler.unpin(tok)
+        span.pins = {}
 
+    def _drop_span(self, span: _Span) -> None:
+        """A span fell off the bounded auto-resolve queue: count it and
+        release its ring pins.  Its handle can still resolve on access."""
+        if span.resolved is None and span.error is None:
+            self._stats["dropped"] += 1
+        self._unpin_span(span)
+
+    # -- resolution plumbing (called by repro.core.resolver) -----------------
+    def _note_span_resolved(self, span: _Span, evicted: bool) -> None:
+        self._stats["resolved"] += 1
+        if evicted:
+            self._stats["evicted"] += 1
+        self._unpin_span(span)
+
+    def _note_span_error(self, span: _Span) -> None:
+        self._stats["resolve_errors"] += 1
+        self._unpin_span(span)
+
+    def _enqueue_emission(self, records, on_resolved, measurements) -> None:
+        """Queue a resolved span's exporter records + callback (caller
+        holds ``_resolve_lock``; actual emission happens in
+        :meth:`_drain_emissions` after the lock is released)."""
+        self._emit_queue.append((records, on_resolved, measurements))
+
+    def _drain_emissions(self) -> None:
+        """Emit queued records/callbacks FIFO, outside ``_resolve_lock``.
+
+        Every resolution path calls this right after releasing the
+        resolve lock, so (a) exporters see records exactly once and in
+        close order (the queue is FIFO and one drainer runs at a time),
+        (b) a blocking ``measurements`` access returns only after its
+        span's records reached the exporters *and* callbacks ran — the
+        unconditional emit-lock acquisition doubles as a barrier against
+        an emission another thread has in flight — and (c) an
+        ``on_resolved`` callback may safely call back into the session:
+        it runs under no session lock except the re-entrant emit lock.
+        """
+        while True:
+            with self._emit_lock:
+                while True:
+                    try:
+                        records, cb, ms = self._emit_queue.popleft()
+                    except IndexError:
+                        break
+                    with self._lock:
+                        exporters = list(self._exporters)
+                    for exp in exporters:
+                        for rec in records:
+                            exp.emit(rec)
+                    if cb is not None:
+                        cb(ms)
+            if not self._emit_queue:
+                return
+
+    def _drain_ready(self, force: bool) -> Tuple[int, int]:
+        """Claim queued spans and resolve the ones their rings cover.
+
+        The background resolver calls this with ``force=False`` so async
+        resolution never issues an extra sensor read: spans ahead of the
+        sampler timeline wait in ``_waiting`` for the next tick; settled
+        spans park in ``_flushable`` for the next ``flush()``.  Returns
+        ``(resolved_now, deferred)`` counts.
+        """
         with self._resolve_lock:
-            if span.resolved is not None:
-                return span.resolved
-            with self._lock:
-                leases = [l for l in self._leases.values()
-                          if l._key in span.t1]
-            out = Measurements()
-            records: List[RegionRecord] = []
-            for lease in leases:
-                name = lease.sensor.name
-                t0, t1 = span.t0[lease._key], span.t1[lease._key]
-                sampler = lease.sampler
-                if sampler is None:
-                    raise SensorError(f"sampler for {name!r} already stopped")
-                samples, ts = sampler.window(t0, t1)
-                if not samples or ts[-1] < t1:
-                    sampler.sample_now()
-                    samples, ts = sampler.window(t0, t1)
-                j0 = _joules_at(samples, ts, t0)
-                j1 = _joules_at(samples, ts, t1)
-                joules = max(0.0, j1 - j0)
-                secs = t1 - t0
-                watts = joules / secs if secs > 0 else 0.0
-                # States synthesized at the span endpoints, so downstream
-                # code written against read()-pair results keeps working.
-                start = State(timestamp_s=t0, joules=j0)
-                end = State(timestamp_s=t1, joules=j1)
-                out.append(Measurement(
-                    sensor=name, kind=lease.sensor.kind, joules=joules,
-                    watts=watts, seconds=secs, start=start, end=end,
-                    label=span.path))
-                records.append(RegionRecord(
-                    path=span.path, label=span.label, depth=span.depth,
-                    sensor=name, kind=lease.sensor.kind, start_s=t0, end_s=t1,
-                    seconds=secs, joules=joules, watts=watts,
-                    flops=span.flops, tokens=span.tokens))
-            span.resolved = out
-            with self._lock:
-                exporters = list(self._exporters)
-            for exp in exporters:
-                for rec in records:
-                    exp.emit(rec)
-            return out
+            waiting = self._waiting
+            while True:
+                try:
+                    waiting.append(self._queue.popleft())
+                except IndexError:
+                    break
+            if not waiting:
+                return 0, 0
+            ready: List[_Span] = []
+            deferred: List[_Span] = []
+            for span in waiting:
+                if span.resolved is not None:
+                    self._flushable.append(span)   # settled via an access
+                    continue
+                if span.error is not None:
+                    continue
+                if force or resolver_mod._covered(self, span):
+                    ready.append(span)
+                else:
+                    deferred.append(span)
+            if ready:
+                resolver_mod.resolve_spans(self, ready, force=force)
+                for span in ready:
+                    if span.resolved is not None:
+                        self._flushable.append(span)
+            if len(deferred) > self._max_pending:
+                for span in deferred[:-self._max_pending]:
+                    self._drop_span(span)
+                deferred = deferred[-self._max_pending:]
+            self._waiting = deferred
+        self._drain_emissions()
+        return len(ready), len(deferred)
+
+    def _resolve_blocking(self, span: _Span) -> "Measurements":
+        if span.resolved is None:
+            with self._resolve_lock:
+                if span.resolved is None and span.error is None:
+                    resolver_mod.resolve_spans(self, [span], force=True)
+        # Always drain — even when the background resolver resolved the
+        # span first, its exporter records / on_resolved callback may
+        # still be queued or mid-emission; the drain's lock acquisition
+        # barriers on them so a returning ``measurements`` caller can
+        # rely on completion side effects (e.g. monitor accounting).
+        self._drain_emissions()
+        if span.error is not None:
+            raise span.error
+        return span.resolved
 
     def flush(self) -> List["Measurements"]:
-        """Resolve every pending span (emitting to exporters); drain them.
+        """Resolve every pending span now (emitting to exporters); drain.
 
-        Spans join the pending queue only when their region exits, so
-        everything here is closed and resolvable.
+        Spans join the queue only when their region exits, so everything
+        here is closed and resolvable — at most one closing sample per
+        backend is taken for spans the ring does not cover yet.  Returns
+        the resolved :class:`Measurements` in close order for every span
+        closed since the last flush — including spans the background
+        resolver or a handle access already settled.  Spans that could
+        *not* resolve (their sampler stopped underneath them) are
+        surfaced in :meth:`stats` under ``resolve_errors`` rather than
+        dropped silently.
         """
-        out = []
-        while True:
-            try:
-                span = self._pending.popleft()
-            except IndexError:
-                return out
-            out.append(self._resolve(span))
+        with self._resolve_lock:
+            spans = list(self._flushable) + self._waiting
+            self._flushable.clear()
+            self._waiting = []
+            while True:
+                try:
+                    spans.append(self._queue.popleft())
+                except IndexError:
+                    break
+            resolver_mod.resolve_spans(
+                self, [s for s in spans if s.resolved is None], force=True)
+            spans.sort(key=lambda s: s.seq)
+            out = [s.resolved for s in spans if s.resolved is not None]
+        self._drain_emissions()
+        return out
+
+    def stats(self) -> Dict[str, int]:
+        """Resolution counters: ``resolved``, ``evicted`` (spans flagged
+        ``window_evicted``), ``dropped`` (fell off the bounded queue —
+        handles still resolve on access), ``resolve_errors``, and
+        ``pending`` (closed spans not yet resolved)."""
+        with self._resolve_lock:
+            pending = len(self._queue) + sum(
+                1 for s in self._waiting
+                if s.resolved is None and s.error is None)
+            out = dict(self._stats)
+        out["pending"] = pending
+        return out
 
     # -- lifecycle -----------------------------------------------------------
-    def close(self) -> None:
-        """Flush, close exporters, release every lease (idempotent)."""
+    def close(self, timeout: float = 5.0) -> None:
+        """Flush, stop the resolver (bounded join), close exporters,
+        release every lease (idempotent).  Never hangs on a wedged
+        resolver thread and never drops spans silently: anything still
+        unresolved after the drain is reported via a warning +
+        :meth:`stats`."""
         if self._closed:
             return
         self.flush()
         self._closed = True
+        res = self._resolver
+        if res is not None:
+            res.stop(join=True, timeout=timeout)
+            self._resolver = None
+        st = self.stats()
+        if st["resolve_errors"] or st["pending"]:
+            warnings.warn(
+                f"pmt.Session closed with {st['resolve_errors']} "
+                f"unresolvable and {st['pending']} unresolved spans "
+                f"(see Session.stats())")
         with self._lock:
             exporters = list(self._exporters)
             self._exporters.clear()

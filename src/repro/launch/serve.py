@@ -32,13 +32,13 @@ def main(argv=None):
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
     params, _ = model_mod.init_params(jax.random.PRNGKey(args.seed), cfg)
-    # One session shared by the monitor and the engine: one background
-    # sampler per backend, every wave a region resolved off its ring.
+    # One shared session: every wave is a region whose close is an O(1)
+    # enqueue; energy resolves on the background resolver thread and
+    # lands in the MemoryExporter — the serving thread never waits.
     session = pmt.Session(["cpuutil", "tpu"])
-    monitor = pmt.PowerMonitor(session=session)
+    energy = session.add_exporter(pmt.MemoryExporter())
     engine = ServeEngine(cfg, params, batch_size=args.batch,
-                         max_len=args.max_len, monitor=monitor,
-                         session=session)
+                         max_len=args.max_len, session=session)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
@@ -49,10 +49,11 @@ def main(argv=None):
     n_tokens = sum(len(r.out) for r in done)
     for i, r in enumerate(done[:4]):
         print(f"req{i}: prompt={r.prompt} -> {r.out}")
-    j = monitor.cumulative_joules
+    session.flush()              # settle any waves still in flight
+    j = energy.total_joules()    # across all attached backends
     print(f"served {len(done)} requests, {n_tokens} tokens, "
-          f"{j:.2f} J total, {j / max(n_tokens, 1):.4f} J/token")
-    monitor.close()
+          f"{j:.2f} J total, {j / max(n_tokens, 1):.4f} J/token "
+          f"(stats: {session.stats()})")
     session.close()
 
 

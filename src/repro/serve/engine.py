@@ -12,10 +12,13 @@ documented as the production follow-up in DESIGN.md.
 
 PMT integration: each wave runs inside a ``pmt.Session`` region, so the
 engine shares one background sampler per backend with the train loop and
-any monitors on the same session (no per-wave blocking sensor reads on
-the serving thread), and reports J/token — the paper's energy-efficiency
-metric applied to serving.  Passing a ``PowerMonitor`` still works; the
-monitor itself now routes through a session.
+any monitors on the same session, and reports J/token — the paper's
+energy-efficiency metric applied to serving.  The measurement path is
+fully non-blocking: wave close is an O(1) span enqueue, resolution and
+exporter fan-out happen on the session's background resolver thread, and
+no per-wave measurement dict is ever materialised on the serving thread.
+Passing a ``PowerMonitor`` still works (non-blocking too; its accounting
+updates as waves resolve).
 """
 from __future__ import annotations
 
@@ -66,12 +69,15 @@ class Request:
 class ServeEngine:
     """Synchronized batched decoding over fixed slots.
 
-    Measurement plumbing (either or both may be given):
+    Measurement plumbing (either or both may be given; monitor wins when
+    both are passed, preserving its J/token accounting):
+      monitor: a ``PowerMonitor`` — waves go through its non-blocking
+        ``measure_step``; cumulative counters/CSV update as spans
+        resolve on the session's background resolver.
       session: a ``pmt.Session`` — each wave becomes a nested region
-        (``serve/wave<N>``) resolved off the shared ring sampler.
-      monitor: a ``PowerMonitor`` — kept for J/token accounting and
-        back-compat; pass ``monitor.session`` as ``session`` to share
-        one sampler between both (see launch/serve.py).
+        (``serve/wave<N>``) resolved asynchronously off the shared ring
+        sampler; attach a ``MemoryExporter``/``JsonlExporter`` for
+        accounting (see launch/serve.py).
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
@@ -95,8 +101,13 @@ class ServeEngine:
         return done
 
     def _measure_ctx(self, wave_id: int, tokens: int):
+        # Both paths are non-blocking: wave exit enqueues a span and
+        # returns; nothing on the serving thread waits for resolution.
+        # Monitor keeps precedence (as before this was non-blocking) so
+        # callers passing both still get its J/token accounting.
         if self.monitor is not None:
-            return self.monitor.measure_step(wave_id, tokens=tokens)
+            return self.monitor.measure_step(wave_id, tokens=tokens,
+                                             blocking=False)
         if self.session is not None:
             return self.session.region(f"serve/wave{wave_id}",
                                        tokens=tokens)

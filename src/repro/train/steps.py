@@ -12,9 +12,10 @@ roofline accounting stays exact (scan bodies are cost-counted once).
 
 Energy measurement goes through a shared ``pmt.Session``
 (:func:`make_measured_train_step`): the step runs inside a session
-region fenced by ``block_until_ready``, so the train loop resolves its
-per-step energy off the same background sampler the serve engine and any
-monitors use — no blocking sensor reads interleaved with dispatch.
+region fenced by ``block_until_ready``; region exit enqueues the span
+O(1) and per-step energy resolves on the session's background resolver
+thread off the same sampler the serve engine and any monitors use — no
+sensor reads or resolution work interleaved with dispatch.
 """
 from __future__ import annotations
 
@@ -95,7 +96,8 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
 def make_measured_train_step(step_fn: Callable, monitor,
                              tokens_per_step: Optional[int] = None,
                              flops_per_step: Optional[float] = None,
-                             fence_key: str = "loss"):
+                             fence_key: str = "loss",
+                             blocking: bool = False):
     """Wrap a (jitted) train step with fenced PMT measurement.
 
     ``monitor`` is a :class:`repro.core.PowerMonitor`; its session region
@@ -103,13 +105,22 @@ def make_measured_train_step(step_fn: Callable, monitor,
     the region exits so asynchronous dispatch can't leak a step's tail
     into its successor.
 
-    Returns ``measured(state, batch, step) -> (state, metrics, box)``
-    where ``box.records`` carries the step's :class:`StepEnergy` rows.
+    Measurement is non-blocking by default: region exit is an O(1) span
+    enqueue, the step's energy resolves on the session's background
+    resolver thread, and the monitor's cumulative accounting / CSV log
+    update as spans resolve.  No per-step measurement dict is built on
+    the training thread.  Returns ``measured(state, batch, step) ->
+    (state, metrics, box)`` where ``box.records`` is future-style: it
+    materialises the step's :class:`StepEnergy` rows on first access
+    (resolving synchronously if the resolver has not got there yet), so
+    a loop that logs every Nth step only pays resolution on those steps.
+    Pass ``blocking=True`` to restore eager per-step materialisation.
     """
 
     def measured(state, batch, step: int):
         with monitor.measure_step(step, flops=flops_per_step,
-                                  tokens=tokens_per_step) as box:
+                                  tokens=tokens_per_step,
+                                  blocking=blocking) as box:
             state, metrics = step_fn(state, batch)
             jax.block_until_ready(metrics[fence_key])
         return state, metrics, box

@@ -1,0 +1,453 @@
+"""Tests for the zero-allocation sampling core: NumPy ring + seqlock
+readers, vectorized/async span resolution, eviction flagging, and parity
+with the scalar resolution path of the previous revision."""
+import threading
+import time
+import tracemalloc
+
+import numpy as np
+import pytest
+
+import repro.core as pmt
+from repro.core.resolver import batch_joules_at
+from repro.core.sampler import (LegacyRingSampler, RingSampler,
+                                SamplerWindowEvicted)
+from repro.core.sensor import Sample, Sensor
+from repro.core.session import SensorPool, Session, _joules_at
+from repro.core.state import State
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _publish_rows(sampler, ts, js, ws=None):
+    """Write synthetic rows directly (no sensor, no thread)."""
+    if ws is None:
+        ws = [float("nan")] * len(ts)
+    with sampler._write_mutex:
+        for t, j, w in zip(ts, js, ws):
+            sampler._publish(float(t), float(j), float(w))
+
+
+def _dummy_sampler(capacity=64, **kw):
+    sensor = pmt.create("dummy", **kw)
+    return RingSampler(sensor, period_s=0.001, capacity=capacity)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized interpolation parity with the scalar reference
+# ---------------------------------------------------------------------------
+
+def _synthetic_timeline(n=500, seed=0, dup_frac=0.05):
+    rng = np.random.default_rng(seed)
+    dt = rng.uniform(0.0, 0.002, size=n)
+    dt[rng.random(n) < dup_frac] = 0.0         # duplicate timestamps
+    ts = np.cumsum(dt)
+    js = np.cumsum(rng.uniform(0.0, 0.1, size=n))
+    return ts, js
+
+
+def test_batch_joules_at_matches_scalar_reference():
+    ts, js = _synthetic_timeline()
+    states = [State(timestamp_s=float(t), joules=float(j))
+              for t, j in zip(ts, js)]
+    ts_list = [float(t) for t in ts]
+    rng = np.random.default_rng(7)
+    # Interior points, exact sample points (incl. duplicates), and
+    # points clamped off both ends.
+    queries = np.concatenate([
+        rng.uniform(ts[0], ts[-1], size=400),
+        ts[rng.integers(0, len(ts), size=100)],
+        np.array([ts[0] - 1.0, ts[-1] + 1.0, ts[0], ts[-1]]),
+    ])
+    got = batch_joules_at(ts, js, queries)
+    want = np.array([_joules_at(states, ts_list, float(t))
+                     for t in queries])
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-9)
+
+
+def test_batch_joules_at_single_sample_timeline():
+    ts = np.array([1.0])
+    js = np.array([5.0])
+    out = batch_joules_at(ts, js, np.array([0.0, 1.0, 2.0]))
+    np.testing.assert_allclose(out, [5.0, 5.0, 5.0])
+
+
+def test_window_arrays_straddles_ring_seam():
+    """Parity must survive wraparound: the seam-unrolled window equals
+    the logical tail of the write stream."""
+    s = _dummy_sampler(capacity=16)
+    n = 40
+    ts = np.arange(n, dtype=np.float64)
+    js = 2.0 * ts
+    _publish_rows(s, ts, js)
+    full_ts, full_js, _ = s.timeline()
+    np.testing.assert_array_equal(full_ts, ts[-16:])
+    np.testing.assert_array_equal(full_js, js[-16:])
+    # A window that straddles the physical seam (wrap at index 40%16=8).
+    wts, wjs, evicted = s.window_arrays(30.2, 36.5)
+    assert not evicted
+    np.testing.assert_array_equal(wts, np.arange(30, 38, dtype=np.float64))
+    states = [State(timestamp_s=float(t), joules=float(j))
+              for t, j in zip(full_ts, full_js)]
+    for q in (30.2, 33.0, 36.5, 31.999):
+        got = batch_joules_at(wts, wjs, np.array([q]))[0]
+        want = _joules_at(states, list(full_ts), q)
+        assert got == pytest.approx(want, abs=1e-9)
+
+
+def test_session_resolution_parity_array_vs_legacy(monkeypatch):
+    """End-to-end: the async array core and the legacy list core resolve
+    identical joules on a deterministic virtual-clock timeline."""
+    results = {}
+    for legacy in (False, True):
+        monkeypatch.setenv("PMT_LEGACY_RING", "1" if legacy else "0")
+        clk = FakeClock()
+        sensor = pmt.create("dummy", watts=75.0, clock=clk)
+        with Session([sensor], pool=SensorPool()) as sess:
+            with sess.region("a") as ra:
+                clk.advance(1.5)
+                with sess.region("b") as rb:
+                    clk.advance(0.25)
+            results[legacy] = (ra.measurements[0].joules,
+                               rb.measurements[0].joules)
+    assert results[False] == pytest.approx(results[True], abs=1e-9)
+    assert results[False][0] == pytest.approx(75.0 * 1.75, abs=1e-6)
+    assert results[False][1] == pytest.approx(75.0 * 0.25, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Seqlock: torn-read detection under a hammering writer
+# ---------------------------------------------------------------------------
+
+def test_seqlock_torture_no_torn_reads():
+    """One writer publishing as fast as it can, N readers copying: every
+    copy must be internally consistent (ts sorted, js == 2*ts row-wise).
+    A torn read (row half-written or slice straddling an in-flight
+    overwrite) would break the js == 2*ts invariant."""
+    s = _dummy_sampler(capacity=256)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        t = 0.0
+        with s._write_mutex:
+            pass
+        while not stop.is_set():
+            t += 1.0
+            with s._write_mutex:
+                s._publish(t, 2.0 * t, 0.0)
+
+    def reader():
+        copies = 0
+        try:
+            while not stop.is_set():
+                ts, js, _ = s.timeline()
+                if ts.size:
+                    if np.any(np.diff(ts) < 0):
+                        raise AssertionError("unsorted timeline copy")
+                    if not np.array_equal(js, 2.0 * ts):
+                        raise AssertionError("torn read: js != 2*ts")
+                wts, wjs, _ = s.window_arrays(float(ts[0]) if ts.size
+                                              else 0.0, 1e18)
+                if wts.size and not np.array_equal(wjs, 2.0 * wts):
+                    raise AssertionError("torn window read")
+                copies += 1
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+        else:
+            errors.append(None) if copies == 0 else None
+
+    w = threading.Thread(target=writer)
+    readers = [threading.Thread(target=reader) for _ in range(4)]
+    w.start()
+    for r in readers:
+        r.start()
+    time.sleep(0.4)
+    stop.set()
+    w.join(timeout=5)
+    for r in readers:
+        r.join(timeout=5)
+    assert errors == []
+
+
+def test_readers_never_wait_on_slow_sensor_io():
+    """Satellite: the old core's sample_now held a lock across sensor
+    I/O.  Now a 100 ms sensor read in flight must not delay readers."""
+
+    class SlowSensor(Sensor):
+        name = "slow"
+        kind = "modeled"
+        native_period_s = 3600.0
+
+        def _sample(self):
+            time.sleep(0.1)
+            return Sample(watts=1.0)
+
+    s = RingSampler(SlowSensor(), capacity=64)
+    _publish_rows(s, [0.0, 1.0], [0.0, 1.0])
+    t = threading.Thread(target=s.sample_now)
+    t.start()
+    time.sleep(0.02)               # the slow read is now in flight
+    t0 = time.perf_counter()
+    ts, js, _ = s.timeline()
+    s.window_arrays(0.0, 1.0)
+    reader_s = time.perf_counter() - t0
+    t.join()
+    assert ts.size >= 2
+    assert reader_s < 0.05, f"reader stalled {reader_s:.3f}s on sensor I/O"
+
+
+# ---------------------------------------------------------------------------
+# Zero-allocation steady state
+# ---------------------------------------------------------------------------
+
+def test_tick_retains_zero_allocations_in_steady_state():
+    """After warm-up, N sampler ticks must not grow traced memory: the
+    ring is written in place, no States are retained, nothing
+    accumulates.  (The legacy list core fails this by design — it
+    appends a State per tick.)"""
+    sensor = pmt.create("dummy", watts=5.0)
+    s = RingSampler(sensor, period_s=0.001, capacity=4096)
+    for _ in range(256):           # warm up: caches, small-int pool, ...
+        s._tick()
+    tracemalloc.start()
+    try:
+        snap1 = tracemalloc.take_snapshot()
+        for _ in range(1024):
+            s._tick()
+        snap2 = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    growth = 0
+    for stat in snap2.compare_to(snap1, "filename"):
+        fname = stat.traceback[0].filename
+        if "repro" in fname and stat.size_diff > 0:
+            growth += stat.size_diff
+    # The residual is the O(1) set of live floats (the sensor's
+    # integration state, rebound each tick) — ~1 KiB regardless of tick
+    # count.  Per-tick retention (the legacy core's State + list slots,
+    # >= 56 B/tick) would exceed 57 KiB here.
+    assert growth < 4096, \
+        f"sampler tick retained {growth}B over 1024 ticks"
+
+
+def test_legacy_tick_retains_memory_for_contrast():
+    sensor = pmt.create("dummy", watts=5.0)
+    s = LegacyRingSampler(sensor, period_s=0.001, maxlen=1 << 20)
+    for _ in range(64):
+        s._tick()
+    tracemalloc.start()
+    try:
+        snap1 = tracemalloc.take_snapshot()
+        for _ in range(1024):
+            s._tick()
+        snap2 = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    growth = sum(st.size_diff
+                 for st in snap2.compare_to(snap1, "filename")
+                 if "repro" in st.traceback[0].filename
+                 and st.size_diff > 0)
+    assert growth > 10_000         # a State + 2 list slots per tick
+
+
+# ---------------------------------------------------------------------------
+# Eviction: spans longer than the ring flag instead of silently lying
+# ---------------------------------------------------------------------------
+
+def test_span_outliving_ring_flags_window_evicted(monkeypatch):
+    monkeypatch.setenv("PMT_RING_CAPACITY", "32")
+    with Session(["dummy"], pool=SensorPool(), period_s=0.001) as sess:
+        with sess.region("long") as r:
+            time.sleep(0.3)        # ~300 ticks >> 32-slot ring
+        with pytest.warns(SamplerWindowEvicted):
+            m = r.measurements[0]
+        assert m.window_evicted
+        assert sess.stats()["evicted"] >= 1
+    # MemoryExporter records carry the flag too
+    mem = pmt.MemoryExporter()
+    monkeypatch.setenv("PMT_RING_CAPACITY", "32")
+    with Session(["dummy"], pool=SensorPool(), period_s=0.001,
+                 exporters=[mem]) as sess:
+        with sess.region("long"):
+            time.sleep(0.3)
+        with pytest.warns(SamplerWindowEvicted):
+            sess.flush()
+    assert any(rec.window_evicted for rec in mem.records)
+
+
+def test_short_span_is_not_flagged():
+    with Session(["dummy"], pool=SensorPool()) as sess:
+        with sess.region("short") as r:
+            time.sleep(0.005)
+        assert r.measurements[0].window_evicted is False
+
+
+def test_writer_marks_pinned_bracket_eviction():
+    s = _dummy_sampler(capacity=8)
+    _publish_rows(s, np.arange(8.0), np.arange(8.0))
+    tok = s.pin(0.5)               # bracketed by sample at t=0
+    assert not s.pin_evicted(tok)
+    _publish_rows(s, [8.0, 9.0], [8.0, 9.0])   # wraps over t=0 and t=1
+    assert s.pin_evicted(tok)
+    assert s.evictions >= 1
+    s.unpin(tok)
+    assert not s.pin_evicted(tok)
+
+
+# ---------------------------------------------------------------------------
+# Async resolution behaviour
+# ---------------------------------------------------------------------------
+
+def test_spans_resolve_in_background_without_access():
+    """Closed regions reach exporters via the resolver thread alone —
+    no measurements access, no flush."""
+    mem = pmt.MemoryExporter()
+    with Session(["dummy"], pool=SensorPool(), exporters=[mem]) as sess:
+        for i in range(5):
+            with sess.region(f"bg{i}"):
+                pass
+        deadline = time.time() + 5.0
+        while len(mem.records) < 5 and time.time() < deadline:
+            time.sleep(0.01)
+    assert sorted(r.path for r in mem.records) == [f"bg{i}"
+                                                   for i in range(5)]
+
+
+def test_async_resolution_defers_instead_of_sampling():
+    """The resolver must not perturb the sensor: spans the ring does not
+    cover yet wait for the background tick instead of forcing reads."""
+
+    class CountingSensor(Sensor):
+        name = "counting2"
+        kind = "modeled"
+        native_period_s = 3600.0   # background thread effectively idle
+
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.samples = 0
+
+        def _sample(self):
+            self.samples += 1
+            return Sample(watts=1.0)
+
+    sensor = CountingSensor()
+    with Session([sensor], pool=SensorPool()) as sess:
+        time.sleep(0.05)
+        before = sensor.samples
+        handles = []
+        for i in range(10):
+            with sess.region(f"r{i}") as h:
+                pass
+            handles.append(h)
+        time.sleep(0.15)           # several resolver polls
+        assert sensor.samples == before      # deferred, not sampled
+        assert not any(h.resolved for h in handles)
+        # Forcing resolution takes one closing sample for the batch.
+        ms = sess.flush()
+        assert len(ms) == 10
+        assert sensor.samples > before
+        assert all(h.resolved for h in handles)
+
+
+def test_on_resolved_callback_fires_exactly_once():
+    calls = []
+    with Session(["dummy"], pool=SensorPool()) as sess:
+        with sess.region("cb", on_resolved=calls.append) as r:
+            pass
+        r.measurements
+        r.measurements
+        sess.flush()
+    assert len(calls) == 1
+    assert calls[0][0].sensor == "dummy"
+
+
+def test_queue_overflow_counts_drops_and_handles_still_resolve():
+    with Session(["dummy"], pool=SensorPool(), max_pending=4) as sess:
+        # Stop the background resolver so the queue deterministically
+        # fills (otherwise a well-timed drain could empty it mid-loop).
+        sess._stop_resolver()
+        handles = []
+        for i in range(10):
+            with sess.region(f"o{i}") as h:
+                pass
+            handles.append(h)
+        # The 6 oldest spans fell off the bounded auto-resolve queue...
+        assert sess.stats()["dropped"] == 6
+        # ...and every handle still resolves on demand.
+        for h in handles:
+            assert h.measurements[0].sensor == "dummy"
+    assert sess.stats()["dropped"] == 6
+
+
+def test_on_resolved_callback_may_reenter_session():
+    """Regression: callbacks used to fire under the resolve lock, so a
+    callback touching the session deadlocked.  They now run after the
+    lock is released and may call stats()/flush()/measurements."""
+    seen = []
+    with Session(["dummy"], pool=SensorPool()) as sess:
+        def cb(ms):
+            seen.append((ms[0].sensor, sess.stats()["resolved"]))
+            sess.flush()                      # re-enter: must not hang
+        with sess.region("reent", on_resolved=cb) as r:
+            pass
+        done = threading.Event()
+        t = threading.Thread(target=lambda: (r.measurements, done.set()))
+        t.start()
+        assert done.wait(timeout=10.0), "callback deadlocked the session"
+        t.join()
+    assert seen and seen[0][0] == "dummy" and seen[0][1] >= 1
+
+
+def test_flush_returns_background_settled_spans():
+    """flush() keeps the PR-1 contract: every span closed since the last
+    flush comes back, even ones the resolver settled on its own."""
+    with Session(["dummy"], pool=SensorPool()) as sess:
+        with sess.region("bg"):
+            pass
+        # Wait until the background resolver has fully settled the span.
+        deadline = time.time() + 5.0
+        while sess.stats()["resolved"] < 1 and time.time() < deadline:
+            time.sleep(0.01)
+        assert sess.stats()["resolved"] == 1
+        with sess.region("fg") as r:
+            pass
+        r.measurements                        # settle via handle access
+        out = sess.flush()
+        assert [ms[0].label for ms in out] == ["bg", "fg"]
+        assert sess.flush() == []             # drained
+
+
+def test_flush_surfaces_unresolvable_spans_as_errors():
+    pool = SensorPool()
+    sess = Session(["dummy"], pool=pool)
+    with sess.region("orphan") as r:
+        pass
+    # Yank the lease out from under the pending span.
+    sess._release_leases()
+    sess.flush()
+    assert sess.stats()["resolve_errors"] == 1
+    with pytest.raises(pmt.SensorError):
+        r.measurements
+    with pytest.warns(UserWarning):
+        sess.close()
+
+
+def test_close_is_bounded_and_idempotent():
+    sess = Session(["dummy"], pool=SensorPool())
+    with sess.region("x"):
+        pass
+    t0 = time.perf_counter()
+    sess.close(timeout=2.0)
+    assert time.perf_counter() - t0 < 5.0
+    sess.close()                   # idempotent
+    assert sess.stats()["resolved"] >= 1
