@@ -109,6 +109,60 @@ def listing2_decorators():
     print("wrapped result:", measures.result)
 
 
+def serving_mode():
+    """Serving: continuous batching with per-request J/token.
+
+    The ``ServeEngine`` decodes over fixed slots with *per-slot position
+    counters*: a finished request's slot is refilled from the queue on
+    the next step (its KV row is scattered in place via the
+    ``kernels/cache_update`` Pallas kernel on TPU), so short requests
+    never idle behind long ones the way synchronized waves force them
+    to.  Prompt lengths are bucketed to powers of two, so the
+    prefill/decode jit caches stay bounded no matter how many distinct
+    lengths arrive.
+
+    Energy attribution is two-level and fully non-blocking:
+
+      * one aggregate region per ``generate()`` call
+        (``serve/batch<N>``) whose token count is the *actually
+        generated* total — never ``batch * max_steps`` padding;
+      * one flat span per request (``serve/req<N>``, admission ->
+        last token) resolved off the shared background ring sampler, so
+        each request gets its own J/token.  Token counts across request
+        spans sum exactly to the aggregate.
+
+    benchmarks/bench_serve.py A/Bs this against the synchronized-wave
+    baseline (``mode="wave"``); see BENCH_serve.json for the numbers.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro import configs
+    from repro.models import model as model_mod
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = dataclasses.replace(
+        configs.get_config("smollm-135m", reduced=True), dtype="float32")
+    params, _ = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    with pmt.Session(["dummy"]) as sess:
+        mem = sess.add_exporter(pmt.MemoryExporter())
+        eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                          session=sess)
+        done = eng.generate([Request(prompt=[1, 2, 3], max_new_tokens=8),
+                             Request(prompt=[4, 5], max_new_tokens=2),
+                             Request(prompt=[6], max_new_tokens=5)])
+        sess.flush()
+        tokens = sum(len(r.out) for r in done)
+        for rec in mem.records:
+            if rec.path.startswith("serve/"):
+                print(f"  {rec.path:16s} {rec.tokens:4d} tok "
+                      f"{rec.joules:9.4f} J "
+                      f"{rec.joules / max(rec.tokens, 1):9.5f} J/token")
+        print(f"served {len(done)} requests / {tokens} tokens; decode "
+              f"compiled {eng.compile_counts['decode']}x (bucketed shapes)")
+
+
 def dump_mode():
     """Dump mode: background thread writes a power timeline."""
     sensor = pmt.create("dummy", watts_fn=lambda t: 75.0 + 25.0 * (t % 0.1) / 0.1)
@@ -128,5 +182,7 @@ if __name__ == "__main__":
     listing1_measurement_mode()
     print("\n== decorators, stacked (paper Listing 2 / Fig. 2)")
     listing2_decorators()
+    print("\n== serving (continuous batching, per-request J/token)")
+    serving_mode()
     print("\n== dump mode")
     dump_mode()

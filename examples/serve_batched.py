@@ -1,10 +1,15 @@
-"""Batched serving example with J/token reporting.
+"""Continuous-batching serving example with aggregate and per-request
+J/token reporting (pass --mode wave for the synchronized baseline).
 
-Run: PYTHONPATH=src python examples/serve_batched.py
+Run: PYTHONPATH=src python examples/serve_batched.py [launcher flags]
 """
+import sys
+
 from repro.launch import serve as serve_launcher
 
 if __name__ == "__main__":
+    # example defaults first; CLI flags appended so they win (argparse
+    # keeps the last occurrence)
     serve_launcher.main(["--arch", "qwen3-0.6b", "--reduced",
                          "--requests", "8", "--batch", "4",
-                         "--max-new", "12"])
+                         "--max-new", "12"] + sys.argv[1:])

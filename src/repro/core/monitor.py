@@ -38,7 +38,12 @@ from repro.core.session import Session
 
 @dataclasses.dataclass(frozen=True)
 class StepEnergy:
-    """Energy record for one step, one sensor."""
+    """Energy record for one step (or serve request), one sensor.
+
+    ``scope`` distinguishes training/serving *steps* from per-request
+    serve spans (``measure_request``); ``step`` holds the request id for
+    the latter.
+    """
 
     step: int
     sensor: str
@@ -48,6 +53,7 @@ class StepEnergy:
     watts: float
     flops: Optional[float] = None
     tokens: Optional[int] = None
+    scope: str = "step"
 
     def report(self) -> EfficiencyReport:
         return EfficiencyReport(joules=self.joules, seconds=self.seconds,
@@ -103,7 +109,6 @@ class PowerMonitor:
         return self._session
 
     # -- per-step measurement --------------------------------------------
-    @contextlib.contextmanager
     def measure_step(self, step: int, flops: Optional[float] = None,
                      tokens: Optional[int] = None, blocking: bool = True):
         """Context manager measuring one fenced step across all sensors.
@@ -122,23 +127,56 @@ class PowerMonitor:
         The caller must ensure device work is complete before the block
         exits (``jax.block_until_ready`` on the step outputs).
         """
+        return self._measure(f"step{step}", step, flops, tokens, blocking,
+                             nested=True, scope="step")
+
+    def measure_request(self, request_id: int,
+                        flops: Optional[float] = None,
+                        tokens: Optional[int] = None,
+                        blocking: bool = False):
+        """Measure one *serve request* end to end (admission -> last token).
+
+        Unlike ``measure_step`` this opens a flat (non-nested) session
+        span: the serve engine holds many request spans open at once and
+        closes them in completion order, which the thread-local nesting
+        stack cannot express.  Records land with ``scope="request"`` and
+        ``step=request_id``; read them back via :meth:`request_records`
+        or :meth:`per_request_energy` (J/token per request).
+
+        Request spans overlap each other *and* the aggregate
+        ``measure_step`` region covering the same wall-clock window, so
+        they are attribution views, not additional energy: they are
+        excluded from :attr:`cumulative_joules` and the per-step CSV
+        log (which both account each joule exactly once, via steps).
+        """
+        return self._measure(f"req{request_id}", request_id, flops, tokens,
+                             blocking, nested=False, scope="request")
+
+    @contextlib.contextmanager
+    def _measure(self, label: str, step: int, flops: Optional[float],
+                 tokens: Optional[int], blocking: bool, nested: bool,
+                 scope: str):
         box = _StepBox()
 
         def finish(measurements):
             recs = [StepEnergy(
                 step=step, sensor=m.sensor, kind=m.kind, joules=m.joules,
                 seconds=m.seconds, watts=m.watts, flops=flops,
-                tokens=tokens) for m in measurements]
+                tokens=tokens, scope=scope) for m in measurements]
             with self._lock:
                 self._records.extend(recs)
-                self._cumulative_joules += sum(r.joules for r in recs)
+                if scope == "step":
+                    # request spans overlap the step region measuring
+                    # the same window — counting both would double-book
+                    # joules in the checkpointable total and the CSV
+                    self._cumulative_joules += sum(r.joules for r in recs)
+                    for r in recs:
+                        self._write_log(r)
                 self._inflight.discard(box)
-                for r in recs:
-                    self._write_log(r)
             box._records = recs
 
-        handle = self._session.region(f"step{step}", flops=flops,
-                                      tokens=tokens, on_resolved=finish)
+        handle = self._session.region(label, flops=flops, tokens=tokens,
+                                      on_resolved=finish, nested=nested)
         box._handle = handle
         handle.__enter__()
         try:
@@ -199,6 +237,29 @@ class PowerMonitor:
         self._settle()
         with self._lock:
             return list(self._records)
+
+    # -- per-request accounting (serve path) -----------------------------
+    def request_records(self) -> List[StepEnergy]:
+        """Resolved ``measure_request`` records (scope == "request")."""
+        return [r for r in self.records() if r.scope == "request"]
+
+    def per_request_energy(self) -> Dict[int, Dict[str, float]]:
+        """Aggregate per-request accounting across sensors.
+
+        Returns ``{request_id: {"joules", "seconds", "tokens",
+        "j_per_token"}}`` — joules summed over sensors, seconds the max
+        (sensors cover the same wall interval), J/token against the
+        request's generated-token count.
+        """
+        out: Dict[int, Dict[str, float]] = {}
+        for r in self.request_records():
+            d = out.setdefault(r.step, {"joules": 0.0, "seconds": 0.0,
+                                        "tokens": r.tokens or 0})
+            d["joules"] += r.joules
+            d["seconds"] = max(d["seconds"], r.seconds)
+        for d in out.values():
+            d["j_per_token"] = d["joules"] / max(d["tokens"], 1)
+        return out
 
     def close(self) -> None:
         try:

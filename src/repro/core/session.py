@@ -254,12 +254,12 @@ class _Span:
 
     __slots__ = ("path", "label", "depth", "flops", "tokens",
                  "t0", "t1", "snap", "pins", "resolved", "error",
-                 "on_resolved", "seq")
+                 "on_resolved", "seq", "nested")
 
     def __init__(self, path: str, label: str, depth: int,
                  flops: Optional[float], tokens: Optional[int],
                  t0: Dict[Any, float], snap, pins,
-                 on_resolved):
+                 on_resolved, nested: bool = True):
         self.path = path
         self.label = label
         self.depth = depth
@@ -273,6 +273,7 @@ class _Span:
         self.error: Optional[BaseException] = None
         self.on_resolved = on_resolved    # callback(Measurements), once
         self.seq = 0                      # close order (set at close)
+        self.nested = nested              # False: span skipped the stack
 
 
 class RegionHandle:
@@ -289,18 +290,20 @@ class RegionHandle:
 
     def __init__(self, session: "Session", label: Optional[str],
                  flops: Optional[float], tokens: Optional[int],
-                 on_resolved=None):
+                 on_resolved=None, nested: bool = True):
         self._session = session
         self._label = label
         self._flops = flops
         self._tokens = tokens
         self._on_resolved = on_resolved
+        self._nested = nested
         self._span: Optional[_Span] = None
 
     def __enter__(self) -> "RegionHandle":
         self._span = self._session._open_span(self._label, self._flops,
                                               self._tokens,
-                                              self._on_resolved)
+                                              self._on_resolved,
+                                              nested=self._nested)
         return self
 
     def __exit__(self, *exc) -> bool:
@@ -463,15 +466,22 @@ class Session:
     def region(self, label: Optional[str] = None, *,
                flops: Optional[float] = None,
                tokens: Optional[int] = None,
-               on_resolved: Optional[Callable] = None) -> RegionHandle:
+               on_resolved: Optional[Callable] = None,
+               nested: bool = True) -> RegionHandle:
         """Open a (nestable, thread-safe, non-blocking) measured region.
 
         ``on_resolved`` is called exactly once with the span's
         ``Measurements`` when it resolves — on the background resolver
         thread, or on whichever thread forces resolution first.
+
+        ``nested=False`` opens a *flat* span: it neither reads nor joins
+        the thread-local label stack (path == label, depth 0), so many
+        spans can be open concurrently on one thread and close in any
+        order — the serve engine's per-request spans, whose lifetimes
+        interleave as slots retire and refill, need exactly this.
         """
         return RegionHandle(self, label, flops, tokens,
-                            on_resolved=on_resolved)
+                            on_resolved=on_resolved, nested=nested)
 
     def _label_stack(self) -> List[str]:
         stack = getattr(self._tls, "stack", None)
@@ -480,7 +490,8 @@ class Session:
         return stack
 
     def _open_span(self, label: Optional[str], flops: Optional[float],
-                   tokens: Optional[int], on_resolved) -> _Span:
+                   tokens: Optional[int], on_resolved,
+                   nested: bool = True) -> _Span:
         if self._closed:
             raise SensorError("session is closed")
         open3, pairs = self._hot_snapshot
@@ -490,8 +501,12 @@ class Session:
                 "call session.attach(...)")
         if label is None:
             label = f"region{next(self._anon)}"
-        stack = self._label_stack()
-        path = "/".join(stack + [label]) if stack else label
+        if nested:
+            stack = self._label_stack()
+            path = "/".join(stack + [label]) if stack else label
+            depth = len(stack)
+        else:
+            path, depth = label, 0
         # Spans key their timestamps by pool key, not sensor name — two
         # pooled sensors may share a name (same backend, different kwargs).
         t0: Dict[Any, float] = {}
@@ -500,9 +515,10 @@ class Session:
             t = clk()
             t0[k] = t
             pins[k] = (sampler, sampler.pin(t))
-        span = _Span(path, label, len(stack), flops, tokens, t0, pairs,
-                     pins, on_resolved)
-        stack.append(label)
+        span = _Span(path, label, depth, flops, tokens, t0, pairs,
+                     pins, on_resolved, nested=nested)
+        if nested:
+            stack.append(label)
         return span
 
     def _close_span(self, span: Optional[_Span]) -> None:
@@ -514,9 +530,10 @@ class Session:
         else:                        # a backend attached mid-span
             t0 = span.t0
             span.t1 = {k: clk() for k, clk in pairs if k in t0}
-        stack = self._label_stack()
-        if stack and stack[-1] == span.label:
-            stack.pop()
+        if span.nested:
+            stack = self._label_stack()
+            if stack and stack[-1] == span.label:
+                stack.pop()
         span.seq = next(self._close_seq)
         # O(1) hand-off to the background resolver; no locks, no sensor
         # I/O, no resolution work on the caller's thread.  The wake event

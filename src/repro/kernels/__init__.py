@@ -11,6 +11,7 @@ own perf-critical kernel (flash attention):
   gridder          IDG-style visibility -> subgrid accumulation
   degridder        adjoint of gridder
   flash_attention  blockwise online-softmax attention (GQA/causal/window)
+  cache_update     per-row KV-cache scatter (continuous-batching decode)
 
 Every kernel ships ops.py (jit'd wrapper; interpret= for CPU) and ref.py
 (pure-jnp oracle); tests sweep shapes/dtypes and assert_allclose against

@@ -1,0 +1,59 @@
+"""Per-row KV-cache scatter — the continuous-batching cache kernel.
+
+Sequence-level continuous batching gives every batch slot its own
+position counter, so one decode step writes row ``b``'s new key/value at
+``slots[b]`` — a *different* cache offset per row.  XLA's
+``dynamic_update_slice`` only takes one start index per axis, so the
+stock lowering is a batch of B separate single-row updates (or a one-hot
+scatter that touches the whole cache).  This kernel does the write as a
+true scatter: the grid walks the batch, the output BlockSpec's index map
+reads the slot from scalar-prefetch SMEM, and each program DMAs exactly
+one (1, 1, F) row into place.  The cache operand is aliased to the
+output, so untouched rows are never copied.
+
+Layout note: callers flatten trailing dims to one lane axis F
+(``ops.cache_update`` handles the reshape).  On real TPUs F should be a
+multiple of 128 for an aligned store; the serve path's correctness gate
+runs in interpret mode where no such constraint applies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(slots_ref, new_ref, cache_ref, out_ref):
+    # cache_ref is the aliased full cache (never read): the alias keeps
+    # every row this program does not own; only the slot row is written.
+    del slots_ref, cache_ref
+    out_ref[...] = new_ref[...]
+
+
+def cache_update_pallas(cache: jnp.ndarray, new: jnp.ndarray,
+                        slots: jnp.ndarray,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Scatter ``new[b, 0]`` into ``cache[b, slots[b]]`` for every row.
+
+    cache: (B, C, F)   new: (B, 1, F)   slots: (B,) int32 in [0, C).
+    Returns the updated (B, C, F) cache; the input buffer is aliased.
+    """
+    b, _, f = cache.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, 1, f), lambda i, slots: (i, 0, 0)),  # new row
+            pl.BlockSpec(memory_space=pl.ANY),                    # cache
+        ],
+        out_specs=pl.BlockSpec((1, 1, f), lambda i, slots: (i, slots[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        # index 2 counts the scalar-prefetch operand: (slots, new, cache)
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(slots.astype(jnp.int32), new.astype(cache.dtype), cache)

@@ -1,0 +1,46 @@
+"""Dispatching wrapper for the per-row cache scatter.
+
+``cache_update`` accepts caches with arbitrary trailing dims —
+(B, C, KVH, hd) attention K/V, (B, C, R) MLA latents — flattens them to
+the kernel's (B, C, F) layout, and routes to the Pallas scatter on TPU
+or the ``vmap``'d ``dynamic_update_slice`` oracle elsewhere.
+
+``impl`` — "auto" (Pallas iff the default backend is TPU), "pallas",
+"pallas_interpret" (CPU parity testing), or "lax".  The env var
+``PMT_CACHE_UPDATE_IMPL`` overrides "auto" for experiments.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cache_update.cache_update import cache_update_pallas
+from repro.kernels.cache_update.ref import cache_update_ref
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        impl = os.environ.get("PMT_CACHE_UPDATE_IMPL", "auto")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "lax"
+    return impl
+
+
+def cache_update(cache: jnp.ndarray, new: jnp.ndarray, slots: jnp.ndarray,
+                 impl: str = "auto") -> jnp.ndarray:
+    """Write ``new[b, 0]`` at ``cache[b, slots[b]]`` for every batch row.
+
+    cache: (B, C, *rest)   new: (B, 1, *rest)   slots: (B,) int32.
+    """
+    impl = _resolve(impl)
+    if impl == "lax":
+        return cache_update_ref(cache, new, slots)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown cache_update impl {impl!r}")
+    b, c = cache.shape[:2]
+    flat = cache.reshape(b, c, -1)
+    out = cache_update_pallas(flat, new.astype(cache.dtype).reshape(b, 1, -1),
+                              slots, interpret=impl == "pallas_interpret")
+    return out.reshape(cache.shape)

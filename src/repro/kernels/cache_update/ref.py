@@ -1,0 +1,19 @@
+"""Pure-jax oracle for the per-row cache scatter.
+
+One ``dynamic_update_slice`` per batch row under ``vmap`` — exactly the
+semantics the Pallas kernel must reproduce (and the serve engine's
+fallback path where Pallas is unavailable, e.g. CPU/GPU backends).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def cache_update_ref(cache: jnp.ndarray, new: jnp.ndarray,
+                     slots: jnp.ndarray) -> jnp.ndarray:
+    """cache: (B, C, *rest)  new: (B, 1, *rest)  slots: (B,) int32."""
+
+    def row(c, n, s):
+        starts = (s,) + (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), starts)
+
+    return jax.vmap(row)(cache, new, slots.astype(jnp.int32))

@@ -1,9 +1,9 @@
-"""Serving launcher: batched requests through the ServeEngine with PMT
-J/token accounting.
+"""Serving launcher: continuous-batching ServeEngine with PMT J/token
+accounting — aggregate and per-request.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-      --reduced --requests 8 --max-new 16
+      --reduced --requests 8 --max-new 16 [--mode wave]
 """
 from __future__ import annotations
 
@@ -27,33 +27,52 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "wave"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, reduced=args.reduced)
     params, _ = model_mod.init_params(jax.random.PRNGKey(args.seed), cfg)
-    # One shared session: every wave is a region whose close is an O(1)
-    # enqueue; energy resolves on the background resolver thread and
-    # lands in the MemoryExporter — the serving thread never waits.
+    # One shared session: the aggregate batch region and every request's
+    # flat serve/req<N> span are O(1) enqueues; energy resolves on the
+    # background resolver thread into the MemoryExporter — the serving
+    # thread never waits.
     session = pmt.Session(["cpuutil", "tpu"])
     energy = session.add_exporter(pmt.MemoryExporter())
     engine = ServeEngine(cfg, params, batch_size=args.batch,
-                         max_len=args.max_len, session=session)
+                         max_len=args.max_len, session=session,
+                         mode=args.mode)
 
     rng = np.random.default_rng(args.seed)
+    # heterogeneous lengths: the workload continuous batching is for
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=rng.integers(2, 9)).tolist(),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=int(rng.integers(2, args.max_new + 1)))
             for _ in range(args.requests)]
     done = engine.generate(reqs)
     n_tokens = sum(len(r.out) for r in done)
     for i, r in enumerate(done[:4]):
         print(f"req{i}: prompt={r.prompt} -> {r.out}")
-    session.flush()              # settle any waves still in flight
-    j = energy.total_joules()    # across all attached backends
-    print(f"served {len(done)} requests, {n_tokens} tokens, "
-          f"{j:.2f} J total, {j / max(n_tokens, 1):.4f} J/token "
+    session.flush()              # settle any spans still in flight
+    per_req = [r for r in energy.records if r.path.startswith("serve/req")]
+    agg = [r for r in energy.records if not r.path.startswith("serve/req")]
+    agg_j = sum(r.joules for r in agg)
+    print(f"served {len(done)} requests, {n_tokens} tokens "
+          f"[{args.mode}], {agg_j:.2f} J aggregate, "
+          f"{agg_j / max(n_tokens, 1):.4f} J/token "
           f"(stats: {session.stats()})")
+    if per_req:
+        by_req = {}
+        for r in per_req:
+            d = by_req.setdefault(r.path, {"joules": 0.0, "tokens": r.tokens})
+            d["joules"] += r.joules
+        worst = max(by_req.items(),
+                    key=lambda kv: kv[1]["joules"] / max(kv[1]["tokens"], 1))
+        print(f"per-request spans: {len(by_req)} "
+              f"(token sum {sum(d['tokens'] for d in by_req.values())}); "
+              f"costliest {worst[0]}: "
+              f"{worst[1]['joules'] / max(worst[1]['tokens'], 1):.4f} J/token")
     session.close()
 
 

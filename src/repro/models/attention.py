@@ -276,43 +276,63 @@ def cache_spec_axes() -> Tuple[Optional[str], ...]:
 
 
 def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
-                          window: Optional[int] = None):
+                          window: Optional[int] = None,
+                          cache_impl: str = "auto"):
     """One-token decode against a cache.
 
-    x: (B, 1, d). cache: {"k","v"} (B, C, KVH, hd). cur_len: scalar count
-    of tokens already in the cache (== position of the new token).
+    x: (B, 1, d). cache: {"k","v"} (B, C, KVH, hd). cur_len: count of
+    tokens already in the cache (== position of the new token) — either
+    a scalar (synchronized decode, every row at the same position) or a
+    (B,) vector (continuous batching, per-slot position counters; the
+    new k/v land at a *different* cache offset per row via the
+    ``kernels/cache_update`` scatter).
     Returns (out (B,1,d), new_cache).
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), cur_len, jnp.int32)
+    cur = jnp.asarray(cur_len, jnp.int32)
+    per_row = cur.ndim == 1
+    positions = cur[:, None] if per_row else jnp.full((b, 1), cur, jnp.int32)
     if cfg.m_rope:
         positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
     q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
 
     cache_size = cache["k"].shape[1]
-    slot = (cur_len % cache_size) if window else cur_len
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
+    if per_row:
+        from repro.kernels.cache_update import ops as cu_ops
+        slot_rows = (cur % cache_size) if window \
+            else jnp.minimum(cur, cache_size - 1)
+        k = cu_ops.cache_update(cache["k"], k_new, slot_rows,
+                                impl=cache_impl)
+        v = cu_ops.cache_update(cache["v"], v_new, slot_rows,
+                                impl=cache_impl)
+    else:
+        slot = (cur_len % cache_size) if window else cur_len
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
     k = shard(k, *cache_spec_axes())
     v = shard(v, *cache_spec_axes())
 
-    slots = jnp.arange(cache_size, dtype=jnp.int32)
+    # Per-slot timeline: (B,1) row positions against (1,C) cache slots.
+    # The scalar path broadcasts the same position to every row, so both
+    # paths share one (B,C) formulation.
+    slots = jnp.arange(cache_size, dtype=jnp.int32)[None]        # (1,C)
+    cur_col = positions[..., 0] if cfg.m_rope else positions      # (B,1)
     if window:
-        # ring buffer: slot s holds the largest position p <= cur_len with
-        # p % size == s, i.e. p = cur_len - ((cur_len - s) mod size);
-        # negative p means the slot has never been written.
-        kv_pos = cur_len - jnp.mod(cur_len - slots, cache_size)
+        # ring buffer: slot s holds the largest position p <= cur with
+        # p % size == s, i.e. p = cur - ((cur - s) mod size); negative p
+        # means the slot has never been written.
+        kv_pos = cur_col - jnp.mod(cur_col - slots, cache_size)
         kv_valid = kv_pos >= 0
         kv_pos = jnp.maximum(kv_pos, 0)
     else:
-        kv_pos = slots
-        kv_valid = slots <= cur_len
-    kv_pos = jnp.broadcast_to(kv_pos[None], (b, cache_size))
-    kv_valid = jnp.broadcast_to(kv_valid[None], (b, cache_size))
+        kv_pos = jnp.broadcast_to(slots, (b, cache_size))
+        kv_valid = slots <= cur_col
+    kv_pos = jnp.broadcast_to(kv_pos, (b, cache_size))
+    kv_valid = jnp.broadcast_to(kv_valid, (b, cache_size))
 
-    q_pos = jnp.full((b, 1), cur_len, jnp.int32)
+    q_pos = cur_col.astype(jnp.int32)
     o = attention(cfg, q, k.astype(q.dtype), v.astype(q.dtype),
                   q_pos=q_pos, kv_pos=kv_pos, causal=True, window=window,
                   kv_valid=kv_valid, impl="dense")

@@ -191,12 +191,16 @@ def sinusoidal_embedding(seq: int, d: int, dtype=jnp.float32):
 
 
 def sinusoidal_row(pos, d: int, dtype=jnp.float32):
-    """One row of :func:`sinusoidal_embedding` at a traced position."""
+    """Row(s) of :func:`sinusoidal_embedding` at traced position(s).
+
+    pos: scalar -> (d,); (B,) vector (per-slot decode positions) -> (B, d).
+    """
     half = d // 2
     freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
                     / max(1, half - 1))
-    angles = pos.astype(jnp.float32) * freqs
-    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)]).astype(dtype)
+    angles = jnp.asarray(pos, jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)],
+                           axis=-1).astype(dtype)
 
 
 def default_positions(batch: int, seq: int, offset=0):

@@ -142,22 +142,38 @@ def prefill_mla_cache(cfg: ModelConfig, latent, k_rope, max_len: int,
     return cache
 
 
-def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len):
-    """One-token absorbed-MLA decode. x: (B,1,d)."""
+def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
+                         cache_impl: str = "auto"):
+    """One-token absorbed-MLA decode. x: (B,1,d).
+
+    ``cur_len`` is a scalar (synchronized decode) or a (B,) vector of
+    per-slot positions (continuous batching); the vector path scatters
+    each row's latent at its own offset via ``kernels/cache_update``.
+    """
     m = cfg.mla
     dt = x.dtype
     b = x.shape[0]
-    positions = jnp.full((b, 1), cur_len, jnp.int32)
+    cur = jnp.asarray(cur_len, jnp.int32)
+    per_row = cur.ndim == 1
+    positions = cur[:, None] if per_row else jnp.full((b, 1), cur, jnp.int32)
 
     q_nope, q_rope = _project_q(cfg, p, x, positions)          # (B,1,H,*)
     latent_new, k_rope_new = _project_kv_latent(cfg, p, x, positions)
 
-    latent = jax.lax.dynamic_update_slice(
-        cache["latent"], latent_new.astype(cache["latent"].dtype),
-        (0, cur_len, 0))
-    k_rope = jax.lax.dynamic_update_slice(
-        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
-        (0, cur_len, 0))
+    if per_row:
+        from repro.kernels.cache_update import ops as cu_ops
+        slot_rows = jnp.minimum(cur, cache["latent"].shape[1] - 1)
+        latent = cu_ops.cache_update(cache["latent"], latent_new, slot_rows,
+                                     impl=cache_impl)
+        k_rope = cu_ops.cache_update(cache["k_rope"], k_rope_new, slot_rows,
+                                     impl=cache_impl)
+    else:
+        latent = jax.lax.dynamic_update_slice(
+            cache["latent"], latent_new.astype(cache["latent"].dtype),
+            (0, cur_len, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+            (0, cur_len, 0))
     latent = shard(latent, "batch", "kv_seq", "kv_rank")
     k_rope = shard(k_rope, "batch", "kv_seq", None)
 
@@ -171,7 +187,10 @@ def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len):
     scores = (s_lat + s_rope).astype(jnp.float32) * scale
 
     cache_len = latent.shape[1]
-    valid = jnp.arange(cache_len)[None, None, None, :] <= cur_len
+    # (B,1,1,C) per-row validity: scalar cur broadcasts, vector cur masks
+    # each row against its own position counter.
+    valid = jnp.arange(cache_len)[None, None, None, :] \
+        <= positions[:, None, None, :]           # (B,1,1,C) over (B,H,1,C)
     scores = jnp.where(valid, scores, -2.0 ** 30)
     probs = jax.nn.softmax(scores, axis=-1)
 

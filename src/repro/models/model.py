@@ -353,6 +353,11 @@ def make_serve_fns(cfg: ModelConfig):
 
     prefill(params, batch, max_len) -> (last_logits (B,V), caches)
     decode_step(params, caches, tokens (B,1), cur_len) -> (logits, caches)
+
+    ``cur_len`` is a scalar (synchronized decode: every row at the same
+    position) or a (B,) int32 vector of per-slot position counters
+    (continuous batching: each row advances independently and its KV
+    lands at its own cache offset via the cache_update scatter).
     """
     lay = unit_layout(cfg)
 
@@ -406,8 +411,9 @@ def make_serve_fns(cfg: ModelConfig):
     def decode_step(params, caches, tokens, cur_len):
         x = layers.embed_tokens(cfg, params["embed"], tokens)
         if cfg.pos_embed == "sinusoidal":
-            x = x + layers.sinusoidal_row(cur_len, x.shape[-1],
-                                          x.dtype)[None, None]
+            cur = jnp.asarray(cur_len, jnp.int32)
+            row = layers.sinusoidal_row(cur, x.shape[-1], x.dtype)
+            x = x + (row[:, None, :] if cur.ndim else row[None, None])
         if lay.prefix:
             for i in lay.prefix:
                 x, c = blocks.block_decode(

@@ -1,3 +1,5 @@
-from repro.serve.engine import ServeEngine, make_decode_fn, make_prefill_fn
+from repro.serve.engine import (Request, ServeEngine, make_decode_fn,
+                                make_prefill_fn, prompt_bucket)
 
-__all__ = ["ServeEngine", "make_prefill_fn", "make_decode_fn"]
+__all__ = ["Request", "ServeEngine", "make_prefill_fn", "make_decode_fn",
+           "prompt_bucket"]

@@ -1,30 +1,48 @@
-"""Serving: prefill/decode step functions + a batched request engine.
+"""Serving: prefill/decode step functions + a continuous-batching engine.
 
 ``make_prefill_fn`` / ``make_decode_fn`` are the pjit-able pure steps the
 dry-run lowers (``serve_step`` for the decode_* shapes = one new token
 against a seq_len cache).
 
-``ServeEngine`` is a minimal batched server on top of them: fixed batch
-slots, synchronized decode (all slots share one position counter; slots
-are refilled between sequences — sequence-granularity continuous
-batching).  Per-slot position counters would need per-row cache scatter;
-documented as the production follow-up in DESIGN.md.
+``ServeEngine`` implements **sequence-level continuous batching**
+(``mode="continuous"``, the default): every batch slot carries its own
+position counter, one decode step advances all live slots at their own
+offsets (per-row KV-cache scatter via ``kernels/cache_update`` — Pallas
+on TPU, ``vmap``'d dynamic-update-slice elsewhere), and a slot that
+finishes its request is refilled from the queue on the *next* step
+instead of idling until the longest request in a synchronized wave
+drains.  Admission prefills one request at a time (prompt left-padded to
+a power-of-two bucket so the prefill jit cache stays bounded) and
+inserts the resulting cache row into the live batch; the decode step
+function therefore sees one shape ever and never recompiles across
+request mixes.  ``mode="wave"`` keeps the old synchronized-wave decode
+as the measured baseline (see benchmarks/bench_serve.py).
 
-PMT integration: each wave runs inside a ``pmt.Session`` region, so the
-engine shares one background sampler per backend with the train loop and
-any monitors on the same session, and reports J/token — the paper's
-energy-efficiency metric applied to serving.  The measurement path is
-fully non-blocking: wave close is an O(1) span enqueue, resolution and
-exporter fan-out happen on the session's background resolver thread, and
-no per-wave measurement dict is ever materialised on the serving thread.
-Passing a ``PowerMonitor`` still works (non-blocking too; its accounting
-updates as waves resolve).
+PMT integration — per-request energy attribution: each admitted request
+opens its own non-blocking flat session span (``serve/req<N>``,
+``nested=False`` so interleaved lifetimes don't fight the nesting
+stack), closed right after the fenced decode step that produced its
+last token; spans resolve in vectorized batches against the shared
+background ring sampler, so the engine reports true per-request
+J/token next to the aggregate region (``serve/batch<N>`` /
+``serve/wave<N>``) whose token count is the *actually generated* total
+(sum of per-request ``max_new_tokens``), never padded wave FLOPs.
+Concurrent request spans overlap in time, so per-request joules measure
+each request's wall-clock window at full device power; token counts sum
+exactly to the aggregate.  Passing a ``PowerMonitor`` routes the same
+spans through ``measure_step``/``measure_request`` accounting instead.
+
+Known semantic caveat: MoE layers route with cross-batch capacity
+limits, so under continuous batching a request's tokens can be dropped
+differently depending on its slot neighbours; dense/GQA/MLA/SSM archs
+decode each row independently (slot refill leaks no state — see
+tests/test_serve_continuous.py for the byte-parity gate).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,63 +77,272 @@ def make_decode_fn(cfg: ModelConfig, greedy: bool = True,
     return decode_fn
 
 
+def prompt_bucket(plen: int, min_bucket: int = 8) -> int:
+    """Pad a prompt length to its power-of-two bucket.
+
+    Bounds the prefill jit cache: every prompt length in (2^(k-1), 2^k]
+    shares one compiled prefill, so at most log2(max_len) prefill
+    variants exist no matter how many distinct lengths arrive.
+    """
+    if plen < 1:
+        raise ValueError("empty prompt")
+    b = max(min_bucket, 1)
+    while b < plen:
+        b <<= 1
+    return b
+
+
 @dataclasses.dataclass
 class Request:
     prompt: Sequence[int]
     max_new_tokens: int
     out: List[int] = dataclasses.field(default_factory=list)
+    id: Optional[int] = None        # assigned by the engine at admission
 
 
 class ServeEngine:
-    """Synchronized batched decoding over fixed slots.
+    """Continuous-batching decode over fixed slots (wave mode as baseline).
 
-    Measurement plumbing (either or both may be given; monitor wins when
-    both are passed, preserving its J/token accounting):
-      monitor: a ``PowerMonitor`` — waves go through its non-blocking
-        ``measure_step``; cumulative counters/CSV update as spans
-        resolve on the session's background resolver.
-      session: a ``pmt.Session`` — each wave becomes a nested region
-        (``serve/wave<N>``) resolved asynchronously off the shared ring
-        sampler; attach a ``MemoryExporter``/``JsonlExporter`` for
-        accounting (see launch/serve.py).
+    Args:
+      cfg, params: model config + parameter tree.
+      batch_size: number of decode slots.
+      max_len: KV-cache capacity per slot; every request must satisfy
+        ``prompt_bucket(len(prompt)) + max_new_tokens <= max_len + 1``.
+      monitor: a ``PowerMonitor`` — aggregate regions go through its
+        non-blocking ``measure_step``, per-request spans through
+        ``measure_request`` (J/token per request via
+        ``monitor.per_request_energy()``).
+      session: a ``pmt.Session`` — aggregate region ``serve/batch<N>``
+        (or ``serve/wave<N>``) plus one flat ``serve/req<N>`` span per
+        request, all resolved asynchronously off the shared ring
+        sampler.  Monitor wins when both are passed.
+      mode: "continuous" (default) or "wave" (synchronized baseline).
+      min_prompt_bucket: smallest prompt bucket (power of two).
+      cache_impl: per-row scatter impl forwarded to
+        ``kernels/cache_update`` ("auto" picks Pallas on TPU).
+
+    ``compile_counts`` tracks prefill/decode retraces — continuous-mode
+    decode compiles exactly once, prefill once per prompt bucket.
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
-                 max_len: int, monitor=None, session=None):
+                 max_len: int, monitor=None, session=None,
+                 mode: str = "continuous", min_prompt_bucket: int = 8,
+                 cache_impl: str = "auto"):
+        if mode not in ("continuous", "wave"):
+            raise ValueError(f"unknown serve mode {mode!r}")
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.monitor = monitor
         self.session = session
-        self._wave_count = 0
-        self._prefill = jax.jit(make_prefill_fn(cfg, max_len))
-        self._decode = jax.jit(make_decode_fn(cfg))
+        self.mode = mode
+        self.min_prompt_bucket = min_prompt_bucket
+        self.cache_impl = cache_impl
+        self._batch_count = 0       # aggregate regions (waves or batches)
+        self._request_count = 0
+        self.compile_counts: Dict[str, int] = {"prefill": 0, "decode": 0}
+        self._prefill = jax.jit(self._counted("prefill",
+                                              make_prefill_fn(cfg, max_len)))
+        self._decode = jax.jit(self._counted("decode", make_decode_fn(cfg)))
+        self._insert = self._make_insert()
 
-    def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve requests in waves of ``batch_size``."""
-        done: List[Request] = []
-        for i in range(0, len(requests), self.batch):
-            wave = requests[i:i + self.batch]
-            done.extend(self._run_wave(wave))
-        return done
+    def _counted(self, name: str, fn):
+        counts = self.compile_counts
 
-    def _measure_ctx(self, wave_id: int, tokens: int):
-        # Both paths are non-blocking: wave exit enqueues a span and
-        # returns; nothing on the serving thread waits for resolution.
-        # Monitor keeps precedence (as before this was non-blocking) so
-        # callers passing both still get its J/token accounting.
+        def wrapper(*args, **kwargs):
+            counts[name] += 1       # runs at trace time == once per compile
+            return fn(*args, **kwargs)
+
+        return wrapper
+
+    # -- cache row insertion ------------------------------------------------
+    def _make_insert(self):
+        """Jitted ``insert(caches, row, j)`` scattering a single-request
+        prefill cache (batch 1) into batch row ``j`` of the live caches.
+
+        Cache leaves put the batch axis at different positions (stacked
+        units lead with a "layers" axis), so the per-leaf batch-axis
+        index comes from ``cache_logical_axes``.
+        """
+        axes_tree = model_mod.cache_logical_axes(self.cfg)
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+        batch_axes = [ax.index("batch") for ax in
+                      jax.tree.leaves(axes_tree, is_leaf=is_axes)]
+
+        def insert(caches, row, j):
+            leaves, treedef = jax.tree.flatten(caches)
+            row_leaves = jax.tree.leaves(row)
+            out = []
+            for c, r, ax in zip(leaves, row_leaves, batch_axes):
+                starts = [0] * c.ndim
+                starts[ax] = j
+                out.append(jax.lax.dynamic_update_slice(
+                    c, r.astype(c.dtype), tuple(starts)))
+            return jax.tree.unflatten(treedef, out)
+
+        # Donate the live caches: admission overwrites one row in place
+        # instead of copying the whole KV tree per admitted request (the
+        # caller always rebinds `caches = insert(caches, ...)`).
+        return jax.jit(insert, donate_argnums=0)
+
+    # -- measurement contexts ----------------------------------------------
+    def _measure_ctx(self, agg_id: int, tokens: int):
+        # Aggregate region per generate() call (continuous) or per wave.
+        # Both paths are non-blocking: exit enqueues a span and returns.
+        # Monitor keeps precedence so callers passing both still get its
+        # J/token accounting.
         if self.monitor is not None:
-            return self.monitor.measure_step(wave_id, tokens=tokens,
+            return self.monitor.measure_step(agg_id, tokens=tokens,
                                              blocking=False)
         if self.session is not None:
-            return self.session.region(f"serve/wave{wave_id}",
+            label = "wave" if self.mode == "wave" else "batch"
+            return self.session.region(f"serve/{label}{agg_id}",
                                        tokens=tokens)
         return contextlib.nullcontext()
 
+    def _request_ctx(self, rid: int, tokens: int):
+        if self.monitor is not None:
+            return self.monitor.measure_request(rid, tokens=tokens,
+                                                blocking=False)
+        if self.session is not None:
+            return self.session.region(f"serve/req{rid}", tokens=tokens,
+                                       nested=False)
+        return contextlib.nullcontext()
+
+    # -- public API ----------------------------------------------------------
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve ``requests``; returns them in input order, ``out`` filled."""
+        for r in requests:
+            need = prompt_bucket(len(r.prompt), self.min_prompt_bucket) \
+                + r.max_new_tokens
+            if r.max_new_tokens < 1:
+                raise ValueError("max_new_tokens must be >= 1")
+            if need > self.max_len + 1:
+                raise ValueError(
+                    f"request needs {need} cache slots (bucketed prompt + "
+                    f"max_new_tokens) but max_len is {self.max_len}")
+        if self.mode == "wave":
+            done: List[Request] = []
+            for i in range(0, len(requests), self.batch):
+                wave = requests[i:i + self.batch]
+                done.extend(self._run_wave(wave))
+            return done
+        return self._run_continuous(requests)
+
+    # -- continuous batching --------------------------------------------------
+    def _prefill_request(self, r: Request) -> Tuple[np.ndarray, Any, int]:
+        """Single-request prefill at the prompt's bucket size.
+
+        Returns (first generated token (1,) np.int32, cache row tree
+        with batch size 1, next position == bucket size).  Blocking on
+        the token fences prefill compute inside the request's span.
+        """
+        plen = len(r.prompt)
+        bucket = prompt_bucket(plen, self.min_prompt_bucket)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, bucket - plen:] = r.prompt          # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.is_encoder_decoder:
+            batch["frame_embeds"] = jnp.zeros(
+                (1, self.cfg.enc_len, self.cfg.d_model), jnp.bfloat16)
+        first, row = self._prefill(self.params, batch)
+        return np.asarray(first), row, bucket
+
+    def _run_continuous(self, requests: List[Request]) -> List[Request]:
+        b = self.batch
+        queue = list(requests)
+        qi = 0                                   # admission cursor
+        caches = model_mod.init_caches(self.cfg, b, self.max_len)
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        active: List[Optional[Request]] = [None] * b
+        remaining = [0] * b
+        ctxs: List[Any] = [None] * b
+        total_tokens = sum(r.max_new_tokens for r in requests)
+        agg_id = self._batch_count
+        self._batch_count += 1
+
+        def retire(j: int) -> None:
+            # The caller already fenced this slot's last token (np reads
+            # block), so closing the span here attributes correctly.
+            ctxs[j].__exit__(None, None, None)
+            ctxs[j] = None
+            active[j] = None
+
+        with self._measure_ctx(agg_id, tokens=total_tokens):
+            try:
+                while qi < len(queue) or any(r is not None for r in active):
+                    # slot-granular admission: every free slot refills
+                    # now instead of waiting for the batch to drain.
+                    for j in range(b):
+                        if active[j] is not None or qi >= len(queue):
+                            continue
+                        r = queue[qi]
+                        qi += 1
+                        r.id = self._request_count
+                        self._request_count += 1
+                        r.out = []
+                        ctx = self._request_ctx(r.id,
+                                                tokens=r.max_new_tokens)
+                        ctx.__enter__()
+                        ctxs[j] = ctx
+                        active[j] = r
+                        first, row, bucket = self._prefill_request(r)
+                        caches = self._insert(caches, row, j)
+                        tokens[j, 0] = first[0]
+                        pos[j] = bucket
+                        remaining[j] = r.max_new_tokens - 1
+                        r.out.append(int(first[0]))
+                        if remaining[j] == 0:
+                            retire(j)
+                    live = [j for j in range(b) if active[j] is not None]
+                    if not live:
+                        continue          # everything retired at prefill
+                    # Retirement is deterministic (exactly max_new_tokens
+                    # per request), so decode runs device-side until the
+                    # *next* slot retires — one host sync per retirement
+                    # event, not per token.  Inactive rows decode garbage
+                    # into their own (dead, about-to-be-overwritten)
+                    # cache rows only.
+                    steps = min(remaining[j] for j in live)
+                    tok_dev = jnp.asarray(tokens)
+                    pos_dev = jnp.asarray(pos)
+                    outs = []
+                    for _ in range(steps):
+                        tok_dev, caches = self._decode(self.params, caches,
+                                                       tok_dev, pos_dev)
+                        outs.append(tok_dev)
+                        pos_dev = pos_dev + 1
+                    chunk = np.asarray(jnp.concatenate(outs, axis=1))
+                    # np read blocked: every token in the chunk is
+                    # computed, so spans closed below are correctly
+                    # fenced.
+                    for j in live:
+                        r = active[j]
+                        r.out.extend(chunk[j].tolist())
+                        tokens[j, 0] = chunk[j, -1]
+                        pos[j] += steps
+                        remaining[j] -= steps
+                        if remaining[j] == 0:
+                            retire(j)
+            finally:
+                # An exception mid-loop (prefill OOM, interrupt) must not
+                # leak open request spans — they hold ring-sampler pins
+                # on the shared session for its whole lifetime.
+                for j in range(b):
+                    if ctxs[j] is not None:
+                        ctxs[j].__exit__(None, None, None)
+                        ctxs[j] = None
+        return requests
+
+    # -- synchronized waves (baseline) ---------------------------------------
     def _run_wave(self, wave: List[Request]) -> List[Request]:
         b = self.batch
-        plen = max(len(r.prompt) for r in wave)
+        plen = prompt_bucket(max(len(r.prompt) for r in wave),
+                             self.min_prompt_bucket)
         toks = np.zeros((b, plen), np.int32)
         for j, r in enumerate(wave):
             toks[j, plen - len(r.prompt):] = r.prompt   # left-pad
@@ -125,9 +352,22 @@ class ServeEngine:
                 (b, self.cfg.enc_len, self.cfg.d_model), jnp.bfloat16)
 
         steps = max(r.max_new_tokens for r in wave)
-        wave_id = self._wave_count
-        self._wave_count += 1
-        with self._measure_ctx(wave_id, tokens=b * steps):
+        # Wave-level capacity check: rows share the wave-max prompt
+        # bucket AND decode wave-max steps, so a long-prompt neighbour
+        # can push a short request's positions past max_len even though
+        # each request passed its own check — dynamic_update_slice would
+        # then clamp-corrupt the last cache slot silently.
+        if plen + steps > self.max_len + 1:
+            raise ValueError(
+                f"wave needs {plen + steps} cache slots (shared prompt "
+                f"bucket {plen} + {steps} decode steps) but max_len is "
+                f"{self.max_len}; shrink the wave or use continuous mode")
+        # J/token must divide by tokens actually generated — padded rows
+        # and early-retired slots burn decode FLOPs but emit nothing.
+        gen_tokens = sum(r.max_new_tokens for r in wave)
+        wave_id = self._batch_count
+        self._batch_count += 1
+        with self._measure_ctx(wave_id, tokens=gen_tokens):
             nxt, caches = self._prefill(self.params, batch)
             nxt = nxt[:, None]
             cur = plen
