@@ -133,6 +133,31 @@ def serving_mode():
 
     benchmarks/bench_serve.py A/Bs this against the synchronized-wave
     baseline (``mode="wave"``); see BENCH_serve.json for the numbers.
+
+    Decode attention impl selection: decode is memory-bound, so HBM
+    bytes are joules — ``ServeEngine(..., decode_attn_impl=...)`` (or
+    ``--decode-attn-impl`` on ``repro.launch.serve``, or
+    ``cfg.decode_attn_impl``) picks how each decode step reads the KV
+    cache:
+
+      * ``"flash"`` — the ``kernels/decode_attention`` flash-decode
+        family: a Pallas kernel on TPU whose scalar-prefetch index
+        maps skip cache blocks beyond each row's position *before
+        their HBM reads issue* (ring-buffer arithmetic, GQA packing,
+        and soft-capping live in-kernel), with a segmented masked-lax
+        twin elsewhere.  Wins whenever caches run partially full —
+        the common serving case, since ``max_len`` is sized for the
+        longest admissible request: ~2x tokens/s and J/token at
+        half-full caches on the bench config, converging toward
+        parity only as the cache truly fills.
+      * ``"dense"`` — masked attend over the whole cache every step;
+        the simple baseline and the reference numbers.
+      * ``"auto"`` (default) — flash on TPU, dense elsewhere; the
+        ``PMT_DECODE_ATTN_IMPL`` env var overrides for experiments.
+
+    benchmarks/bench_decode.py A/Bs the two at several cache fills
+    with tokens/s *and* J/token attributed through Session regions
+    (see BENCH_decode.json).
     """
     import dataclasses
 

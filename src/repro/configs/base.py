@@ -125,6 +125,10 @@ class ModelConfig:
     # -- implementation knobs (perf-iteration surface) -------------------------
     attn_impl: str = "auto"          # auto | dense | chunked | pallas
     attn_chunk: int = 1024           # q-block for chunked attention
+    # serve decode attention: "flash" = kernels/decode_attention fused
+    # length-aware path (Pallas on TPU, masked-lax sweep elsewhere),
+    # "dense" = masked full-cache attend; "auto" picks flash on TPU.
+    decode_attn_impl: str = "auto"   # auto | dense | flash
     ssm_chunk: int = 128             # time-chunk for mamba associative scan
     mla_absorb: bool = True          # DeepSeek absorbed-weights decode path
     kernels: str = "reference"       # reference | pallas

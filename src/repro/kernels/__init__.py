@@ -12,6 +12,9 @@ own perf-critical kernel (flash attention):
   degridder        adjoint of gridder
   flash_attention  blockwise online-softmax attention (GQA/causal/window)
   cache_update     per-row KV-cache scatter (continuous-batching decode)
+  decode_attention length-aware flash-decode: one token vs a full cache,
+                   per-row cur_len via scalar prefetch skips KV blocks
+                   beyond each row's prefix before their HBM reads issue
 
 Every kernel ships ops.py (jit'd wrapper; interpret= for CPU) and ref.py
 (pure-jnp oracle); tests sweep shapes/dtypes and assert_allclose against

@@ -1,0 +1,11 @@
+"""Constants shared across the kernel families and their model callers.
+
+``NEG_INF`` is the additive logit mask used by every attention path
+(dense, chunked, flash, flash-decode).  It is deliberately a large
+finite value rather than ``-inf``: ``exp(NEG_INF - m)`` underflows to
+exactly ``0.0`` in fp32 for any realistic running max ``m``, so a fully
+masked score contributes nothing to an online-softmax accumulator, while
+``-inf`` would poison it with NaNs through ``-inf - (-inf)``.
+"""
+
+NEG_INF = -2.0 ** 30

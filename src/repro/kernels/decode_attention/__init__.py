@@ -1,0 +1,8 @@
+from repro.kernels.decode_attention.decode_attention import \
+    decode_attention_pallas
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_lax)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_lax",
+           "decode_attention_pallas", "decode_attention_ref"]

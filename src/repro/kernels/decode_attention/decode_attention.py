@@ -1,0 +1,150 @@
+"""Flash-decode: length-aware fused decode attention for TPU.
+
+The serve hot path is one new token against a full cache: decode is
+memory-bound, so HBM bytes are joules.  Dense decode reads every cache
+slot of every row regardless of how many tokens the row actually holds.
+This kernel makes the cache read *length-aware*:
+
+  * Grid (B, KVH, C/bk), kv blocks innermost with ``arbitrary``
+    semantics; the (G, hdv) fp32 accumulator plus running row-max m and
+    row-sum l live in VMEM scratch across the kv sweep (standard online
+    softmax).
+  * The per-row ``cur_len`` vector arrives via scalar prefetch and
+    feeds the K/V BlockSpec index maps: blocks entirely beyond a row's
+    valid prefix are clamped to the row's last needed block, so the
+    pipeline revisits the same index and **never issues their HBM
+    reads** — the bandwidth win a dense masked path cannot have.  A
+    ``pl.when`` guard skips their MXU work too.
+  * GQA is packed, not repeated: all G query heads of one kv head load
+    as a single (G, hdq) q block, so each K block feeds one real
+    (G, hdq) x (hdq, bk) MXU matmul instead of G vector products, and
+    K/V are read once per kv head.
+  * Sliding-window ring buffers, slot -> position arithmetic, never-
+    written-slot validity, and logit soft-capping are handled in-kernel
+    from ``cur_len`` alone — no (B, C) position/validity tensors are
+    materialised in HBM per decode step.
+
+``v`` may be the same array as ``k`` with ``v_width`` set: the V
+BlockSpec then reads only the first ``v_width`` lanes (the MLA latent
+cache stores [latent | rope] concatenated; scores use the full row,
+values only the latent prefix).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.constants import NEG_INF
+from repro.kernels.decode_attention.ref import pick_block_k
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, ring: bool, softcap, bk: int,
+                   kv_steps: int, cache_size: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    cur = lens_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_lo = ki * bk
+
+    # Blocks whose first slot is past the row's new-token position hold
+    # no valid key (full cache: slots > cur unwritten; ring: a not-yet-
+    # wrapped tail) — their DMA was elided by the index map, skip the
+    # compute as well.
+    @pl.when(k_lo <= cur)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, hdq)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hdq)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        if ring:
+            # slot s holds position cur - ((cur - s) mod C); valid iff
+            # that position is >= 0 (the window mask is subsumed: held
+            # positions are within C - 1 <= window - 1 of the query).
+            valid = jnp.mod(cur - cols, cache_size) <= cur
+        else:
+            valid = cols <= cur
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                                   # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1,
+                                                  keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hdv)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, lens, *, ring: bool = False,
+                            softcap=None, scale: float = 1.0,
+                            block_k: int = 128, v_width=None,
+                            interpret: bool = False):
+    """q: (B, KVH, G, hdq), k: (B, C, KVH, hdq), v: (B, C, KVH, hdv),
+    lens: (B,) int32 new-token positions.  Returns (B, KVH, G, hdv) in
+    q.dtype.  ``v_width``: read only the first lanes of v (see module
+    docstring; ``v`` may alias ``k``)."""
+    b, kvh, g, hdq = q.shape
+    c = k.shape[1]
+    hdv = v_width if v_width is not None else v.shape[-1]
+    bk = pick_block_k(c, block_k)
+    kv_steps = c // bk
+
+    def q_map(bi, hi, ki, lens):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, ki, lens):
+        # Clamp beyond-prefix blocks to the row's last needed block: a
+        # revisited block index elides the HBM->VMEM copy entirely.
+        last = jnp.minimum(lens[bi], c - 1) // bk
+        return (bi, jnp.minimum(ki, last), hi, 0)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, ring=ring, softcap=softcap, bk=bk,
+        kv_steps=kv_steps, cache_size=c)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hdq), q_map),
+            pl.BlockSpec((1, bk, 1, hdq), kv_map),
+            pl.BlockSpec((1, bk, 1, hdv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hdv), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # m: running row max
+            pltpu.VMEM((g, 1), jnp.float32),     # l: running row sum
+            pltpu.VMEM((g, hdv), jnp.float32),   # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hdv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens.astype(jnp.int32), q, k, v)

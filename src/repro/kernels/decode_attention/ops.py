@@ -1,0 +1,180 @@
+"""Model-facing flash-decode wrapper.
+
+``decode_attention`` accepts the framework's decode layout — new-token
+queries (B, 1, H, hdq) against an already-updated cache
+k: (B, C, KVH, hdq) / v: (B, C, KVH, hdv) — reshapes q to the kernel's
+GQA-packed (B, KVH, G, hdq), and routes to:
+
+  * ``pallas``           the flash-decode kernel (TPU),
+  * ``pallas_interpret`` the same kernel in interpret mode (CPU parity
+                         testing),
+  * ``lax``              a length-aware masked XLA fallback: the cache
+                         is cut into 8 static *segments*; each segment
+                         computes a masked online-softmax partial
+                         (m, l, acc) under a ``lax.cond`` that skips
+                         segments entirely beyond the batch-max
+                         ``cur_len``, and the partials merge with the
+                         standard flash rescaling.  Static segment
+                         slices fuse into clean batched GEMMs (better
+                         cache locality than one cache-wide sweep), so
+                         at fill f the path reads ~f bytes, not C —
+                         the kernel's bandwidth saving expressed in
+                         plain XLA.
+
+``impl="auto"`` picks Pallas iff the default backend is TPU; the env
+var ``PMT_DECODE_ATTENTION_DISPATCH`` (values: pallas /
+pallas_interpret / lax) overrides "auto" for experiments.  This is the
+*kernel dispatch* knob — the model-level dense-vs-flash choice is
+``cfg.decode_attn_impl`` / ``PMT_DECODE_ATTN_IMPL`` (see
+blocks.decode_attn_impl), which decides whether this module is called
+at all.
+
+Numerics: the Pallas kernel is bit-exact against the blockwise ref.py
+oracle (same op-for-op online softmax; see ref.py).  The lax path uses
+segment-sized blocks instead of ``block_k``-sized ones, so it matches
+within fp reassociation (~1 ulp of fp32 softmax), and is invariant to
+how many segments ran: a skipped segment's partial is the identity
+under the merge.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.constants import NEG_INF
+from repro.kernels.decode_attention.decode_attention import \
+    decode_attention_pallas
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        impl = os.environ.get("PMT_DECODE_ATTENTION_DISPATCH", "auto")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "lax"
+    return impl
+
+
+_LAX_SEGMENTS = 8
+
+
+def decode_attention_lax(q, k, v, lens, *, ring: bool = False,
+                         softcap=None, scale: float = 1.0,
+                         block_k: int = 128, v_width=None):
+    """Length-aware masked decode attention in plain XLA.
+
+    Same layout as the kernel: q (B, KVH, G, hdq), k/v (B, C, KVH, *),
+    lens (B,).  The cache is cut into ``_LAX_SEGMENTS`` static
+    segments; segments beyond the batch-max ``cur_len`` are skipped by
+    ``lax.cond`` (their partial is the merge identity), so the read
+    granularity is ~C/8 regardless of cache size.  ``block_k`` is the
+    Pallas tiling knob and is unused here.
+
+    K/V segments are transposed to (B, KVH, S, hd) fp32 before the
+    score/value contractions — one fused cast+transpose copy of the
+    *segment only*, turning both contractions into clean batched GEMMs
+    (measurably faster than einsum-ing the strided cache layout, and
+    segment-sized working sets stay cache-resident between the score
+    and value passes).
+    """
+    del block_k                     # kernel tiling knob; segments are ~C/8
+    b, kvh, g, _ = q.shape
+    c = k.shape[1]
+    hdv = v_width if v_width is not None else v.shape[-1]
+    qs = q.astype(jnp.float32) * scale
+    lens = jnp.asarray(lens, jnp.int32)
+    alias = v is k
+    seg = -(-c // _LAX_SEGMENTS)
+
+    def seg_partial(kp, vp, lo):
+        kf = kp.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B,KVH,S,hdq)
+        if v_width is not None and vp is kp:
+            vf = kf[..., :v_width]
+        else:
+            vf = vp.transpose(0, 2, 1, 3).astype(jnp.float32)
+            if v_width is not None:
+                vf = vf[..., :v_width]
+        s = jnp.einsum("bhgd,bhkd->bhgk", qs, kf)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        cols = lo + jnp.arange(kp.shape[1], dtype=jnp.int32)[None, None,
+                                                             None]
+        cur = lens[:, None, None, None]
+        if ring:
+            valid = jnp.mod(cur - cols, c) <= cur
+        else:
+            valid = cols <= cur
+        s = jnp.where(valid, s, NEG_INF)
+        # a row fully masked within a live segment yields m == NEG_INF
+        # and garbage l/acc — both are annihilated by exp(m - m_final)
+        # underflowing to exactly 0.0 in the merge.
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        acc = jnp.einsum("bhgk,bhkd->bhgd", p, vf)
+        return m, l, acc
+
+    # every valid slot of every row lies below ``need``: a row's valid
+    # positions are <= lens[b], and a wrapped ring (lens >= C) needs
+    # the full cache, which min(lens, C-1) selects.
+    need = jnp.minimum(jnp.max(lens), c - 1) + 1
+    skip = (jnp.full((b, kvh, g, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, 1), jnp.float32),
+            jnp.zeros((b, kvh, g, hdv), jnp.float32))
+    parts = []
+    for lo in range(0, c, seg):
+        kp = k[:, lo:lo + seg]
+        vp = kp if alias else v[:, lo:lo + seg]
+        if lo == 0:                 # slot 0 is always valid
+            parts.append(seg_partial(kp, vp, 0))
+            continue
+        parts.append(jax.lax.cond(
+            need > lo,
+            lambda kp_, vp_, lo_=lo: seg_partial(kp_, vp_, lo_),
+            lambda kp_, vp_: skip, kp, vp))
+    ms = jnp.stack([p[0] for p in parts])
+    m = jnp.max(ms, axis=0)
+    w = jnp.exp(ms - m)             # (S, B, KVH, G, 1); skipped -> 0.0
+    l = jnp.sum(w * jnp.stack([p[1] for p in parts]), axis=0)
+    acc = jnp.sum(w * jnp.stack([p[2] for p in parts]), axis=0)
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def decode_attention(q, k, v, cur_len, *, ring: bool = False,
+                     softcap=None, scale: float = 1.0,
+                     block_k: int = 128, v_width=None,
+                     impl: str = "auto"):
+    """One-token decode attention over a full cache.
+
+    q: (B, 1, H, hdq) new-token queries.  k: (B, C, KVH, hdq) and
+    v: (B, C, KVH, hdv): the cache *after* the new token's k/v landed at
+    its slot.  cur_len: scalar or (B,) int32 — the new token's position
+    == tokens already in the cache (valid cache positions are
+    ``<= cur_len``).  ``ring=True`` for sliding-window ring-buffer
+    caches.  ``v_width``: v is the first ``v_width`` lanes of the given
+    array (which may be k itself — the MLA concatenated latent cache).
+    Returns (B, 1, H, hdv) in q.dtype; k/v are consumed in their own
+    dtype (no cache-wide upcast copy).
+    """
+    impl = _resolve(impl)
+    b, sq, h, hdq = q.shape
+    if sq != 1:
+        raise ValueError(f"decode_attention takes one query token, got "
+                         f"Sq={sq}")
+    kvh = k.shape[2]
+    if h % kvh:
+        raise ValueError(f"H={h} not divisible by KVH={kvh}")
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hdq)
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    kw = dict(ring=ring, softcap=softcap, scale=scale, block_k=block_k,
+              v_width=v_width)
+    if impl == "lax":
+        out = decode_attention_lax(qg, k, v, lens, **kw)
+    elif impl in ("pallas", "pallas_interpret"):
+        out = decode_attention_pallas(
+            qg, k, v, lens, interpret=impl == "pallas_interpret", **kw)
+    else:
+        raise ValueError(f"unknown decode_attention impl {impl!r}")
+    return out.reshape(b, 1, h, out.shape[-1])

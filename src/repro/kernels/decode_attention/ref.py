@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the flash-decode kernel.
+
+The oracle is the kernel's *blockwise twin*, not a dense softmax: it
+sweeps the cache in the same ``block_k`` blocks, applies the same
+masking, and folds each block into the same (m, l, acc) online-softmax
+accumulator with the same operations in the same order.  Skipping a
+fully-masked block and processing it are bit-identical updates (masked
+scores are ``NEG_INF``, whose exp underflows to exactly 0.0 and leaves
+m/l/acc untouched), so the oracle — which processes *every* block — is
+an exact-parity reference for the Pallas kernel, which skips blocks
+beyond ``cur_len`` (the kernel-vs-ref tests assert bitwise equality).
+
+The segmented ``ops.decode_attention_lax`` fallback implements the same
+masking semantics at segment granularity with a different (fused)
+compute layout, so it is held to fp-reassociation tolerance against
+this oracle rather than bitwise equality — see
+tests/test_decode_attention.py.
+
+Semantics (matching ``models.attention.decode_self_attention``):
+
+  * ``lens[b]`` is the position of row ``b``'s new token == the count
+    of tokens already in the cache; the cache has already absorbed the
+    new k/v at its slot, so valid slots are exactly positions
+    ``<= lens[b]``.
+  * ``ring=False``: slot ``s`` holds position ``s``; valid iff
+    ``s <= lens[b]``.
+  * ``ring=True`` (sliding-window ring buffer of size ``C ==
+    min(max_len, window)``): slot ``s`` holds the largest position
+    ``p <= cur`` with ``p % C == s``; valid iff ``p >= 0``, i.e.
+    ``(cur - s) mod C <= cur``.  The window mask itself is subsumed:
+    every held position is within ``C - 1 <= window - 1`` of the query.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.constants import NEG_INF
+
+
+def pick_block_k(cache_size: int, block_k: int) -> int:
+    """Largest divisor of ``cache_size`` no bigger than ``block_k``.
+
+    Cache sizes are normally powers of two (max_len / window), so this
+    returns ``block_k`` itself; odd sizes degrade to a smaller even
+    split instead of requiring padding.
+    """
+    return math.gcd(min(block_k, cache_size), cache_size)
+
+
+def _block_step(q, k_blk, v_blk, k_lo, lens, m, l, acc, *,
+                cache_size: int, ring: bool, softcap):
+    """Fold one kv block into the online-softmax accumulator.
+
+    q: (B, KVH, G, hdq) fp32, pre-scaled.  k_blk: (B, bk, KVH, hdq),
+    v_blk: (B, bk, KVH, hdv) in cache dtype.  k_lo: first cache slot of
+    the block (python int or traced scalar).  lens: (B,) int32.
+    m, l: (B, KVH, G, 1) fp32 running max/sum.  acc: (B, KVH, G, hdv)
+    fp32.  Returns the updated (m, l, acc).
+    """
+    bk = k_blk.shape[1]
+    s = jnp.einsum("bhgd,bkhd->bhgk", q, k_blk.astype(jnp.float32))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    cols = k_lo + jnp.arange(bk, dtype=jnp.int32)[None, None, None, :]
+    cur = lens.astype(jnp.int32)[:, None, None, None]
+    if ring:
+        valid = jnp.mod(cur - cols, cache_size) <= cur
+    else:
+        valid = cols <= cur
+    s = jnp.where(valid, s, NEG_INF)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m - m_new)
+    l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = alpha * acc + jnp.einsum("bhgk,bkhd->bhgd", p,
+                                       v_blk.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def decode_attention_ref(q, k, v, lens, *, ring: bool = False,
+                         softcap=None, scale: float = 1.0,
+                         block_k: int = 128):
+    """q: (B, KVH, G, hdq), k: (B, C, KVH, hdq), v: (B, C, KVH, hdv),
+    lens: scalar or (B,) int32.  Returns (B, KVH, G, hdv) in q.dtype."""
+    b, kvh, g, _ = q.shape
+    c = k.shape[1]
+    hdv = v.shape[-1]
+    bk = pick_block_k(c, block_k)
+    qs = q.astype(jnp.float32) * scale
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (b,))
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=1)
+        return _block_step(qs, k_blk, v_blk, j * bk, lens, m, l, acc,
+                           cache_size=c, ring=ring, softcap=softcap)
+
+    m = jnp.full((b, kvh, g, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kvh, g, 1), jnp.float32)
+    acc = jnp.zeros((b, kvh, g, hdv), jnp.float32)
+    # The oracle sweeps EVERY block (no length awareness) through the
+    # same loop structure as the implementations, so the comparison is
+    # exact: block skipping is the only thing the fast paths add.
+    m, l, acc = jax.lax.fori_loop(0, c // bk, body, (m, l, acc))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

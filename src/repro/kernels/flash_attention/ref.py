@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -2.0 ** 30
+from repro.kernels.constants import NEG_INF
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,

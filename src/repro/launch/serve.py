@@ -29,6 +29,12 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--mode", default="continuous",
                     choices=["continuous", "wave"])
+    ap.add_argument("--decode-attn-impl", default="auto",
+                    choices=["auto", "dense", "flash"],
+                    help="decode attention path: flash = length-aware "
+                         "kernels/decode_attention (Pallas on TPU, "
+                         "masked-lax sweep elsewhere); auto = flash on "
+                         "TPU only")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -42,7 +48,8 @@ def main(argv=None):
     energy = session.add_exporter(pmt.MemoryExporter())
     engine = ServeEngine(cfg, params, batch_size=args.batch,
                          max_len=args.max_len, session=session,
-                         mode=args.mode)
+                         mode=args.mode,
+                         decode_attn_impl=args.decode_attn_impl)
 
     rng = np.random.default_rng(args.seed)
     # heterogeneous lengths: the workload continuous batching is for

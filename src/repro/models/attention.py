@@ -9,7 +9,7 @@ Covers:
   * cross-attention (whisper decoder),
   * a KV-cache decode path (one new token against a cache of seq_len).
 
-Implementations:
+Implementations (full-sequence ``attention``):
   * ``dense``   — materialises (B, H, Sq, Skv) scores; right for short seqs
                   and the smoke tests.
   * ``chunked`` — lax.scan over query blocks; bounds the live score tensor
@@ -17,10 +17,31 @@ Implementations:
                   lowers for 32k prefill (flash-style memory behaviour
                   without a custom kernel).
   * ``pallas``  — the flash-attention Pallas kernel (kernels/flash_attention),
-                  TPU-targeted, validated in interpret mode.
+                  TPU-targeted, validated in interpret mode.  Self-attention
+                  with contiguous-from-zero positions only: it derives the
+                  causal/window mask from block indices, so calls carrying a
+                  ``kv_valid`` mask or ``causal=False`` (cross-attention)
+                  raise instead of silently dropping those constraints.
 
 The choice is per-call (``impl=``); models pick dense for tiny smoke
 configs and chunked for production shapes (see model.py).
+
+Decode (``decode_self_attention``) has its own impl pair, selected by
+``cfg.decode_attn_impl`` (resolved in blocks.py):
+  * ``dense``   — masked attend over the whole (B, C) cache with an
+                  explicit slot->position timeline (row-degenerate (1, C)
+                  when every row is at the same position).
+  * ``flash``   — the flash-decode kernel family
+                  (kernels/decode_attention): online-softmax sweep over KV
+                  blocks, per-row ``cur_len`` via scalar prefetch so cache
+                  blocks beyond a row's valid prefix are never read from
+                  HBM; ring-buffer slot arithmetic, GQA head packing, and
+                  soft-capping happen in-kernel, so no (B, C)
+                  position/validity tensors are built per decode step.
+                  Dispatches to Pallas on TPU and a length-aware masked
+                  lax sweep elsewhere.  Decode is memory-bound, so the
+                  skipped HBM bytes are the J/token lever (see
+                  benchmarks/bench_decode.py).
 """
 from __future__ import annotations
 
@@ -31,10 +52,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.constants import NEG_INF
 from repro.models import layers
 from repro.sharding.specs import annotate, shard
-
-NEG_INF = -2.0 ** 30  # large-negative for masking; safe in fp32 softmax
 
 
 # -- params -------------------------------------------------------------------
@@ -173,11 +193,27 @@ def attention(cfg: ModelConfig, q, k, v, *,
     masked upper-triangle blocks (~2x score FLOPs at long S).
     """
     if impl == "pallas":
+        # The flash kernel reconstructs the mask from block indices; it
+        # cannot honor a kv_valid mask (decode ring buffers, padded
+        # cross-attention memories) or non-causal attention.  Refuse
+        # loudly instead of returning wrong numbers with those args
+        # silently dropped.
+        if kv_valid is not None:
+            raise ValueError(
+                "attention(impl='pallas') cannot honor kv_valid masks — "
+                "use impl='dense'/'chunked', or the flash-decode kernel "
+                "(kernels/decode_attention) for single-token decode")
+        if not causal:
+            raise ValueError(
+                "attention(impl='pallas') is causal self-attention only; "
+                "cross-attention must use impl='dense' or 'chunked'")
         from repro.kernels.flash_attention import ops as fa_ops
+        if scale is None:
+            scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar
+                                    or cfg.head_dim)
         return fa_ops.flash_attention(
             q, k, v, causal=causal, window=window,
-            softcap=cfg.attn_softcap,
-            scale=scale if scale is not None else 1.0 / math.sqrt(cfg.head_dim))
+            softcap=cfg.attn_softcap, scale=scale)
     if impl == "dense" or q.shape[1] <= chunk:
         mask = make_mask(q_pos, kv_pos, causal, window, kv_valid)
         return _attend_block(cfg, q, k, v, mask, scale)
@@ -277,7 +313,8 @@ def cache_spec_axes() -> Tuple[Optional[str], ...]:
 
 def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
                           window: Optional[int] = None,
-                          cache_impl: str = "auto"):
+                          cache_impl: str = "auto",
+                          impl: str = "dense"):
     """One-token decode against a cache.
 
     x: (B, 1, d). cache: {"k","v"} (B, C, KVH, hd). cur_len: count of
@@ -286,6 +323,13 @@ def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
     (B,) vector (continuous batching, per-slot position counters; the
     new k/v land at a *different* cache offset per row via the
     ``kernels/cache_update`` scatter).
+
+    impl: "dense" attends over the whole cache with an explicit masked
+    timeline; "flash" routes through ``kernels/decode_attention`` —
+    slot->position arithmetic moves in-kernel, no (B, C) position or
+    validity tensors are built, the cache is consumed in its own dtype
+    (no cache-wide upcast copy), and KV blocks beyond each row's valid
+    prefix are never read.
     Returns (out (B,1,d), new_cache).
     """
     b = x.shape[0]
@@ -314,11 +358,23 @@ def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
     k = shard(k, *cache_spec_axes())
     v = shard(v, *cache_spec_axes())
 
-    # Per-slot timeline: (B,1) row positions against (1,C) cache slots.
-    # The scalar path broadcasts the same position to every row, so both
-    # paths share one (B,C) formulation.
+    if impl == "flash":
+        from repro.kernels.decode_attention import ops as da_ops
+        scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
+        o = da_ops.decode_attention(
+            q, k, v, cur, ring=window is not None,
+            softcap=cfg.attn_softcap, scale=scale)
+        return output_proj(p, o), {"k": k, "v": v}
+    if impl != "dense":
+        raise ValueError(f"unknown decode attention impl {impl!r}")
+
+    # Per-slot timeline against the new token's position.  The row
+    # dimension is degenerate — (1, C) — when cur_len is a scalar
+    # (every row at the same position): the boolean mask broadcasts
+    # inside attention, so the scalar path never materialises B copies
+    # of the same timeline.
     slots = jnp.arange(cache_size, dtype=jnp.int32)[None]        # (1,C)
-    cur_col = positions[..., 0] if cfg.m_rope else positions      # (B,1)
+    cur_col = cur[:, None] if per_row else cur[None, None]   # (B,1)/(1,1)
     if window:
         # ring buffer: slot s holds the largest position p <= cur with
         # p % size == s, i.e. p = cur - ((cur - s) mod size); negative p
@@ -327,14 +383,11 @@ def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
         kv_valid = kv_pos >= 0
         kv_pos = jnp.maximum(kv_pos, 0)
     else:
-        kv_pos = jnp.broadcast_to(slots, (b, cache_size))
+        kv_pos = slots
         kv_valid = slots <= cur_col
-    kv_pos = jnp.broadcast_to(kv_pos, (b, cache_size))
-    kv_valid = jnp.broadcast_to(kv_valid, (b, cache_size))
 
-    q_pos = cur_col.astype(jnp.int32)
     o = attention(cfg, q, k.astype(q.dtype), v.astype(q.dtype),
-                  q_pos=q_pos, kv_pos=kv_pos, causal=True, window=window,
+                  q_pos=cur_col, kv_pos=kv_pos, causal=True, window=window,
                   kv_valid=kv_valid, impl="dense")
     return output_proj(p, o), {"k": k, "v": v}
 

@@ -16,6 +16,7 @@ token against a cache), and cache init.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -56,6 +57,29 @@ def attn_impl(cfg: ModelConfig, seq_len: int) -> str:
     if seq_len <= cfg.attn_chunk or seq_len % cfg.attn_chunk:
         return "dense"   # short or non-chunk-aligned (whisper's 1500)
     return "chunked"
+
+
+def decode_attn_impl(cfg: ModelConfig) -> str:
+    """Resolve ``cfg.decode_attn_impl`` for this process.
+
+    "auto" defers to the ``PMT_DECODE_ATTN_IMPL`` env var (values:
+    dense / flash; A/B experiments), then picks "flash" — the
+    length-aware ``kernels/decode_attention`` path — iff the default
+    backend is TPU, where its Pallas kernel compiles; elsewhere "dense"
+    keeps the decode step a single fused XLA region.  Both
+    self-attention KV caches and the MLA latent cache honor the knob;
+    explicit "flash" off-TPU runs the kernel's masked-lax twin.  (How
+    "flash" then dispatches between Pallas and the lax twin is the
+    separate ops-layer knob ``PMT_DECODE_ATTENTION_DISPATCH``.)
+    """
+    impl = cfg.decode_attn_impl
+    if impl == "auto":
+        impl = os.environ.get("PMT_DECODE_ATTN_IMPL", "auto")
+    if impl == "auto":
+        impl = "flash" if jax.default_backend() == "tpu" else "dense"
+    if impl not in ("dense", "flash"):
+        raise ValueError(f"unknown decode_attn_impl {impl!r}")
+    return impl
 
 
 # -- init -----------------------------------------------------------------------
@@ -218,12 +242,14 @@ def block_decode(cfg: ModelConfig, p, x, cache, cur_len, idx: int):
         out, cache = mamba.mamba_decode(cfg, p["mixer"], h, cache)
     elif cfg.attention == "mla":
         out, cache = mla.mla_decode_attention(cfg, p["mixer"], h, cache,
-                                              cur_len)
+                                              cur_len,
+                                              impl=decode_attn_impl(cfg))
     else:
         window = layer_window(cfg, idx)
         kv_cache = {"k": cache["k"], "v": cache["v"]}
         out, kv_cache = attn.decode_self_attention(
-            cfg, p["mixer"], h, kv_cache, cur_len, window=window)
+            cfg, p["mixer"], h, kv_cache, cur_len, window=window,
+            impl=decode_attn_impl(cfg))
         cache = dict(cache, **kv_cache)
     if cfg.post_block_norm:
         out = layers.apply_norm(cfg, p["post_norm_1"], out)

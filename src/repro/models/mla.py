@@ -11,6 +11,15 @@ holds only (kv_lora_rank + qk_rope_head_dim) floats per token:
 
 This is DeepSeek's decode trick: the cache is 576 floats/token instead of
 H * (192 + 128) = 40960, which is what makes 32k/128-batch decode feasible.
+
+Cache layout: one (B, C, kv_lora_rank + qk_rope_head_dim) tensor holding
+``[latent | rope key]`` concatenated per token.  The concatenated row is
+exactly the decode key (``[q_lat | q_rope] . [c_kv | k_rope]`` is the
+score), its ``kv_lora_rank`` prefix is exactly the decode value, and one
+``cache_update`` scatter per step replaces the two the split layout
+needed.  The flash decode path (``impl="flash"``) feeds the kernel the
+cache as both K and V with ``v_width=kv_lora_rank`` — zero reshuffling,
+and KV blocks beyond each row's prefix are never read.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.constants import NEG_INF
 from repro.models import layers
 from repro.models.attention import attention
 from repro.sharding.specs import annotate, shard
@@ -121,34 +131,36 @@ def mla_self_attention(cfg: ModelConfig, p, x, positions, *,
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
                    dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
     m = cfg.mla
-    return {
-        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
-        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
-    }
+    width = m.kv_lora_rank + m.qk_rope_head_dim
+    return {"kv": jnp.zeros((batch, max_len, width), dtype)}
 
 
 def mla_cache_axes() -> Dict[str, Tuple]:
-    return {"latent": ("batch", "kv_seq", "kv_rank"),
-            "k_rope": ("batch", "kv_seq", None)}
+    return {"kv": ("batch", "kv_seq", "kv_rank")}
 
 
 def prefill_mla_cache(cfg: ModelConfig, latent, k_rope, max_len: int,
                       dtype=jnp.bfloat16):
     cache = init_mla_cache(cfg, latent.shape[0], max_len, dtype)
-    cache["latent"] = jax.lax.dynamic_update_slice(
-        cache["latent"], latent.astype(dtype), (0, 0, 0))
-    cache["k_rope"] = jax.lax.dynamic_update_slice(
-        cache["k_rope"], k_rope.astype(dtype), (0, 0, 0))
+    kv = jnp.concatenate([latent, k_rope], axis=-1).astype(dtype)
+    cache["kv"] = jax.lax.dynamic_update_slice(cache["kv"], kv, (0, 0, 0))
     return cache
 
 
 def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
-                         cache_impl: str = "auto"):
+                         cache_impl: str = "auto", impl: str = "dense"):
     """One-token absorbed-MLA decode. x: (B,1,d).
 
     ``cur_len`` is a scalar (synchronized decode) or a (B,) vector of
     per-slot positions (continuous batching); the vector path scatters
-    each row's latent at its own offset via ``kernels/cache_update``.
+    each row's ``[latent | rope]`` row at its own offset via one
+    ``kernels/cache_update`` call.
+
+    impl: "dense" materialises the (B, H, 1, C) score tensor over the
+    whole cache; "flash" runs ``kernels/decode_attention`` with the
+    concatenated cache as both K and V (``v_width`` keeps the value
+    read to the latent prefix) — blocks beyond each row's prefix are
+    never read.
     """
     m = cfg.mla
     dt = x.dtype
@@ -159,43 +171,54 @@ def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
 
     q_nope, q_rope = _project_q(cfg, p, x, positions)          # (B,1,H,*)
     latent_new, k_rope_new = _project_kv_latent(cfg, p, x, positions)
+    kv_new = jnp.concatenate([latent_new, k_rope_new], axis=-1)  # (B,1,r+rr)
 
     if per_row:
         from repro.kernels.cache_update import ops as cu_ops
-        slot_rows = jnp.minimum(cur, cache["latent"].shape[1] - 1)
-        latent = cu_ops.cache_update(cache["latent"], latent_new, slot_rows,
-                                     impl=cache_impl)
-        k_rope = cu_ops.cache_update(cache["k_rope"], k_rope_new, slot_rows,
-                                     impl=cache_impl)
+        slot_rows = jnp.minimum(cur, cache["kv"].shape[1] - 1)
+        kv = cu_ops.cache_update(cache["kv"], kv_new, slot_rows,
+                                 impl=cache_impl)
     else:
-        latent = jax.lax.dynamic_update_slice(
-            cache["latent"], latent_new.astype(cache["latent"].dtype),
-            (0, cur_len, 0))
-        k_rope = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
-            (0, cur_len, 0))
-    latent = shard(latent, "batch", "kv_seq", "kv_rank")
-    k_rope = shard(k_rope, "batch", "kv_seq", None)
+        kv = jax.lax.dynamic_update_slice(
+            cache["kv"], kv_new.astype(cache["kv"].dtype), (0, cur_len, 0))
+    kv = shard(kv, "batch", "kv_seq", "kv_rank")
 
     # absorb W_UK into the query: (B,1,H,nope) @ (r,H,nope) -> (B,1,H,r)
     q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
 
     qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
     scale = 1.0 / math.sqrt(qk_hd)
-    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, latent.astype(dt))
-    s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope.astype(dt))
-    scores = (s_lat + s_rope).astype(jnp.float32) * scale
+    if impl == "flash":
+        from repro.kernels.decode_attention import ops as da_ops
+        # [q_lat | q_rope] . [latent | rope] is the absorbed score, so
+        # the concatenated cache row *is* the key; its latent prefix is
+        # the value (KVH=1, G=H — every query head shares the latent).
+        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)   # (B,1,H,r+rr)
+        kv4 = kv[:, :, None, :]                             # (B,C,1,r+rr)
+        ctx = da_ops.decode_attention(
+            q_eff, kv4, kv4, cur, scale=scale,
+            v_width=m.kv_lora_rank).astype(dt)              # (B,1,H,r)
+    elif impl == "dense":
+        latent = kv[..., :m.kv_lora_rank]
+        k_rope = kv[..., m.kv_lora_rank:]
+        s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, latent.astype(dt))
+        s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope.astype(dt))
+        scores = (s_lat + s_rope).astype(jnp.float32) * scale
 
-    cache_len = latent.shape[1]
-    # (B,1,1,C) per-row validity: scalar cur broadcasts, vector cur masks
-    # each row against its own position counter.
-    valid = jnp.arange(cache_len)[None, None, None, :] \
-        <= positions[:, None, None, :]           # (B,1,1,C) over (B,H,1,C)
-    scores = jnp.where(valid, scores, -2.0 ** 30)
-    probs = jax.nn.softmax(scores, axis=-1)
+        cache_len = kv.shape[1]
+        # per-slot validity against each row's own position counter; the
+        # row dim is degenerate (1,1,1,C) when cur is a scalar.
+        cur_col = cur[:, None] if per_row else cur[None, None]
+        valid = jnp.arange(cache_len)[None, None, None, :] \
+            <= cur_col[:, None, None, :]         # (B|1,1,1,C) over (B,H,1,C)
+        scores = jnp.where(valid, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", probs.astype(dt),
+                         latent.astype(dt))
+    else:
+        raise ValueError(f"unknown decode attention impl {impl!r}")
 
-    ctx = jnp.einsum("bhqs,bsr->bqhr", probs.astype(dt), latent.astype(dt))
     o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
     out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
     out = shard(out, "batch", "seq", "d_model")
-    return out, {"latent": latent, "k_rope": k_rope}
+    return out, {"kv": kv}

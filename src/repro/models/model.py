@@ -358,6 +358,12 @@ def make_serve_fns(cfg: ModelConfig):
     position) or a (B,) int32 vector of per-slot position counters
     (continuous batching: each row advances independently and its KV
     lands at its own cache offset via the cache_update scatter).
+
+    ``cfg.decode_attn_impl`` selects the decode attention path for every
+    attention/MLA layer in the stack: "flash" = the length-aware
+    ``kernels/decode_attention`` sweep that skips cache blocks beyond
+    each row's ``cur_len``; "dense" = masked full-cache attend; "auto"
+    = flash on TPU (see blocks.decode_attn_impl).
     """
     lay = unit_layout(cfg)
 

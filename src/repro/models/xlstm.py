@@ -25,10 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.constants import NEG_INF
 from repro.models import layers
 from repro.sharding.specs import annotate, shard
-
-NEG_INF = -2.0 ** 30
 
 
 def m_inner(cfg: ModelConfig) -> int:

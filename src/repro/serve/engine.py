@@ -120,6 +120,13 @@ class ServeEngine:
       min_prompt_bucket: smallest prompt bucket (power of two).
       cache_impl: per-row scatter impl forwarded to
         ``kernels/cache_update`` ("auto" picks Pallas on TPU).
+      decode_attn_impl: overrides ``cfg.decode_attn_impl`` for this
+        engine — "flash" routes every decode step's attention through
+        the length-aware ``kernels/decode_attention`` path (cache
+        blocks beyond a row's position are never read; the J/token
+        lever on the memory-bound decode step), "dense" keeps the
+        masked full-cache attend, "auto" picks flash on TPU.  See
+        benchmarks/bench_decode.py for the A/B.
 
     ``compile_counts`` tracks prefill/decode retraces — continuous-mode
     decode compiles exactly once, prefill once per prompt bucket.
@@ -128,9 +135,13 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
                  max_len: int, monitor=None, session=None,
                  mode: str = "continuous", min_prompt_bucket: int = 8,
-                 cache_impl: str = "auto"):
+                 cache_impl: str = "auto",
+                 decode_attn_impl: Optional[str] = None):
         if mode not in ("continuous", "wave"):
             raise ValueError(f"unknown serve mode {mode!r}")
+        if decode_attn_impl is not None:
+            cfg = dataclasses.replace(cfg,
+                                      decode_attn_impl=decode_attn_impl)
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
