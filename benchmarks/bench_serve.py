@@ -83,8 +83,11 @@ def run_mode(cfg, params, workload, mode: str, batch: int, max_len: int,
             tokens = sum(len(r.out) for r in done)
             agg = [r for r in mem.records
                    if r.path.startswith(("serve/batch", "serve/wave"))]
+            # whole-request spans only — each request also carries
+            # serve/req<N>/{prefill,decode} phase child scopes
             per_req = [r for r in mem.records
-                       if r.path.startswith("serve/req")]
+                       if r.path.startswith("serve/req")
+                       and "/" not in r.path.replace("serve/", "")]
             joules = sum(r.joules for r in agg)
             best = {
                 "mode": mode,

@@ -1,0 +1,118 @@
+"""Shared schema validation for the committed BENCH_*.json artifacts.
+
+One validator per bench family, dispatched on the payload's ``bench``
+field — the single source of truth the CI bench-smoke matrix job (and
+anyone regenerating a benchmark locally) runs instead of four copies of
+inline assert blocks.
+
+Usage: python benchmarks/validate_bench.py BENCH_overhead.json [...]
+Exits non-zero on the first failing file.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _positive_float(d, *keys, ctx=""):
+    for key in keys:
+        v = d[key]
+        assert isinstance(v, float) and v > 0, (ctx, key, v)
+
+
+def validate_overhead(d):
+    for mode in ("list_core_sync", "array_core_sync", "array_core_async"):
+        us = d["modes"][mode]["region_close_us"]
+        assert isinstance(us, float) and us > 0, (mode, us)
+    assert d["speedup_async_vs_list_core"] > 0
+    for core in ("array_core", "list_core"):
+        assert d["tick_jitter"][core]["samples"] > 0
+    rt = d["resolve_throughput"]
+    assert rt["vectorized_spans_per_s"] > 0
+    assert rt["max_abs_err_j"] < 1e-9
+    return (f"async {d['speedup_async_vs_list_core']:.1f}x vs list core")
+
+
+def validate_serve(d):
+    for mode in ("wave", "continuous"):
+        _positive_float(d[mode], "tokens_per_s", "j_per_token", "seconds",
+                        "joules", ctx=mode)
+        assert d[mode]["tokens"] > 0
+    assert d["request_token_sum_matches"] is True
+    assert d["continuous"]["request_token_sum"] == d["continuous"]["tokens"]
+    assert d["decode_compiles_once"] is True
+    assert d["speedup_tokens_per_s"] > 0
+    assert d["jpt_improvement"] > 0
+    assert d["target_met"] is True, "continuous did not beat waves"
+    return (f"{d['speedup_tokens_per_s']:.2f}x tokens/s, "
+            f"{d['jpt_improvement']:.2f}x lower J/token")
+
+
+def validate_decode(d):
+    fills = d["workload"]["fills"]
+    gate = d["workload"]["gate_fills"]
+    assert gate and all(f >= d["workload"]["max_len"] // 2 for f in gate)
+    for impl in ("dense", "flash"):
+        for f in fills:
+            _positive_float(d[impl]["fills"][str(f)], "tokens_per_s",
+                            "j_per_token", "seconds", "joules",
+                            ctx=(impl, f))
+            assert d[impl]["fills"][str(f)]["tokens"] > 0
+    for f in gate:
+        s = d["speedups"][str(f)]
+        assert s["tokens_per_s"] >= 1.0, (f, s)
+        assert s["j_per_token_improvement"] >= 1.0, (f, s)
+    assert d["target_met"] is True, "flash did not beat dense"
+    half = d["speedups"][str(gate[0])]
+    return (f"{half['tokens_per_s']:.2f}x tokens/s, "
+            f"{half['j_per_token_improvement']:.2f}x lower J/token at "
+            f"fill {gate[0]}")
+
+
+def validate_prefill(d):
+    for mode in ("blocking", "chunked"):
+        _positive_float(d[mode], "tokens_per_s", "j_per_token", "seconds",
+                        "joules", ctx=mode)
+        assert d[mode]["tokens"] > 0
+        assert d[mode]["request_token_sum"] == d[mode]["tokens"]
+        assert d[mode]["max_phase_split_rel_err"] <= 0.02, mode
+    assert d["chunked"]["prefill_chunk"] > 0
+    assert d["blocking"]["prefill_chunk"] == 0
+    cc = d["chunked"]["compile_counts"]
+    assert cc["prefill_chunk"] == 1 and cc["decode"] == 1 \
+        and cc["prefill"] == 0, cc
+    assert d["chunked_prefill_compiles_once"] is True
+    assert d["phase_split_sums_to_total"] is True
+    assert d["stall_p95_improved"] is True
+    assert d["speedup_tokens_per_s"] >= 1.2, d["speedup_tokens_per_s"]
+    assert d["jpt_improvement"] >= 1.2, d["jpt_improvement"]
+    assert d["target_met"] is True, "chunked did not beat blocking"
+    return (f"{d['speedup_tokens_per_s']:.2f}x tokens/s, "
+            f"{d['jpt_improvement']:.2f}x lower J/token, stall p95 "
+            f"{d['chunked']['p95_decode_stall_s'] * 1e3:.1f} vs "
+            f"{d['blocking']['p95_decode_stall_s'] * 1e3:.1f} ms")
+
+
+VALIDATORS = {
+    "pmt_overhead": validate_overhead,
+    "pmt_serve": validate_serve,
+    "pmt_decode": validate_decode,
+    "pmt_prefill": validate_prefill,
+}
+
+
+def main(paths):
+    if not paths:
+        raise SystemExit("usage: validate_bench.py BENCH_x.json [...]")
+    for path in paths:
+        with open(path) as f:
+            d = json.load(f)
+        bench = d.get("bench")
+        assert bench in VALIDATORS, f"{path}: unknown bench {bench!r}"
+        assert isinstance(d["schema_version"], int)
+        summary = VALIDATORS[bench](d)
+        print(f"{path} schema OK: {summary}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -110,18 +110,43 @@ def listing2_decorators():
 
 
 def serving_mode():
-    """Serving: continuous batching with per-request J/token.
+    """Serving: continuous batching with per-request, per-phase J/token.
 
     The ``ServeEngine`` decodes over fixed slots with *per-slot position
     counters*: a finished request's slot is refilled from the queue on
     the next step (its KV row is scattered in place via the
     ``kernels/cache_update`` Pallas kernel on TPU), so short requests
     never idle behind long ones the way synchronized waves force them
-    to.  Prompt lengths are bucketed to powers of two, so the
-    prefill/decode jit caches stay bounded no matter how many distinct
-    lengths arrive.
+    to.
 
-    Energy attribution is two-level and fully non-blocking:
+    Admission is **chunked prefill interleaved with decode**: the
+    prompt is processed ``prefill_chunk`` tokens at a time through the
+    ``kernels/prefill_attention`` flash kernel (each chunk attends the
+    request's already-written cache prefix plus its own causal keys,
+    then scatters its KV slice in place), and the scheduler runs one
+    chunk per decode step.  Prefill therefore compiles **once** — at
+    one chunk shape, for any prompt length — pad waste shrinks from
+    up-to-2x power-of-two bucketing to the final partial chunk, and an
+    admission stalls the live decode batch for at most one chunk
+    instead of a whole prompt.  The knob: ``cfg.prefill_chunk`` /
+    ``PMT_PREFILL_CHUNK`` / ``ServeEngine(prefill_chunk=...)`` /
+    ``repro.launch.serve --prefill-chunk``.
+
+    Migration note (buckets removed): ``prefill_chunk=0`` keeps the
+    old *blocking bucketed* admission (one whole-prompt prefill per
+    request, left-padded to its power-of-two ``prompt_bucket``) as the
+    measured baseline — and it is the automatic fallback for
+    encoder-decoder archs.  Bucketed prefill left-pads, so pad tokens
+    sit in context at the start of the sequence and shift every RoPE
+    position; chunked prefill processes the exact prompt from position
+    0.  For prompts that are not already bucket-sized the two can
+    therefore generate different tokens — chunked is the faithful
+    computation, and the one whole-prompt (unpadded) prefill agrees
+    with (see tests/test_serve_chunked.py).  Sampling is a constructor
+    knob too: ``ServeEngine(greedy=False, temperature=..., seed=...)``
+    threads a per-step PRNG key into the decode draw.
+
+    Energy attribution is three-level and fully non-blocking:
 
       * one aggregate region per ``generate()`` call
         (``serve/batch<N>``) whose token count is the *actually
@@ -129,10 +154,20 @@ def serving_mode():
       * one flat span per request (``serve/req<N>``, admission ->
         last token) resolved off the shared background ring sampler, so
         each request gets its own J/token.  Token counts across request
-        spans sum exactly to the aggregate.
+        spans sum exactly to the aggregate;
+      * two *phase* child scopes per request tiling its span —
+        ``serve/req<N>/prefill`` (token count = prompt length) and
+        ``serve/req<N>/decode`` (token count = generated tokens) — so
+        the time-to-first-token joules and the steady-state decode
+        joules report separately and sum to the request total
+        (``PowerMonitor.per_request_energy()`` carries the same split
+        as ``prefill_joules`` / ``decode_joules``).
 
-    benchmarks/bench_serve.py A/Bs this against the synchronized-wave
-    baseline (``mode="wave"``); see BENCH_serve.json for the numbers.
+    benchmarks/bench_serve.py A/Bs continuous batching against the
+    synchronized-wave baseline (``mode="wave"``), and
+    benchmarks/bench_prefill.py A/Bs chunked-interleaved admission
+    against blocking-bucketed (tokens/s, J/token, p95 decode stall);
+    see BENCH_serve.json / BENCH_prefill.json for the numbers.
 
     Decode attention impl selection: decode is memory-bound, so HBM
     bytes are joules — ``ServeEngine(..., decode_attn_impl=...)`` (or
@@ -185,7 +220,9 @@ def serving_mode():
                       f"{rec.joules:9.4f} J "
                       f"{rec.joules / max(rec.tokens, 1):9.5f} J/token")
         print(f"served {len(done)} requests / {tokens} tokens; decode "
-              f"compiled {eng.compile_counts['decode']}x (bucketed shapes)")
+              f"compiled {eng.compile_counts['decode']}x, chunked "
+              f"prefill {eng.compile_counts['prefill_chunk']}x (one "
+              f"shape each)")
 
 
 def dump_mode():

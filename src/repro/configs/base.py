@@ -129,6 +129,14 @@ class ModelConfig:
     # length-aware path (Pallas on TPU, masked-lax sweep elsewhere),
     # "dense" = masked full-cache attend; "auto" picks flash on TPU.
     decode_attn_impl: str = "auto"   # auto | dense | flash
+    # serve admission: chunked prefill interleaved with decode — the
+    # prompt is processed prefill_chunk tokens at a time through
+    # kernels/prefill_attention (one compiled shape, no power-of-two
+    # bucket family) so admissions stop stalling the live decode batch.
+    # 0 = blocking bucketed whole-prompt prefill (the measured
+    # baseline).  Env PMT_PREFILL_CHUNK and ServeEngine(prefill_chunk=)
+    # override; see serve/engine.py.
+    prefill_chunk: int = 32
     ssm_chunk: int = 128             # time-chunk for mamba associative scan
     mla_absorb: bool = True          # DeepSeek absorbed-weights decode path
     kernels: str = "reference"       # reference | pallas

@@ -54,6 +54,9 @@ class StepEnergy:
     flops: Optional[float] = None
     tokens: Optional[int] = None
     scope: str = "step"
+    # serve phase split: "prefill" / "decode" child spans of a request
+    # (None = the whole-request span)
+    phase: Optional[str] = None
 
     def report(self) -> EfficiencyReport:
         return EfficiencyReport(joules=self.joules, seconds=self.seconds,
@@ -133,36 +136,45 @@ class PowerMonitor:
     def measure_request(self, request_id: int,
                         flops: Optional[float] = None,
                         tokens: Optional[int] = None,
-                        blocking: bool = False):
-        """Measure one *serve request* end to end (admission -> last token).
+                        blocking: bool = False,
+                        phase: Optional[str] = None):
+        """Measure one *serve request* end to end (admission -> last token),
+        or — with ``phase="prefill"``/``"decode"`` — one phase of it.
 
         Unlike ``measure_step`` this opens a flat (non-nested) session
         span: the serve engine holds many request spans open at once and
         closes them in completion order, which the thread-local nesting
         stack cannot express.  Records land with ``scope="request"`` and
-        ``step=request_id``; read them back via :meth:`request_records`
-        or :meth:`per_request_energy` (J/token per request).
+        ``step=request_id`` (phase spans additionally carry
+        ``phase``, under the ``req<N>/<phase>`` label); read them back
+        via :meth:`request_records` or :meth:`per_request_energy`
+        (J/token per request, with the prefill/decode J split).
 
         Request spans overlap each other *and* the aggregate
         ``measure_step`` region covering the same wall-clock window, so
         they are attribution views, not additional energy: they are
         excluded from :attr:`cumulative_joules` and the per-step CSV
         log (which both account each joule exactly once, via steps).
+        The two phase spans tile the request span, so their joules sum
+        to the request total (within sampler interpolation).
         """
-        return self._measure(f"req{request_id}", request_id, flops, tokens,
-                             blocking, nested=False, scope="request")
+        label = f"req{request_id}" + (f"/{phase}" if phase else "")
+        return self._measure(label, request_id, flops, tokens,
+                             blocking, nested=False, scope="request",
+                             phase=phase)
 
     @contextlib.contextmanager
     def _measure(self, label: str, step: int, flops: Optional[float],
                  tokens: Optional[int], blocking: bool, nested: bool,
-                 scope: str):
+                 scope: str, phase: Optional[str] = None):
         box = _StepBox()
 
         def finish(measurements):
             recs = [StepEnergy(
                 step=step, sensor=m.sensor, kind=m.kind, joules=m.joules,
                 seconds=m.seconds, watts=m.watts, flops=flops,
-                tokens=tokens, scope=scope) for m in measurements]
+                tokens=tokens, scope=scope, phase=phase)
+                for m in measurements]
             with self._lock:
                 self._records.extend(recs)
                 if scope == "step":
@@ -247,16 +259,27 @@ class PowerMonitor:
         """Aggregate per-request accounting across sensors.
 
         Returns ``{request_id: {"joules", "seconds", "tokens",
-        "j_per_token"}}`` — joules summed over sensors, seconds the max
-        (sensors cover the same wall interval), J/token against the
-        request's generated-token count.
+        "j_per_token", "prefill_joules", "decode_joules"}}`` — joules
+        summed over sensors, seconds the max (sensors cover the same
+        wall interval), J/token against the request's generated-token
+        count.  The phase keys come from the ``serve/req<N>/prefill``
+        and ``.../decode`` child spans, which tile the request span:
+        their sum matches the request total (within sampler
+        interpolation).
         """
         out: Dict[int, Dict[str, float]] = {}
         for r in self.request_records():
             d = out.setdefault(r.step, {"joules": 0.0, "seconds": 0.0,
-                                        "tokens": r.tokens or 0})
-            d["joules"] += r.joules
-            d["seconds"] = max(d["seconds"], r.seconds)
+                                        "tokens": 0,
+                                        "prefill_joules": 0.0,
+                                        "decode_joules": 0.0})
+            if r.phase is None:
+                d["joules"] += r.joules
+                d["seconds"] = max(d["seconds"], r.seconds)
+                d["tokens"] = r.tokens or d["tokens"]
+            else:
+                key = f"{r.phase}_joules"
+                d[key] = d.get(key, 0.0) + r.joules
         for d in out.values():
             d["j_per_token"] = d["joules"] / max(d["tokens"], 1)
         return out

@@ -9,3 +9,10 @@ masked score contributes nothing to an online-softmax accumulator, while
 """
 
 NEG_INF = -2.0 ** 30
+
+# Default KV tiling for the cache-sweeping kernels (flash-decode,
+# chunked-prefill): one lane-width-aligned block per online-softmax
+# fold.  Callers tune per shape via ``block_k=``; ``pick_block_k``
+# degrades it to a divisor of odd cache sizes.
+DEFAULT_BLOCK_K = 128
+

@@ -1,0 +1,8 @@
+from repro.kernels.prefill_attention.ops import (prefill_attention,
+                                                 prefill_attention_lax)
+from repro.kernels.prefill_attention.prefill_attention import \
+    prefill_attention_pallas
+from repro.kernels.prefill_attention.ref import prefill_attention_ref
+
+__all__ = ["prefill_attention", "prefill_attention_lax",
+           "prefill_attention_pallas", "prefill_attention_ref"]

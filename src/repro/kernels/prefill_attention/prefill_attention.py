@@ -1,0 +1,185 @@
+"""Chunked-prefill flash attention for TPU — the serve admission kernel.
+
+Chunked prefill processes a prompt ``chunk`` tokens at a time against
+the request's partially-written KV cache, so prefill compiles **once**
+(one chunk shape) instead of once per power-of-two prompt bucket, and
+the serve scheduler can interleave one chunk between decode steps
+instead of stalling the whole live batch for a full prompt.  The kernel
+is the admission hot path: a ``(T, G)``-packed query block attending to
+
+  * the **cache prefix** — KV written by previous chunks (positions
+    ``< offs[b]``); per-row offsets arrive via scalar prefetch and clamp
+    the cache BlockSpec index maps, so cache blocks entirely beyond a
+    row's prefix are never read from HBM (the same elision trick as
+    ``kernels/decode_attention``) and a ``pl.when`` skips their MXU
+    work; and
+  * the **chunk's own keys** — passed separately (they have not been
+    scattered into the cache yet), causally masked in-kernel.
+
+Grid is (B, KVH, cache_steps + chunk_steps) with the kv sweep innermost
+(``arbitrary`` semantics); the fp32 (T, G, hdv) accumulator plus running
+row-max/row-sum live in VMEM scratch across both phases of the sweep —
+one continuous online softmax, so the result is a single attention over
+[prefix ++ chunk].
+
+Ring caches (sliding-window layers): slot ``s`` holds position
+``(offs-1) - ((offs-1-s) mod C)``.  Chunk queries trail the newest
+prefix position by up to ``T-1``, so — unlike decode — the explicit
+window mask is applied in-kernel on both phases.
+
+``v_width`` lets V alias K (the MLA [latent | rope] concatenated cache:
+scores use the full row, values only the latent prefix).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.constants import DEFAULT_BLOCK_K, NEG_INF
+from repro.kernels.prefill_attention.ref import pick_block_k
+
+
+def _prefill_kernel(offs_ref, q_ref, kx_ref, vx_ref, kc_ref, vc_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *,
+                    scale: float, ring: bool, window, softcap,
+                    bk_c: int, bk_t: int, cache_steps: int,
+                    total_steps: int, cache_size: int, chunk: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    off = offs_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, 1), 0)
+
+    def fold(k_blk, v_blk, valid):
+        """One online-softmax fold.  k_blk: (bk, hdq), v_blk: (bk, hdv),
+        valid: (T, 1, bk) — broadcast over the G axis of the scores."""
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (T, G, hdq)
+        s = jax.lax.dot_general(
+            q, k_blk.astype(jnp.float32), (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (T, G, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                                # (T, G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1,
+                                                  keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v_blk.astype(jnp.float32), (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (T, G, hdv)
+        acc_ref[...] = alpha * acc_ref[...] + pv
+        m_ref[...] = m_new
+
+    # -- phase 1: cache prefix.  Blocks whose first slot is at or past
+    # the row's written prefix hold nothing attendable (full cache:
+    # slots >= off unwritten; ring: min(off, C) covers the not-yet-
+    # wrapped tail) — their DMA was elided by the index map, skip the
+    # compute as well.
+    @pl.when((ki < cache_steps) & (ki * bk_c < jnp.minimum(off, cache_size)))
+    def _cache_phase():
+        k_lo = ki * bk_c
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk_c), 2)
+        q_pos = off + q_idx                                # (T, 1, 1)
+        if ring:
+            last = off - 1
+            pos = last - jnp.mod(last - cols, cache_size)
+            valid = (pos >= 0) & (q_pos - pos < window)
+        else:
+            valid = jnp.broadcast_to(cols < off, (chunk, 1, bk_c))
+        fold(kc_ref[0, :, 0, :], vc_ref[0, :, 0, :], valid)
+
+    # -- phase 2: the chunk's own keys (causal; every block holds a key
+    # some query attends, so none are skippable).
+    @pl.when(ki >= cache_steps)
+    def _chunk_phase():
+        j_lo = (ki - cache_steps) * bk_t
+        cols = j_lo + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk_t), 2)
+        diff = q_idx - cols                                # (T, 1, bk_t)
+        valid = diff >= 0
+        if window is not None:
+            valid &= diff < window
+        fold(kx_ref[0, :, 0, :], vx_ref[0, :, 0, :], valid)
+
+    @pl.when(ki == total_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def prefill_attention_pallas(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
+                             ring: bool = False, window=None, softcap=None,
+                             scale: float = 1.0, block_k: int = DEFAULT_BLOCK_K,
+                             v_width=None, interpret: bool = False):
+    """q: (B, KVH, T, G, hdq); k_chunk/v_chunk: (B, T, KVH, hdq/hdv);
+    k_cache/v_cache: (B, C, KVH, hdq/hdv); offs: (B,) int32 chunk start
+    positions.  Returns (B, KVH, T, G, hdv) in q.dtype.  ``v_width``:
+    read only the first lanes of both v operands (which may alias their
+    k counterparts — the MLA concatenated latent cache)."""
+    b, kvh, t, g, hdq = q.shape
+    c = k_cache.shape[1]
+    hdv = v_width if v_width is not None else v_cache.shape[-1]
+    bk_c = pick_block_k(c, block_k)
+    bk_t = pick_block_k(t, block_k)
+    cache_steps = c // bk_c
+    chunk_steps = t // bk_t
+    total_steps = cache_steps + chunk_steps
+
+    def q_map(bi, hi, ki, offs):
+        return (bi, hi, 0, 0, 0)
+
+    def cache_map(bi, hi, ki, offs):
+        # Clamp beyond-prefix blocks (and the whole chunk phase) to the
+        # row's last needed cache block: a revisited block index elides
+        # the HBM->VMEM copy entirely.
+        last = jnp.minimum(jnp.maximum(offs[bi] - 1, 0), c - 1) // bk_c
+        return (bi, jnp.minimum(ki, last), hi, 0)
+
+    def chunk_map(bi, hi, ki, offs):
+        # Parked at block 0 during the cache phase (no copy after the
+        # first revisit), then walks the chunk.
+        j = jnp.clip(ki - cache_steps, 0, chunk_steps - 1)
+        return (bi, j, hi, 0)
+
+    kernel = functools.partial(
+        _prefill_kernel, scale=scale, ring=ring, window=window,
+        softcap=softcap, bk_c=bk_c, bk_t=bk_t, cache_steps=cache_steps,
+        total_steps=total_steps, cache_size=c, chunk=t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, total_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, t, g, hdq), q_map),
+            pl.BlockSpec((1, bk_t, 1, hdq), chunk_map),
+            pl.BlockSpec((1, bk_t, 1, hdv), chunk_map),
+            pl.BlockSpec((1, bk_c, 1, hdq), cache_map),
+            pl.BlockSpec((1, bk_c, 1, hdv), cache_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t, g, hdv), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((t, g, 1), jnp.float32),     # m: running row max
+            pltpu.VMEM((t, g, 1), jnp.float32),     # l: running row sum
+            pltpu.VMEM((t, g, hdv), jnp.float32),   # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, t, g, hdv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(offs.astype(jnp.int32), q, k_chunk, v_chunk, k_cache, v_cache)

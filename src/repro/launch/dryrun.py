@@ -184,7 +184,7 @@ def lower_cell(cfg: ModelConfig, shape: InputShape, mesh, rules,
                                               shape.seq_len))
             c_sh = param_sharding(model_mod.cache_logical_axes(cfg), mesh,
                                   rules, like=caches)
-            prefill, _ = model_mod.make_serve_fns(cfg)
+            prefill = model_mod.make_serve_fns(cfg).prefill
             fn = lambda p, b: prefill(p, b, shape.seq_len)
             lowered = jax.jit(fn, in_shardings=(p_sh, b_sh),
                               out_shardings=(None, c_sh)).lower(
@@ -200,7 +200,7 @@ def lower_cell(cfg: ModelConfig, shape: InputShape, mesh, rules,
             c_sh = param_sharding(cache_ax, mesh, rules, like=caches)
             tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
             cur = jax.ShapeDtypeStruct((), jnp.int32)
-            _, decode = model_mod.make_serve_fns(cfg)
+            decode = model_mod.make_serve_fns(cfg).decode
             lowered = jax.jit(
                 decode,
                 in_shardings=(p_sh, c_sh, batch_shardings(mesh, rules, tok),

@@ -15,7 +15,7 @@ import numpy as np
 import repro.core as pmt
 from repro import configs
 from repro.models import model as model_mod
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, stall_p95
 
 
 def main(argv=None):
@@ -35,6 +35,15 @@ def main(argv=None):
                          "kernels/decode_attention (Pallas on TPU, "
                          "masked-lax sweep elsewhere); auto = flash on "
                          "TPU only")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill chunk size (tokens per "
+                         "admission slice interleaved with decode); 0 = "
+                         "blocking bucketed prefill baseline; default "
+                         "resolves PMT_PREFILL_CHUNK then "
+                         "cfg.prefill_chunk")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for decode; 0 (default) "
+                         "= greedy argmax")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -49,7 +58,11 @@ def main(argv=None):
     engine = ServeEngine(cfg, params, batch_size=args.batch,
                          max_len=args.max_len, session=session,
                          mode=args.mode,
-                         decode_attn_impl=args.decode_attn_impl)
+                         decode_attn_impl=args.decode_attn_impl,
+                         prefill_chunk=args.prefill_chunk,
+                         greedy=args.temperature <= 0.0,
+                         temperature=args.temperature or 1.0,
+                         seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
     # heterogeneous lengths: the workload continuous batching is for
@@ -72,14 +85,29 @@ def main(argv=None):
     if per_req:
         by_req = {}
         for r in per_req:
-            d = by_req.setdefault(r.path, {"joules": 0.0, "tokens": r.tokens})
-            d["joules"] += r.joules
+            path, _, phase = r.path.partition("serve/")[2].partition("/")
+            d = by_req.setdefault(f"serve/{path}",
+                                  {"joules": 0.0, "tokens": 0,
+                                   "prefill": 0.0, "decode": 0.0})
+            if phase:
+                d[phase] += r.joules
+            else:
+                d["joules"] += r.joules
+                d["tokens"] = r.tokens
         worst = max(by_req.items(),
                     key=lambda kv: kv[1]["joules"] / max(kv[1]["tokens"], 1))
         print(f"per-request spans: {len(by_req)} "
               f"(token sum {sum(d['tokens'] for d in by_req.values())}); "
               f"costliest {worst[0]}: "
-              f"{worst[1]['joules'] / max(worst[1]['tokens'], 1):.4f} J/token")
+              f"{worst[1]['joules'] / max(worst[1]['tokens'], 1):.4f} J/token "
+              f"({worst[1]['prefill']:.2f} J prefill / "
+              f"{worst[1]['decode']:.2f} J decode)")
+    if engine.stall_events:
+        unit = "one chunk" if engine.prefill_chunk else "a whole prompt"
+        print(f"decode stalls: {len(engine.stall_events)} prefill "
+              f"dispatches while decoding, p95 "
+              f"{stall_p95(engine.stall_events) * 1e3:.2f} ms (each "
+              f"bounded by {unit})")
     session.close()
 
 

@@ -303,8 +303,11 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     """
     size = min(max_len, window) if window else max_len
     shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
-    zeros = jnp.zeros(shape, dtype)
-    return {"k": zeros, "v": zeros}
+    # k and v must be DISTINCT buffers: the serve engine donates cache
+    # trees into jitted steps (chunked prefill, row insert), and a
+    # buffer shared by two donated leaves gets handed out twice —
+    # silent corruption once both outputs land in it.
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def cache_spec_axes() -> Tuple[Optional[str], ...]:
@@ -389,6 +392,100 @@ def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
     o = attention(cfg, q, k.astype(q.dtype), v.astype(q.dtype),
                   q_pos=cur_col, kv_pos=kv_pos, causal=True, window=window,
                   kv_valid=kv_valid, impl="dense")
+    return output_proj(p, o), {"k": k, "v": v}
+
+
+def chunk_kv_write(cache, new, offset, valid_len, *,
+                   ring: bool = False):
+    """Write a prefill chunk's KV into a cache: ``new[:, t]`` lands at
+    position ``offset + t`` (slot ``(offset + t) % C`` when ``ring``)
+    for every ``t < valid_len``.
+
+    cache: (B, C, *rest).  new: (B, T, *rest).  offset: scalar or (B,)
+    int32 (the chunk's first absolute position).  valid_len: traced
+    scalar — tokens beyond it are the right-padding of a final partial
+    chunk.
+
+    The scalar-offset full cache takes the fast path: pads land at
+    slots past the prompt, which stay invalid under every decode
+    path's ``cur_len`` masking until a real decode token overwrites
+    them, so the whole chunk lands in one ``dynamic_update_slice``.
+    Everything else (ring caches — where a pad write would wrap onto a
+    *valid* older position inside the window — and per-row offsets)
+    goes through one vectorized gather+select over the C cache slots:
+    per slot, the index of the last valid chunk token that maps there
+    falls out of the ring arithmetic in closed form, so there is no
+    per-token write loop to trace (chunk-sized HLO) or serialize at
+    runtime, and a chunk longer than the ring degrades gracefully to
+    its surviving tail.
+    """
+    b, t = new.shape[:2]
+    c = cache.shape[1]
+    offset = jnp.asarray(offset, jnp.int32)
+    per_row = offset.ndim == 1
+    new = new.astype(cache.dtype)
+    if not ring and not per_row:
+        starts = (0, offset) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new, starts)
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    slots = jnp.arange(c, dtype=jnp.int32)[None]           # (1, C)
+    off = offset[:, None] if per_row else offset[None, None]
+    if ring:
+        # slot s's final occupant is the LAST valid chunk token at a
+        # position == s (mod C): position p = last_valid - ((last_valid
+        # - s) mod C), chunk index i = p - offset; i < 0 means no valid
+        # token wrapped onto s — keep the old row.
+        last_valid = off + valid_len - 1
+        i = (valid_len - 1) - jnp.mod(last_valid - slots, c)
+        keep_new = i >= 0
+    else:
+        i = slots - off
+        keep_new = (i >= 0) & (i < valid_len)
+    i = jnp.broadcast_to(jnp.clip(i, 0, t - 1), (b, c))
+    expand = (...,) + (None,) * (cache.ndim - 2)
+    gathered = jnp.take_along_axis(new, i[expand], axis=1)
+    return jnp.where(jnp.broadcast_to(keep_new, (b, c))[expand],
+                     gathered, cache)
+
+
+def prefill_chunk_self_attention(cfg: ModelConfig, p, x, cache, offset,
+                                 valid_len, *,
+                                 window: Optional[int] = None):
+    """One chunk of chunked prefill through one attention layer.
+
+    x: (B, T, d) — the chunk's hidden states at absolute positions
+    ``offset + i``.  cache: {"k","v"} (B, C, KVH, hd) holding positions
+    ``< offset`` (the previous chunks).  offset: scalar or (B,) int32;
+    valid_len: traced scalar — tokens ``>= valid_len`` are the final
+    partial chunk's right-padding (their outputs are garbage the caller
+    discards; their KV is masked out of ring caches and lands on
+    never-valid slots of full ones).
+
+    Attention runs through ``kernels/prefill_attention``: one online
+    softmax over [cache prefix ++ causal in-chunk keys], with cache
+    blocks beyond ``offset`` never read (Pallas on TPU, fused masked
+    lax elsewhere — ``PMT_PREFILL_ATTENTION_DISPATCH`` overrides).
+    Returns (out (B, T, d), new_cache).
+    """
+    from repro.kernels.prefill_attention import ops as pf_ops
+    b, t = x.shape[:2]
+    off = jnp.asarray(offset, jnp.int32)
+    positions = (off[:, None] if off.ndim else off) \
+        + jnp.arange(t, dtype=jnp.int32)[None]             # (B|1, T)
+    positions = jnp.broadcast_to(positions, (b, t))
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[..., None], (b, t, 3))
+    q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
+
+    ring = window is not None
+    scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
+    o = pf_ops.prefill_attention(
+        q, k_new, v_new, cache["k"], cache["v"], off,
+        ring=ring, window=window, softcap=cfg.attn_softcap, scale=scale)
+    k = chunk_kv_write(cache["k"], k_new, off, valid_len, ring=ring)
+    v = chunk_kv_write(cache["v"], v_new, off, valid_len, ring=ring)
+    k = shard(k, *cache_spec_axes())
+    v = shard(v, *cache_spec_axes())
     return output_proj(p, o), {"k": k, "v": v}
 
 

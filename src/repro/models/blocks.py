@@ -203,9 +203,11 @@ def init_block_cache(cfg: ModelConfig, idx: int, batch: int, max_len: int,
                                dtype=dtype)
     if kind == "X":
         # cross-attention k/v are filled once from the encoder output
-        cache["xk"] = jnp.zeros(
-            (batch, cfg.enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
-        cache["xv"] = cache["xk"]
+        # (distinct buffers — donated cache trees must not share; see
+        # attn.init_kv_cache)
+        xshape = (batch, cfg.enc_len, cfg.num_kv_heads, cfg.head_dim)
+        cache["xk"] = jnp.zeros(xshape, dtype)
+        cache["xv"] = jnp.zeros(xshape, dtype)
     return cache
 
 
@@ -265,6 +267,93 @@ def block_decode(cfg: ModelConfig, p, x, cache, cur_len, idx: int):
             q_pos=jnp.zeros((b, 1), jnp.int32),
             kv_pos=jnp.zeros((b, skv), jnp.int32), causal=False, impl="dense")
         x = x + attn.output_proj(p["cross"], o)
+
+    h = layers.apply_norm(cfg, p["norm_2"], x)
+    if "router" in p["ffn"]:
+        out, _ = moe.apply_moe(cfg, p["ffn"], h)
+    else:
+        out = layers.apply_mlp(cfg, p["ffn"], h)
+    if cfg.post_block_norm:
+        out = layers.apply_norm(cfg, p["post_norm_2"], out)
+    return x + out, cache
+
+
+# -- chunked prefill (resume from a partial cache at an offset) ------------------------
+
+def _masked_state_scan(cell_fn, x, cache, valid_len):
+    """Scan a one-token decode cell over a chunk, freezing the carried
+    state at pad positions.
+
+    ``cell_fn(x_t (B,1,d), cache) -> (out (B,1,d), new_cache)`` is the
+    cell's existing decode recurrence — chunked prefill for state
+    blocks (mamba / mLSTM / sLSTM) is exactly the decode scan resumed
+    from the carried cache, so prefix-resume costs nothing new.  Steps
+    ``t >= valid_len`` (a final partial chunk's right-padding) keep the
+    previous state: the carry a later decode resumes from reflects the
+    real prompt only.  Pad outputs are garbage the caller discards.
+    """
+    t = x.shape[1]
+
+    def step(carry, xt_i):
+        xt, i = xt_i
+        out, new = cell_fn(xt[:, None], carry)
+        keep = i < valid_len
+        carry = jax.tree.map(lambda n, o: jnp.where(keep, n, o), new, carry)
+        return carry, out[:, 0]
+
+    # Some cells widen state leaves on their first step (sLSTM keeps h
+    # in compute dtype while the stored cache is bf16); promote the
+    # carry up front so the scan sees one stable dtype per leaf, and
+    # demote on exit so chunk N+1's input cache matches chunk N's —
+    # the serve engine jits one chunk function and feeds caches back
+    # through it, so the cache tree must be a dtype fixpoint.
+    orig = cache
+    new_struct = jax.eval_shape(lambda c: cell_fn(x[:, :1], c)[1], cache)
+    cache = jax.tree.map(lambda o, s: o.astype(s.dtype), cache, new_struct)
+    idx = jnp.arange(t, dtype=jnp.int32)
+    cache, ys = jax.lax.scan(step, cache, (x.swapaxes(0, 1), idx))
+    cache = jax.tree.map(lambda n, o: n.astype(o.dtype), cache, orig)
+    return ys.swapaxes(0, 1), cache
+
+
+def block_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len,
+                        idx: int):
+    """One prefill chunk through one block. x: (B, T, d) at absolute
+    positions ``offset + i``; ``cache`` holds the state/KV of positions
+    ``< offset``; ``valid_len`` marks a final partial chunk's real
+    length.  Returns (x, new_cache) — same contract as ``block_decode``
+    widened to T tokens."""
+    kind = layer_kind(cfg, idx)
+    if kind == "X":
+        raise NotImplementedError(
+            "chunked prefill does not cover encoder-decoder archs (the "
+            "cross-attention KV comes from one whole-encoder pass); "
+            "serve admission falls back to blocking prefill for them")
+    if kind in ("m", "s"):
+        h = layers.apply_norm(cfg, p["norm"], x)
+        dec = xlstm.mlstm_decode if kind == "m" else xlstm.slstm_decode
+        out, cache = _masked_state_scan(
+            lambda xt, c: dec(cfg, p["cell"], xt, c), h, cache, valid_len)
+        return x + out, cache
+
+    h = layers.apply_norm(cfg, p["norm_1"], x)
+    if kind == "M":
+        out, cache = _masked_state_scan(
+            lambda xt, c: mamba.mamba_decode(cfg, p["mixer"], xt, c),
+            h, cache, valid_len)
+    elif cfg.attention == "mla":
+        out, cache = mla.mla_prefill_chunk(cfg, p["mixer"], h, cache,
+                                           offset, valid_len)
+    else:
+        window = layer_window(cfg, idx)
+        kv_cache = {"k": cache["k"], "v": cache["v"]}
+        out, kv_cache = attn.prefill_chunk_self_attention(
+            cfg, p["mixer"], h, kv_cache, offset, valid_len,
+            window=window)
+        cache = dict(cache, **kv_cache)
+    if cfg.post_block_norm:
+        out = layers.apply_norm(cfg, p["post_norm_1"], out)
+    x = x + out
 
     h = layers.apply_norm(cfg, p["norm_2"], x)
     if "router" in p["ffn"]:

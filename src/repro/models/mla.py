@@ -147,6 +147,52 @@ def prefill_mla_cache(cfg: ModelConfig, latent, k_rope, max_len: int,
     return cache
 
 
+def mla_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len):
+    """One chunk of chunked prefill through one MLA layer (absorbed).
+
+    x: (B, T, d) at absolute positions ``offset + i``; cache: the
+    latent ``{"kv"}`` tensor holding positions ``< offset``.  The
+    absorbed-weights trick extends from decode verbatim: the query
+    moves into latent space (``q_lat = q_nope @ W_UK``), the
+    concatenated ``[latent | rope]`` row *is* the key — both for the
+    cache prefix and for the chunk's own (not yet written) rows — and
+    its latent prefix is the value (``v_width``), so the chunk attends
+    through ``kernels/prefill_attention`` with zero reshuffling and no
+    per-head K/V materialisation.  Tokens ``>= valid_len`` (final
+    partial chunk's right-padding) land on never-valid slots.
+    Returns (out (B, T, d), new_cache).
+    """
+    from repro.kernels.prefill_attention import ops as pf_ops
+    from repro.models.attention import chunk_kv_write
+    m = cfg.mla
+    dt = x.dtype
+    b, t = x.shape[:2]
+    off = jnp.asarray(offset, jnp.int32)
+    positions = (off[:, None] if off.ndim else off) \
+        + jnp.arange(t, dtype=jnp.int32)[None]
+    positions = jnp.broadcast_to(positions, (b, t))
+
+    q_nope, q_rope = _project_q(cfg, p, x, positions)          # (B,T,H,*)
+    latent_new, k_rope_new = _project_kv_latent(cfg, p, x, positions)
+    kv_new = jnp.concatenate([latent_new, k_rope_new], axis=-1)  # (B,T,r+rr)
+
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)          # (B,T,H,r+rr)
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    kvx = kv_new[:, :, None, :]                                # (B,T,1,r+rr)
+    kvc = cache["kv"][:, :, None, :]                           # (B,C,1,r+rr)
+    ctx = pf_ops.prefill_attention(
+        q_eff, kvx, kvx, kvc, kvc, off, scale=1.0 / math.sqrt(qk_hd),
+        v_width=m.kv_lora_rank).astype(dt)                     # (B,T,H,r)
+
+    kv = chunk_kv_write(cache["kv"], kv_new, off, valid_len)
+    kv = shard(kv, "batch", "kv_seq", "kv_rank")
+    o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
+    out = shard(out, "batch", "seq", "d_model")
+    return out, {"kv": kv}
+
+
 def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
                          cache_impl: str = "auto", impl: str = "dense"):
     """One-token absorbed-MLA decode. x: (B,1,d).

@@ -12,14 +12,14 @@ Entry points:
   init_params(key, cfg)             -> (param values, logical-axes tree)
   build_forward(cfg)                -> hidden-state forward fn
   loss_fn(cfg)                      -> (loss, metrics) fn  (chunked xent)
-  make_serve_fns(cfg)               -> (prefill_fn, decode_fn)
+  make_serve_fns(cfg)               -> ServeFns(prefill, decode, prefill_chunk)
   init_caches / cache_layout        -> decode caches (+ dry-run specs)
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -348,16 +348,44 @@ def cache_logical_axes(cfg: ModelConfig):
 
 # -- serve: prefill / decode -----------------------------------------------------------
 
-def make_serve_fns(cfg: ModelConfig):
-    """Returns (prefill, decode_step).
+class ServeFns(NamedTuple):
+    """The three pjit-able serve steps (see :func:`make_serve_fns`)."""
+
+    prefill: Any
+    decode: Any
+    prefill_chunk: Any
+
+
+def make_serve_fns(cfg: ModelConfig, cache_dtype=jnp.bfloat16):
+    """Returns ``ServeFns(prefill, decode, prefill_chunk)``.
+
+    ``cache_dtype`` sets the KV/latent cache storage dtype the prefill
+    builds (decode and prefill_chunk consume whatever they are given).
+    bf16 is the serving default; fp32 buys exact-parity debugging at 2x
+    cache bytes.
 
     prefill(params, batch, max_len) -> (last_logits (B,V), caches)
-    decode_step(params, caches, tokens (B,1), cur_len) -> (logits, caches)
+    decode(params, caches, tokens (B,1), cur_len) -> (logits, caches)
+    prefill_chunk(params, caches, tokens (B,T), offset, last_idx)
+        -> (logits (B,V) at ``last_idx``, caches)
 
     ``cur_len`` is a scalar (synchronized decode: every row at the same
     position) or a (B,) int32 vector of per-slot position counters
     (continuous batching: each row advances independently and its KV
     lands at its own cache offset via the cache_update scatter).
+
+    ``prefill_chunk`` resumes prefill from a *partial* cache: the chunk
+    tokens sit at absolute positions ``offset + i`` (``offset`` scalar
+    or (B,) vector), attend the already-written cache prefix plus their
+    own causal keys through ``kernels/prefill_attention``, and scatter
+    their KV (or advance the mamba/xlstm scan carry) in place — so
+    prefill compiles **once**, at one chunk shape, for any prompt
+    length.  ``last_idx`` (traced scalar) marks the last *real* token
+    of a right-padded final chunk: logits come from that position, pad
+    KV is kept off ring caches, and pad tokens leave state caches
+    untouched.  Not available for encoder-decoder archs (the cross-
+    attention KV needs one whole-encoder pass — serve admission falls
+    back to blocking prefill there).
 
     ``cfg.decode_attn_impl`` selects the decode attention path for every
     attention/MLA layer in the stack: "flash" = the length-aware
@@ -390,7 +418,8 @@ def make_serve_fns(cfg: ModelConfig):
                     rope=False)
                 x_enc_kv = (xk, xv)
             return xx, blocks.prefill_block_cache(cfg, idx, kv, max_len,
-                                                  x_enc_kv=x_enc_kv)
+                                                  x_enc_kv=x_enc_kv,
+                                                  dtype=cache_dtype)
 
         if lay.prefix:
             caches["prefix"] = {}
@@ -458,4 +487,52 @@ def make_serve_fns(cfg: ModelConfig):
         logits = layers.logits_from_hidden(cfg, params["embed"], x)
         return logits[:, 0], caches
 
-    return prefill, decode_step
+    def prefill_chunk(params, caches, tokens, offset, last_idx):
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "chunked prefill is not available for encoder-decoder "
+                "archs; use the whole-prompt prefill")
+        last_idx = jnp.asarray(last_idx, jnp.int32)
+        valid_len = last_idx + 1
+        x = layers.embed_tokens(cfg, params["embed"], tokens)
+
+        def run(xx, bp, c, idx):
+            return blocks.block_prefill_chunk(cfg, bp, xx, c, offset,
+                                              valid_len, idx)
+
+        if lay.prefix:
+            for i in lay.prefix:
+                x, c = run(x, params["prefix"][f"l{i}"],
+                           caches["prefix"][f"l{i}"], i)
+                caches["prefix"][f"l{i}"] = c
+
+        def unit(xx, up_uc):
+            up, uc = up_uc
+            new_uc = {}
+            for r in range(lay.unit_len):
+                xx, c = run(xx, up[f"r{r}"], uc[f"r{r}"],
+                            lay.prefix_len + r)
+                new_uc[f"r{r}"] = c
+            return xx, new_uc
+
+        if lay.n_units == 1:
+            x, caches["units"] = unit(x, (params["units"], caches["units"]))
+        elif cfg.scan_layers:
+            x, caches["units"] = jax.lax.scan(
+                lambda xx, up_uc: unit(xx, up_uc), x,
+                (params["units"], caches["units"]))
+        else:
+            ucs = []
+            for u in range(lay.n_units):
+                sl = lambda a: a[u]
+                x, uc = unit(x, (jax.tree.map(sl, params["units"]),
+                                 jax.tree.map(sl, caches["units"])))
+                ucs.append(uc)
+            caches["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ucs)
+
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+        logits = layers.logits_from_hidden(cfg, params["embed"], x_last)
+        return logits[:, 0], caches
+
+    return ServeFns(prefill, decode_step, prefill_chunk)

@@ -1,5 +1,7 @@
 from repro.serve.engine import (Request, ServeEngine, make_decode_fn,
-                                make_prefill_fn, prompt_bucket)
+                                make_prefill_chunk_fn, make_prefill_fn,
+                                prompt_bucket, resolve_prefill_chunk)
 
-__all__ = ["Request", "ServeEngine", "make_prefill_fn", "make_decode_fn",
-           "prompt_bucket"]
+__all__ = ["Request", "ServeEngine", "make_prefill_fn",
+           "make_prefill_chunk_fn", "make_decode_fn", "prompt_bucket",
+           "resolve_prefill_chunk"]

@@ -1,8 +1,8 @@
 """Serving: prefill/decode step functions + a continuous-batching engine.
 
-``make_prefill_fn`` / ``make_decode_fn`` are the pjit-able pure steps the
-dry-run lowers (``serve_step`` for the decode_* shapes = one new token
-against a seq_len cache).
+``make_prefill_fn`` / ``make_decode_fn`` / ``make_prefill_chunk_fn`` are
+the pjit-able pure steps the dry-run lowers (``serve_step`` for the
+decode_* shapes = one new token against a seq_len cache).
 
 ``ServeEngine`` implements **sequence-level continuous batching**
 (``mode="continuous"``, the default): every batch slot carries its own
@@ -11,26 +11,58 @@ offsets (per-row KV-cache scatter via ``kernels/cache_update`` — Pallas
 on TPU, ``vmap``'d dynamic-update-slice elsewhere), and a slot that
 finishes its request is refilled from the queue on the *next* step
 instead of idling until the longest request in a synchronized wave
-drains.  Admission prefills one request at a time (prompt left-padded to
-a power-of-two bucket so the prefill jit cache stays bounded) and
-inserts the resulting cache row into the live batch; the decode step
-function therefore sees one shape ever and never recompiles across
-request mixes.  ``mode="wave"`` keeps the old synchronized-wave decode
-as the measured baseline (see benchmarks/bench_serve.py).
+drains.
 
-PMT integration — per-request energy attribution: each admitted request
-opens its own non-blocking flat session span (``serve/req<N>``,
+Admission is **chunked prefill interleaved with decode** (the
+``prefill_chunk`` knob, default ``cfg.prefill_chunk``): a request's
+prompt is processed ``prefill_chunk`` tokens at a time through
+``ServeFns.prefill_chunk`` — each chunk attends the request's already-
+written cache prefix plus its own causal keys via the
+``kernels/prefill_attention`` flash kernel and scatters its KV slice in
+place — and the scheduler drains the chunk queue *alongside* decode,
+one chunk per decode step.  Two levers fall out:
+
+  * prefill compiles **once**, at one (1, chunk) shape, for any prompt
+    length — no power-of-two bucket family, and pad waste shrinks from
+    up-to-2x (bucketing) to the final partial chunk;
+  * a whole-prompt admission no longer stalls the live decode batch:
+    the head-of-line decode stall per admission drops from a full
+    prompt's prefill to one chunk (see benchmarks/bench_prefill.py;
+    per-generate stall samples are kept in ``stall_events``).
+
+``prefill_chunk=0`` keeps the previous *blocking bucketed* admission —
+one whole-prompt prefill per request at a power-of-two prompt bucket —
+as the measured baseline (and the fallback for encoder-decoder archs,
+whose cross-attention KV needs one whole-encoder pass).  Note the
+semantic difference: bucketed prefill left-pads the prompt (pad tokens
+sit *in context* at the sequence start and shift RoPE positions), while
+chunked prefill processes the exact prompt from position 0 — for
+prompts that are not already bucket-sized the two can generate
+different tokens, chunked being the faithful one.  ``mode="wave"``
+keeps the old synchronized-wave decode as the coarser baseline (see
+benchmarks/bench_serve.py).
+
+Sampling: ``ServeEngine(greedy=False, temperature=..., seed=...)``
+threads a per-step PRNG key (``fold_in`` of a seeded base key and a
+monotone step counter) into ``make_decode_fn``'s categorical draw —
+and into the prefill fns for the first token — instead of always
+decoding greedily.
+
+PMT integration — per-request, per-phase energy attribution: each
+admitted request opens a flat session span (``serve/req<N>``,
 ``nested=False`` so interleaved lifetimes don't fight the nesting
-stack), closed right after the fenced decode step that produced its
-last token; spans resolve in vectorized batches against the shared
-background ring sampler, so the engine reports true per-request
-J/token next to the aggregate region (``serve/batch<N>`` /
-``serve/wave<N>``) whose token count is the *actually generated* total
-(sum of per-request ``max_new_tokens``), never padded wave FLOPs.
-Concurrent request spans overlap in time, so per-request joules measure
-each request's wall-clock window at full device power; token counts sum
-exactly to the aggregate.  Passing a ``PowerMonitor`` routes the same
-spans through ``measure_step``/``measure_request`` accounting instead.
+stack) closed right after the fenced decode step that produced its
+last token, plus two *phase* child scopes tiling the same window:
+``serve/req<N>/prefill`` (admission -> last prefill chunk fenced,
+token count = prompt length) and ``serve/req<N>/decode`` (first ->
+last decode token, token count = generated tokens).  All spans resolve
+in vectorized batches against the shared background ring sampler, so
+the engine reports true per-request J/token — split by phase — next to
+the aggregate region (``serve/batch<N>`` / ``serve/wave<N>``) whose
+token count is the *actually generated* total.  Passing a
+``PowerMonitor`` routes the same spans through
+``measure_step``/``measure_request(..., phase=...)`` accounting
+instead (``per_request_energy`` then carries the J split).
 
 Known semantic caveat: MoE layers route with cross-batch capacity
 limits, so under continuous batching a request's tokens can be dropped
@@ -40,9 +72,13 @@ tests/test_serve_continuous.py for the byte-parity gate).
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import math
+import os
+import time
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,27 +88,45 @@ from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
 
 
-def make_prefill_fn(cfg: ModelConfig, max_len: int):
-    prefill, _ = model_mod.make_serve_fns(cfg)
+def _pick(logits, greedy: bool, temperature: float, key):
+    if greedy or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
 
-    def prefill_fn(params, batch):
+
+def make_prefill_fn(cfg: ModelConfig, max_len: int, greedy: bool = True,
+                    temperature: float = 1.0, cache_dtype=jnp.bfloat16):
+    prefill = model_mod.make_serve_fns(cfg, cache_dtype=cache_dtype).prefill
+
+    def prefill_fn(params, batch, key=None):
         logits, caches = prefill(params, batch, max_len)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+        return _pick(logits, greedy, temperature, key), caches
 
     return prefill_fn
 
 
+def make_prefill_chunk_fn(cfg: ModelConfig, greedy: bool = True,
+                          temperature: float = 1.0):
+    """One prefill chunk: resume the cache at ``offset``, return the
+    token sampled from the ``last_idx`` position's logits (only the
+    final chunk's is used) plus the updated caches."""
+    prefill_chunk = model_mod.make_serve_fns(cfg).prefill_chunk
+
+    def chunk_fn(params, caches, tokens, offset, last_idx, key=None):
+        logits, caches = prefill_chunk(params, caches, tokens, offset,
+                                       last_idx)
+        return _pick(logits, greedy, temperature, key), caches
+
+    return chunk_fn
+
+
 def make_decode_fn(cfg: ModelConfig, greedy: bool = True,
                    temperature: float = 1.0):
-    _, decode = model_mod.make_serve_fns(cfg)
+    decode = model_mod.make_serve_fns(cfg).decode
 
     def decode_fn(params, caches, tokens, cur_len, key=None):
         logits, caches = decode(params, caches, tokens, cur_len)
-        if greedy or key is None:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            nxt = jax.random.categorical(key, logits / temperature)
-        return nxt.astype(jnp.int32)[:, None], caches
+        return _pick(logits, greedy, temperature, key)[:, None], caches
 
     return decode_fn
 
@@ -80,16 +134,55 @@ def make_decode_fn(cfg: ModelConfig, greedy: bool = True,
 def prompt_bucket(plen: int, min_bucket: int = 8) -> int:
     """Pad a prompt length to its power-of-two bucket.
 
-    Bounds the prefill jit cache: every prompt length in (2^(k-1), 2^k]
-    shares one compiled prefill, so at most log2(max_len) prefill
-    variants exist no matter how many distinct lengths arrive.
+    Bounds the *blocking* prefill jit cache: every prompt length in
+    (2^(k-1), 2^k] shares one compiled prefill, so at most
+    log2(max_len) prefill variants exist no matter how many distinct
+    lengths arrive.  Used by the wave baseline and the
+    ``prefill_chunk=0`` blocking admission; chunked admission compiles
+    one shape and needs no buckets.
+
+    ``min_bucket`` must itself be a power of two — a non-power floor
+    would silently produce non-power buckets (``b <<= 1`` preserves
+    whatever factor it starts with) and fracture the jit cache.
     """
     if plen < 1:
         raise ValueError("empty prompt")
-    b = max(min_bucket, 1)
+    if min_bucket < 1 or (min_bucket & (min_bucket - 1)):
+        raise ValueError(
+            f"min_bucket must be a power of two >= 1, got {min_bucket}")
+    b = min_bucket
     while b < plen:
         b <<= 1
     return b
+
+
+def stall_p95(events) -> float:
+    """p95 of the engine's ``stall_events`` samples (nearest-rank on the
+    inclusive index) — shared by the serve launcher and
+    benchmarks/bench_prefill.py so the two report the same number."""
+    if not events:
+        return 0.0
+    xs = sorted(events)
+    return float(xs[min(len(xs) - 1, int(round(0.95 * (len(xs) - 1))))])
+
+
+def resolve_prefill_chunk(cfg: ModelConfig,
+                          prefill_chunk: Optional[int]) -> int:
+    """Engine arg beats the ``PMT_PREFILL_CHUNK`` env var beats
+    ``cfg.prefill_chunk``; encoder-decoder archs force 0 (blocking)."""
+    if prefill_chunk is None:
+        env = os.environ.get("PMT_PREFILL_CHUNK")
+        prefill_chunk = int(env) if env else cfg.prefill_chunk
+        if cfg.is_encoder_decoder:
+            prefill_chunk = 0
+    if prefill_chunk < 0:
+        raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
+    if prefill_chunk and cfg.is_encoder_decoder:
+        raise ValueError(
+            "chunked prefill is not available for encoder-decoder archs "
+            "(cross-attention KV needs one whole-encoder pass); use "
+            "prefill_chunk=0")
+    return prefill_chunk
 
 
 @dataclasses.dataclass
@@ -100,48 +193,86 @@ class Request:
     id: Optional[int] = None        # assigned by the engine at admission
 
 
+@dataclasses.dataclass
+class _Prefill:
+    """An admission mid-chunked-prefill: its slot is reserved, its
+    batch-1 cache row is being built chunk by chunk.  The open
+    serve/req<N>/prefill span lives in the engine loop's per-slot
+    ``pf_ctxs`` (closed on completion or by the cleanup ``finally``)."""
+
+    req: Request
+    slot: int
+    caches: Any                     # batch-1 cache tree under construction
+    toks: np.ndarray                # (1, padded) right-padded prompt
+    plen: int
+    offset: int = 0
+
+
 class ServeEngine:
     """Continuous-batching decode over fixed slots (wave mode as baseline).
 
     Args:
       cfg, params: model config + parameter tree.
       batch_size: number of decode slots.
-      max_len: KV-cache capacity per slot; every request must satisfy
-        ``prompt_bucket(len(prompt)) + max_new_tokens <= max_len + 1``.
+      max_len: KV-cache capacity per slot.  Chunked admission needs
+        ``ceil(plen / chunk) * chunk <= max_len`` and
+        ``plen + max_new_tokens <= max_len + 1``; blocking/wave
+        admission needs ``prompt_bucket(plen) + max_new_tokens
+        <= max_len + 1``.
       monitor: a ``PowerMonitor`` — aggregate regions go through its
-        non-blocking ``measure_step``, per-request spans through
-        ``measure_request`` (J/token per request via
+        non-blocking ``measure_step``, per-request and per-phase spans
+        through ``measure_request(..., phase=...)`` (J/token and the
+        prefill/decode J split per request via
         ``monitor.per_request_energy()``).
       session: a ``pmt.Session`` — aggregate region ``serve/batch<N>``
-        (or ``serve/wave<N>``) plus one flat ``serve/req<N>`` span per
+        (or ``serve/wave<N>``) plus flat ``serve/req<N>`` /
+        ``serve/req<N>/prefill`` / ``serve/req<N>/decode`` spans per
         request, all resolved asynchronously off the shared ring
         sampler.  Monitor wins when both are passed.
       mode: "continuous" (default) or "wave" (synchronized baseline).
-      min_prompt_bucket: smallest prompt bucket (power of two).
+      min_prompt_bucket: smallest prompt bucket (power of two; blocking
+        and wave admission only).
       cache_impl: per-row scatter impl forwarded to
         ``kernels/cache_update`` ("auto" picks Pallas on TPU).
       decode_attn_impl: overrides ``cfg.decode_attn_impl`` for this
-        engine — "flash" routes every decode step's attention through
-        the length-aware ``kernels/decode_attention`` path (cache
-        blocks beyond a row's position are never read; the J/token
-        lever on the memory-bound decode step), "dense" keeps the
-        masked full-cache attend, "auto" picks flash on TPU.  See
-        benchmarks/bench_decode.py for the A/B.
+        engine — "flash" routes decode attention through the
+        length-aware ``kernels/decode_attention`` path, "dense" keeps
+        the masked full-cache attend, "auto" picks flash on TPU.
+      prefill_chunk: chunk size for interleaved chunked prefill; 0 =
+        blocking bucketed admission (the measured baseline); None
+        (default) resolves ``PMT_PREFILL_CHUNK`` then
+        ``cfg.prefill_chunk``.
+      greedy, temperature, seed: decoding policy.  ``greedy=False``
+        threads ``fold_in(PRNGKey(seed), step)`` into every decode
+        step's categorical draw (and the prefill first-token pick);
+        the step counter is monotone across ``generate()`` calls.
 
-    ``compile_counts`` tracks prefill/decode retraces — continuous-mode
-    decode compiles exactly once, prefill once per prompt bucket.
+    ``compile_counts`` tracks retraces — continuous-mode decode
+    compiles exactly once, chunked prefill exactly once (one chunk
+    shape), blocking prefill once per prompt bucket.
+    ``stall_events`` holds, for the most recent ``generate()``, the
+    seconds decode sat blocked behind each fenced prefill dispatch
+    (one whole prompt when blocking, one chunk when chunked) while at
+    least one request was mid-decode — the head-of-line stall the
+    chunked scheduler exists to shrink (p95 reported by
+    benchmarks/bench_prefill.py).
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
                  max_len: int, monitor=None, session=None,
                  mode: str = "continuous", min_prompt_bucket: int = 8,
                  cache_impl: str = "auto",
-                 decode_attn_impl: Optional[str] = None):
+                 decode_attn_impl: Optional[str] = None,
+                 prefill_chunk: Optional[int] = None,
+                 greedy: bool = True, temperature: float = 1.0,
+                 seed: int = 0, cache_dtype=jnp.bfloat16):
         if mode not in ("continuous", "wave"):
             raise ValueError(f"unknown serve mode {mode!r}")
         if decode_attn_impl is not None:
             cfg = dataclasses.replace(cfg,
                                       decode_attn_impl=decode_attn_impl)
+        if not greedy and temperature <= 0.0:
+            raise ValueError("sampling needs temperature > 0")
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -151,12 +282,37 @@ class ServeEngine:
         self.mode = mode
         self.min_prompt_bucket = min_prompt_bucket
         self.cache_impl = cache_impl
+        self.prefill_chunk = resolve_prefill_chunk(cfg, prefill_chunk)
+        if self.prefill_chunk > max_len:
+            if prefill_chunk is not None:
+                raise ValueError(f"prefill_chunk {self.prefill_chunk} "
+                                 f"exceeds max_len {max_len}")
+            # config/env default larger than this engine's cache: clamp
+            # (one whole-cache chunk) rather than refuse to serve.
+            self.prefill_chunk = max_len
+        self.greedy = greedy
+        self.temperature = temperature
+        self._key_base = jax.random.PRNGKey(seed)
+        self._step_idx = 0          # monotone sampling-step counter
         self._batch_count = 0       # aggregate regions (waves or batches)
         self._request_count = 0
-        self.compile_counts: Dict[str, int] = {"prefill": 0, "decode": 0}
-        self._prefill = jax.jit(self._counted("prefill",
-                                              make_prefill_fn(cfg, max_len)))
-        self._decode = jax.jit(self._counted("decode", make_decode_fn(cfg)))
+        self.stall_events: List[float] = []
+        self.compile_counts: Dict[str, int] = {"prefill": 0, "decode": 0,
+                                               "prefill_chunk": 0}
+        self.cache_dtype = cache_dtype
+        sample_kw = dict(greedy=greedy, temperature=temperature)
+        self._prefill = jax.jit(self._counted(
+            "prefill", make_prefill_fn(cfg, max_len, cache_dtype=cache_dtype,
+                                       **sample_kw)))
+        self._decode = jax.jit(self._counted(
+            "decode", make_decode_fn(cfg, **sample_kw)))
+        if self.prefill_chunk:
+            # Donate the row cache: each chunk overwrites its slice in
+            # place instead of copying the whole tree per chunk.
+            self._prefill_chunk_fn = jax.jit(
+                self._counted("prefill_chunk",
+                              make_prefill_chunk_fn(cfg, **sample_kw)),
+                donate_argnums=1)
         self._insert = self._make_insert()
 
     def _counted(self, name: str, fn):
@@ -167,6 +323,15 @@ class ServeEngine:
             return fn(*args, **kwargs)
 
         return wrapper
+
+    def _next_key(self):
+        """Per-step PRNG key (None when greedy — the jitted fns then
+        trace a single keyless signature)."""
+        if self.greedy:
+            return None
+        key = jax.random.fold_in(self._key_base, self._step_idx)
+        self._step_idx += 1
+        return key
 
     # -- cache row insertion ------------------------------------------------
     def _make_insert(self):
@@ -214,27 +379,40 @@ class ServeEngine:
                                        tokens=tokens)
         return contextlib.nullcontext()
 
-    def _request_ctx(self, rid: int, tokens: int):
+    def _request_ctx(self, rid: int, tokens: int,
+                     phase: Optional[str] = None):
         if self.monitor is not None:
             return self.monitor.measure_request(rid, tokens=tokens,
-                                                blocking=False)
+                                                blocking=False, phase=phase)
         if self.session is not None:
-            return self.session.region(f"serve/req{rid}", tokens=tokens,
-                                       nested=False)
+            label = f"serve/req{rid}" + (f"/{phase}" if phase else "")
+            return self.session.region(label, tokens=tokens, nested=False)
         return contextlib.nullcontext()
 
     # -- public API ----------------------------------------------------------
     def generate(self, requests: List[Request]) -> List[Request]:
         """Serve ``requests``; returns them in input order, ``out`` filled."""
+        chunk = self.prefill_chunk if self.mode == "continuous" else 0
         for r in requests:
-            need = prompt_bucket(len(r.prompt), self.min_prompt_bucket) \
-                + r.max_new_tokens
             if r.max_new_tokens < 1:
                 raise ValueError("max_new_tokens must be >= 1")
-            if need > self.max_len + 1:
-                raise ValueError(
-                    f"request needs {need} cache slots (bucketed prompt + "
-                    f"max_new_tokens) but max_len is {self.max_len}")
+            plen = len(r.prompt)
+            if chunk:
+                padded = math.ceil(plen / chunk) * chunk
+                if padded > self.max_len \
+                        or plen + r.max_new_tokens > self.max_len + 1:
+                    raise ValueError(
+                        f"request needs {max(padded, plen + r.max_new_tokens - 1)} "
+                        f"cache slots (chunk-padded prompt / prompt + "
+                        f"max_new_tokens) but max_len is {self.max_len}")
+            else:
+                need = prompt_bucket(plen, self.min_prompt_bucket) \
+                    + r.max_new_tokens
+                if need > self.max_len + 1:
+                    raise ValueError(
+                        f"request needs {need} cache slots (bucketed prompt "
+                        f"+ max_new_tokens) but max_len is {self.max_len}")
+        self.stall_events = []
         if self.mode == "wave":
             done: List[Request] = []
             for i in range(0, len(requests), self.batch):
@@ -244,8 +422,15 @@ class ServeEngine:
         return self._run_continuous(requests)
 
     # -- continuous batching --------------------------------------------------
+    def _admit(self, r: Request) -> Request:
+        r.id = self._request_count
+        self._request_count += 1
+        r.out = []
+        return r
+
     def _prefill_request(self, r: Request) -> Tuple[np.ndarray, Any, int]:
-        """Single-request prefill at the prompt's bucket size.
+        """Blocking whole-prompt prefill at the prompt's bucket size
+        (the ``prefill_chunk=0`` baseline).
 
         Returns (first generated token (1,) np.int32, cache row tree
         with batch size 1, next position == bucket size).  Blocking on
@@ -259,94 +444,188 @@ class ServeEngine:
         if self.cfg.is_encoder_decoder:
             batch["frame_embeds"] = jnp.zeros(
                 (1, self.cfg.enc_len, self.cfg.d_model), jnp.bfloat16)
-        first, row = self._prefill(self.params, batch)
+        first, row = self._prefill(self.params, batch, self._next_key())
         return np.asarray(first), row, bucket
+
+    def _start_chunked_prefill(self, r: Request, j: int) -> _Prefill:
+        plen = len(r.prompt)
+        chunk = self.prefill_chunk
+        padded = math.ceil(plen / chunk) * chunk
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, :plen] = r.prompt                   # right-pad final chunk
+        caches = model_mod.init_caches(self.cfg, 1, self.max_len,
+                                       dtype=self.cache_dtype)
+        return _Prefill(req=r, slot=j, caches=caches, toks=toks, plen=plen)
+
+    def _step_chunked_prefill(self, st: _Prefill, decode_live: bool
+                              ) -> Optional[np.ndarray]:
+        """Run one chunk; returns the first generated token (1,) when
+        this was the final chunk, else None.  Fenced (the chunk's token
+        read blocks), so the prefill phase span and the stall sample
+        both cover real device work."""
+        chunk = self.prefill_chunk
+        t0 = time.perf_counter()
+        last_idx = min(st.plen - 1 - st.offset, chunk - 1)
+        tok, st.caches = self._prefill_chunk_fn(
+            self.params, st.caches,
+            jnp.asarray(st.toks[:, st.offset:st.offset + chunk]),
+            jnp.asarray(st.offset, jnp.int32),
+            jnp.asarray(last_idx, jnp.int32), self._next_key())
+        tok = np.asarray(tok)                       # fence the chunk
+        if decode_live:
+            self.stall_events.append(time.perf_counter() - t0)
+        st.offset += chunk
+        return tok if st.offset >= st.toks.shape[1] else None
 
     def _run_continuous(self, requests: List[Request]) -> List[Request]:
         b = self.batch
+        chunk = self.prefill_chunk
         queue = list(requests)
         qi = 0                                   # admission cursor
-        caches = model_mod.init_caches(self.cfg, b, self.max_len)
+        caches = model_mod.init_caches(self.cfg, b, self.max_len,
+                                       dtype=self.cache_dtype)
         tokens = np.zeros((b, 1), np.int32)
         pos = np.zeros((b,), np.int32)
         active: List[Optional[Request]] = [None] * b
         remaining = [0] * b
-        ctxs: List[Any] = [None] * b
+        req_ctxs: List[Any] = [None] * b
+        pf_ctxs: List[Any] = [None] * b
+        dec_ctxs: List[Any] = [None] * b
+        prefills: Deque[_Prefill] = collections.deque()
+        reserved = [False] * b                   # slot held by a prefill
         total_tokens = sum(r.max_new_tokens for r in requests)
         agg_id = self._batch_count
         self._batch_count += 1
 
+        def open_ctx(rid, tokens_, phase=None):
+            ctx = self._request_ctx(rid, tokens=tokens_, phase=phase)
+            ctx.__enter__()
+            return ctx
+
+        def close_ctx(ctx):
+            if ctx is not None:
+                ctx.__exit__(None, None, None)
+
+        def activate(j, r, row, first, next_pos):
+            """Request r finished prefill: its row is live in slot j.
+
+            The decode phase span opens before the row insert so the
+            prefill/decode spans tile the request span — the insert
+            dispatch belongs to serving this request's decode."""
+            dec_ctxs[j] = open_ctx(r.id, r.max_new_tokens, phase="decode")
+            caches_j = self._insert(caches, row, j)
+            tokens[j, 0] = first[0]
+            pos[j] = next_pos
+            remaining[j] = r.max_new_tokens - 1
+            active[j] = r
+            r.out.append(int(first[0]))
+            if remaining[j] == 0:
+                retire(j)
+            return caches_j
+
         def retire(j: int) -> None:
             # The caller already fenced this slot's last token (np reads
-            # block), so closing the span here attributes correctly.
-            ctxs[j].__exit__(None, None, None)
-            ctxs[j] = None
+            # block), so closing the spans here attributes correctly.
+            close_ctx(dec_ctxs[j])
+            dec_ctxs[j] = None
+            close_ctx(req_ctxs[j])
+            req_ctxs[j] = None
             active[j] = None
 
         with self._measure_ctx(agg_id, tokens=total_tokens):
             try:
-                while qi < len(queue) or any(r is not None for r in active):
+                while qi < len(queue) or prefills \
+                        or any(r is not None for r in active):
                     # slot-granular admission: every free slot refills
-                    # now instead of waiting for the batch to drain.
+                    # now (blocking) or enters the chunk queue (chunked)
+                    # instead of waiting for the batch to drain.
                     for j in range(b):
-                        if active[j] is not None or qi >= len(queue):
+                        if active[j] is not None or reserved[j] \
+                                or qi >= len(queue):
                             continue
-                        r = queue[qi]
+                        r = self._admit(queue[qi])
                         qi += 1
-                        r.id = self._request_count
-                        self._request_count += 1
-                        r.out = []
-                        ctx = self._request_ctx(r.id,
-                                                tokens=r.max_new_tokens)
-                        ctx.__enter__()
-                        ctxs[j] = ctx
-                        active[j] = r
+                        req_ctxs[j] = open_ctx(r.id, r.max_new_tokens)
+                        pf_ctxs[j] = open_ctx(r.id, len(r.prompt),
+                                              phase="prefill")
+                        if chunk:
+                            reserved[j] = True
+                            prefills.append(
+                                self._start_chunked_prefill(r, j))
+                            continue
+                        # blocking bucketed baseline: whole prompt now
+                        t0 = time.perf_counter()
                         first, row, bucket = self._prefill_request(r)
-                        caches = self._insert(caches, row, j)
-                        tokens[j, 0] = first[0]
-                        pos[j] = bucket
-                        remaining[j] = r.max_new_tokens - 1
-                        r.out.append(int(first[0]))
-                        if remaining[j] == 0:
-                            retire(j)
+                        if any(a is not None for a in active):
+                            self.stall_events.append(
+                                time.perf_counter() - t0)
+                        close_ctx(pf_ctxs[j])
+                        pf_ctxs[j] = None
+                        caches = activate(j, r, row, first, bucket)
+
+                    # one prefill chunk interleaves with each decode
+                    # step; with no live decode rows the chunk queue
+                    # drains back-to-back.
+                    if prefills:
+                        st = prefills[0]
+                        decode_live = any(a is not None for a in active)
+                        first = self._step_chunked_prefill(st, decode_live)
+                        if first is not None:
+                            prefills.popleft()
+                            reserved[st.slot] = False
+                            close_ctx(pf_ctxs[st.slot])
+                            pf_ctxs[st.slot] = None
+                            caches = activate(st.slot, st.req, st.caches,
+                                              first, st.plen)
+
                     live = [j for j in range(b) if active[j] is not None]
                     if not live:
                         continue          # everything retired at prefill
                     # Retirement is deterministic (exactly max_new_tokens
-                    # per request), so decode runs device-side until the
-                    # *next* slot retires — one host sync per retirement
-                    # event, not per token.  Inactive rows decode garbage
-                    # into their own (dead, about-to-be-overwritten)
-                    # cache rows only.
-                    steps = min(remaining[j] for j in live)
+                    # per request), so with no admission work pending
+                    # decode runs device-side until the *next* slot
+                    # retires — one host sync per retirement event, not
+                    # per token.  While prefill chunks are pending,
+                    # decode advances one step per chunk (the
+                    # interleave).  Inactive rows decode garbage into
+                    # their own (dead, about-to-be-overwritten) cache
+                    # rows only.
+                    steps = 1 if prefills else min(remaining[j]
+                                                   for j in live)
                     tok_dev = jnp.asarray(tokens)
                     pos_dev = jnp.asarray(pos)
                     outs = []
                     for _ in range(steps):
-                        tok_dev, caches = self._decode(self.params, caches,
-                                                       tok_dev, pos_dev)
+                        tok_dev, caches = self._decode(
+                            self.params, caches, tok_dev, pos_dev,
+                            self._next_key())
                         outs.append(tok_dev)
                         pos_dev = pos_dev + 1
-                    chunk = np.asarray(jnp.concatenate(outs, axis=1))
+                    gen = np.asarray(jnp.concatenate(outs, axis=1))
                     # np read blocked: every token in the chunk is
                     # computed, so spans closed below are correctly
                     # fenced.
                     for j in live:
                         r = active[j]
-                        r.out.extend(chunk[j].tolist())
-                        tokens[j, 0] = chunk[j, -1]
+                        r.out.extend(gen[j].tolist())
+                        tokens[j, 0] = gen[j, -1]
                         pos[j] += steps
                         remaining[j] -= steps
                         if remaining[j] == 0:
                             retire(j)
             finally:
-                # An exception mid-loop (prefill OOM, interrupt) must not
-                # leak open request spans — they hold ring-sampler pins
-                # on the shared session for its whole lifetime.
+                # An exception mid-loop (a prefill OOM — whole-prompt or
+                # chunk — or an interrupt) must not leak open
+                # request/phase spans: they hold ring-sampler pins on
+                # the shared session for its whole lifetime.
+                prefills.clear()
                 for j in range(b):
-                    if ctxs[j] is not None:
-                        ctxs[j].__exit__(None, None, None)
-                        ctxs[j] = None
+                    close_ctx(pf_ctxs[j])
+                    pf_ctxs[j] = None
+                    close_ctx(dec_ctxs[j])
+                    dec_ctxs[j] = None
+                    close_ctx(req_ctxs[j])
+                    req_ctxs[j] = None
         return requests
 
     # -- synchronized waves (baseline) ---------------------------------------
@@ -379,13 +658,15 @@ class ServeEngine:
         wave_id = self._batch_count
         self._batch_count += 1
         with self._measure_ctx(wave_id, tokens=gen_tokens):
-            nxt, caches = self._prefill(self.params, batch)
+            nxt, caches = self._prefill(self.params, batch,
+                                        self._next_key())
             nxt = nxt[:, None]
             cur = plen
             outs = [nxt]
             for _ in range(steps - 1):
                 nxt, caches = self._decode(self.params, caches, nxt,
-                                           jnp.asarray(cur, jnp.int32))
+                                           jnp.asarray(cur, jnp.int32),
+                                           self._next_key())
                 outs.append(nxt)
                 cur += 1
             gen = jax.block_until_ready(jnp.concatenate(outs, axis=1))

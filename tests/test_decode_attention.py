@@ -163,14 +163,14 @@ def test_decode_impl_flash_matches_dense(arch):
     params, _ = M.init_params(rng(0), cfg)
     b, t = 2, 12
     tokens = jax.random.randint(rng(1), (b, t), 0, cfg.vocab_size)
-    prefill, _ = M.make_serve_fns(cfg)
+    prefill = M.make_serve_fns(cfg).prefill
     _, caches = jax.jit(lambda p, bt: prefill(p, bt, t + 4))(
         params, {"tokens": tokens[:, :t - 1]})
     nxt = tokens[:, t - 1:t]
     logits = {}
     for impl in ("dense", "flash"):
         cfg_i = dataclasses.replace(cfg, decode_attn_impl=impl)
-        _, decode = M.make_serve_fns(cfg_i)
+        decode = M.make_serve_fns(cfg_i).decode
         l_s, _ = jax.jit(decode)(params, caches, nxt,
                                  jnp.asarray(t - 1, jnp.int32))
         l_v, _ = jax.jit(decode)(params, caches, nxt,
@@ -189,7 +189,7 @@ def test_decode_impl_flash_ring_long_decode():
     params, _ = M.init_params(rng(0), cfg)
     n = cfg.sliding_window * 2
     tokens = jax.random.randint(rng(2), (1, n), 0, cfg.vocab_size)
-    prefill, _ = M.make_serve_fns(cfg)
+    prefill = M.make_serve_fns(cfg).prefill
     _, caches = jax.jit(lambda p, bt: prefill(p, bt, n + 8))(
         params, {"tokens": tokens[:, :8]})
     caches_d = jax.tree.map(lambda x: x, caches)

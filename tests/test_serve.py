@@ -54,7 +54,7 @@ def test_decode_matches_forward(arch):
         cfg, params["embed"], hidden[:, -1:])[:, 0]
 
     # prefill T-1 tokens, then decode token T-1
-    prefill, decode = M.make_serve_fns(cfg)
+    prefill, decode, _ = M.make_serve_fns(cfg)
     pf_batch = make_batch(cfg, tokens[:, :T - 1])
     _, caches = jax.jit(lambda p, b: prefill(p, b, T + 4))(params, pf_batch)
     step_logits, _ = jax.jit(decode)(params, caches, tokens[:, T - 1:T],
@@ -76,7 +76,7 @@ def test_sliding_window_ring_cache_long_decode():
     n = cfg.sliding_window * 2  # decode well past the ring size
     tokens = jax.random.randint(jax.random.PRNGKey(2), (1, n), 0,
                                 cfg.vocab_size)
-    prefill, decode = M.make_serve_fns(cfg)
+    prefill, decode, _ = M.make_serve_fns(cfg)
     _, caches = jax.jit(lambda p, b: prefill(p, b, n + 8))(
         params, {"tokens": tokens[:, :8]})
     dec = jax.jit(decode)

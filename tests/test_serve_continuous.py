@@ -73,18 +73,37 @@ def test_slot_refill_leaks_no_kv(smollm):
 
 
 def test_decode_never_recompiles_across_mixes(smollm):
+    """Chunked admission (the default): decode AND prefill each compile
+    exactly once, no matter what prompt lengths arrive — the bucket
+    family is gone."""
     cfg, params = smollm
     eng = ServeEngine(cfg, params, batch_size=2, max_len=64)
     eng.generate(mk(MIXED[:3]))
+    assert eng.compile_counts == {"prefill": 0, "decode": 1,
+                                  "prefill_chunk": 1}
+    # different prompt lengths (crossing what used to be bucket
+    # boundaries), different generation lengths, different request count
+    eng.generate(mk([([5, 4, 3, 2], 6), ([1], 9), ([8, 8, 8, 8, 8, 8], 2),
+                     ([2, 3], 4), (list(range(1, 17)), 2)]))
+    assert eng.compile_counts == {"prefill": 0, "decode": 1,
+                                  "prefill_chunk": 1}
+
+
+def test_blocking_baseline_compiles_once_per_bucket(smollm):
+    """The prefill_chunk=0 baseline keeps the old bucketed-jit-cache
+    property: one blocking prefill compile per power-of-two bucket."""
+    cfg, params = smollm
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                      prefill_chunk=0)
+    eng.generate(mk(MIXED[:3]))
     decode_compiles = eng.compile_counts["decode"]
     prefill_compiles = eng.compile_counts["prefill"]
-    # different prompt lengths within the same buckets, different
-    # generation lengths, different request count
     eng.generate(mk([([5, 4, 3, 2], 6), ([1], 9), ([8, 8, 8, 8, 8, 8], 2),
                      ([2, 3], 4)]))
     assert eng.compile_counts["decode"] == decode_compiles == 1
     assert eng.compile_counts["prefill"] == prefill_compiles
-    # a new bucket compiles prefill exactly once more
+    assert eng.compile_counts["prefill_chunk"] == 0
+    # a new bucket compiles blocking prefill exactly once more
     eng.generate(mk([(list(range(1, 17)), 2)]))
     assert eng.compile_counts["prefill"] == prefill_compiles + 1
     assert eng.compile_counts["decode"] == 1
@@ -103,10 +122,18 @@ def test_prompt_bucketing():
 def test_request_validation(smollm):
     cfg, params = smollm
     eng = ServeEngine(cfg, params, batch_size=1, max_len=16)
+    # chunked admission fits what bucketing couldn't: 9 prompt tokens
+    # pad to 16 (one whole-cache chunk), and 9 + 2 decode slots <= 17
+    assert [len(r.out) for r in eng.generate(mk([([1] * 9, 2)]))] == [2]
     with pytest.raises(ValueError, match="cache slots"):
-        eng.generate(mk([([1] * 9, 2)]))      # bucket 16 + 2 > 17
+        eng.generate(mk([([1] * 15, 3)]))     # 15 + 3 > 17 decode slots
     with pytest.raises(ValueError, match="max_new_tokens"):
         eng.generate(mk([([1], 0)]))
+    # the blocking baseline keeps the bucket-based capacity check
+    eng0 = ServeEngine(cfg, params, batch_size=1, max_len=16,
+                       prefill_chunk=0)
+    with pytest.raises(ValueError, match="cache slots"):
+        eng0.generate(mk([([1] * 9, 2)]))     # bucket 16 + 2 > 17
 
 
 def test_wave_region_counts_generated_tokens(smollm):
@@ -134,15 +161,29 @@ def test_per_request_spans_sum_to_aggregate(smollm):
         eng.generate(reqs)
         sess.flush()
         agg = [r for r in mem.records if r.path.startswith("serve/batch")]
-        per_req = [r for r in mem.records if r.path.startswith("serve/req")]
+        per_req = [r for r in mem.records
+                   if r.path.startswith("serve/req")
+                   and "/" not in r.path.replace("serve/", "")]
+        phases = [r for r in mem.records
+                  if r.path.startswith("serve/req")
+                  and "/" in r.path.replace("serve/", "")]
         assert [r.tokens for r in agg] == [total]
         assert len(per_req) == len(reqs)
         assert sum(r.tokens for r in per_req) == total
+        # every request gets exactly one prefill + one decode phase
+        # span, tiling its request span (dummy backend: constant watts,
+        # so the J split must sum to the request total up to the tiny
+        # uncovered instants between back-to-back clock reads)
+        for r in per_req:
+            mine = [p for p in phases if p.path.startswith(r.path + "/")]
+            assert sorted(p.path.rsplit("/", 1)[1] for p in mine) == \
+                ["decode", "prefill"]
+            split = sum(p.joules for p in mine)
+            assert split == pytest.approx(r.joules, rel=0.05, abs=1e-3)
         # flat spans: no nesting path pollution, every span resolves
-        assert all(r.depth == 0 and "/" not in r.path.replace("serve/", "")
-                   for r in per_req)
+        assert all(r.depth == 0 for r in per_req + phases)
         assert all(r.seconds >= 0 and np.isfinite(r.joules)
-                   for r in per_req)
+                   for r in per_req + phases)
         assert sess.stats()["pending"] == 0
 
 
@@ -176,7 +217,7 @@ def test_vector_positions_match_scalar(smollm):
     B, T = 2, 12
     tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
                                 cfg.vocab_size)
-    prefill, decode = M.make_serve_fns(cfg)
+    prefill, decode, _ = M.make_serve_fns(cfg)
     _, caches = jax.jit(lambda p, b: prefill(p, b, T + 4))(
         params, {"tokens": tokens[:, :T - 1]})
     nxt = tokens[:, T - 1:T]
