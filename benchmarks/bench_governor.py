@@ -1,0 +1,278 @@
+"""Power-capped serving A/B — uncapped vs governed under a watts budget.
+
+The serve engine measures per-request J/token; the ``PowerGovernor``
+closes the loop: it reads smoothed window power from a
+``PowerRecorder`` and holds the engine under a watts cap by gating
+admission, pacing prefill chunks, and (last resort) duty-cycling
+decode.  This benchmark drives the whole control loop on the dummy
+backend with a **load-coupled power model**: the sensor's waveform
+reads the engine's live ``live_slots`` gauge —
+
+    watts(t) = idle_w + slot_w * engine.live_slots
+
+— so power genuinely responds to scheduling decisions, the thing a
+constant waveform cannot do.  Full batch draws
+``idle_w + slot_w * batch`` watts; the cap is set between the 2-slot
+and 3-slot levels, so holding it *requires* the governor to keep
+concurrency at 2.
+
+Three runs of the same workload through the same engine:
+  * ``baseline``  — no governor attached;
+  * ``uncapped``  — governor attached with ``cap_watts=None`` (pure
+    observer: measures control-plane overhead);
+  * ``capped``    — governor with the cap.
+
+Pass criteria (written into BENCH_governor.json, validated by CI via
+benchmarks/validate_bench.py):
+  * cap held: every sliding-window mean (governor window) after the
+    ramp-in stays ``<= cap * 1.05``, while uncapped power demonstrably
+    exceeds the cap (else the cap constrained nothing);
+  * liveness: the capped run completes every request in full
+    (tokens == baseline tokens — throttling defers work, never drops
+    it) and tokens/s degrades gracefully (>= 0.25x baseline, not a
+    collapse);
+  * no observer overhead: uncapped-governed J/token within 15% of
+    baseline;
+  * the governor actually acted: >= 1 throttle decision in the capped
+    run, 0 in the uncapped run.
+
+Usage: PYTHONPATH=src python benchmarks/bench_governor.py \
+           [--smoke] [--json-out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as pmt
+from repro import configs
+from repro.core.backends.dummy import DummySensor
+from repro.models import model as model_mod
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.governor import PowerGovernor
+from repro.telemetry import PowerRecorder
+
+SCHEMA_VERSION = 1
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_JSON = os.path.join(_REPO_ROOT, "BENCH_governor.json")
+
+IDLE_W = 50.0
+SLOT_W = 15.0
+
+
+def make_workload(n_requests: int, plen_lo: int, plen_hi: int,
+                  max_new_lo: int, max_new_hi: int, vocab: int,
+                  seed: int = 0):
+    """Decode-heavy mix — long generations give the governor a long
+    steady-state window to hold the cap over."""
+    rng = np.random.default_rng(seed)
+    return [Request(
+        prompt=rng.integers(0, vocab,
+                            size=int(rng.integers(plen_lo,
+                                                  plen_hi + 1))).tolist(),
+        max_new_tokens=int(rng.integers(max_new_lo, max_new_hi + 1)))
+        for _ in range(n_requests)]
+
+
+def window_max_watts(series, window_s: float, ramp_s: float):
+    """Max sliding-window mean over the post-ramp tail of a
+    ``[[t, w], ...]`` power series (the cap-hold metric: the governor
+    promises *smoothed* power under the cap, not every raw sample)."""
+    if not series:
+        return 0.0
+    # Skip the ramp-in, but never the whole series (a short smoke run
+    # must still yield a peak): fall back to the trailing half.
+    t_start = min(series[0][0] + ramp_s,
+                  series[0][0] + 0.5 * (series[-1][0] - series[0][0]))
+    worst = 0.0
+    for i, (t_i, _w) in enumerate(series):
+        if t_i < t_start:
+            continue
+        win = [w for t, w in series[max(0, i - 512):i + 1]
+               if t >= t_i - window_s]
+        if win:
+            worst = max(worst, sum(win) / len(win))
+    return worst
+
+
+def run_mode(cfg, params, workload, mode: str, cap: float, batch: int,
+             max_len: int, chunk: int, window_s: float):
+    """One serve run on a private session whose dummy sensor's power
+    tracks the engine's live-slot gauge."""
+    eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                      session=None, prefill_chunk=chunk,
+                      cache_dtype=jnp.float32)
+    eng.generate([Request(prompt=[1] * (chunk + 1), max_new_tokens=2)])
+
+    # Load-coupled model: the waveform closure reads the engine gauge at
+    # sampler-tick time, so admissions/retirements show up in the power
+    # trace within one sampling period.
+    sensor = DummySensor(watts_fn=lambda t: IDLE_W + SLOT_W * eng.live_slots)
+    with pmt.Session([sensor], pool=pmt.SensorPool(),
+                     period_s=0.002) as sess:
+        mem = sess.add_exporter(pmt.MemoryExporter())
+        with PowerRecorder(poll_period_s=0.01).attach(
+                sess, exporter=mem) as rec:
+            gov = None
+            if mode != "baseline":
+                gov = PowerGovernor(
+                    rec, cap_watts=(cap if mode == "capped" else None),
+                    window_s=window_s)
+            eng.session = sess
+            eng.governor = gov
+            reqs = [dataclasses.replace(r) for r in workload]
+            t0 = time.perf_counter()
+            done = eng.generate(reqs)
+            seconds = time.perf_counter() - t0
+            eng.session = None
+            eng.governor = None
+            sess.flush()
+            rec.poll_once()      # final sampler tail into the timeline
+
+            tokens = sum(len(r.out) for r in done)
+            complete = all(len(r.out) == r.max_new_tokens for r in done)
+            series = rec.watts_series("dummy").get("dummy", [])
+            agg = [r for r in mem.records
+                   if r.path.startswith("serve/batch")]
+            gov_stats = gov.stats() if gov is not None else None
+            if gov is not None:
+                gov.close()
+    joules = sum(r.joules for r in agg)
+    return {
+        "mode": mode,
+        "cap_watts": cap if mode == "capped" else None,
+        "seconds": seconds,
+        "tokens": tokens,
+        "all_requests_complete": bool(complete),
+        "tokens_per_s": tokens / max(seconds, 1e-9),
+        "joules": joules,
+        "j_per_token": joules / max(tokens, 1),
+        "watts_samples": len(series),
+        "peak_window_watts": window_max_watts(series, window_s,
+                                              ramp_s=2 * window_s),
+        "governor": gov_stats,
+    }
+
+
+def main(smoke=False, json_out=DEFAULT_JSON):
+    # Bench-scaled config (see bench_prefill.py for the sizing
+    # rationale); decode-heavy workload so the run spends most of its
+    # wall clock in the steady state the cap-hold gate inspects.
+    cfg = dataclasses.replace(
+        configs.get_config("smollm-135m", reduced=True), dtype="float32",
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, d_ff=1024,
+        vocab_size=1024, attn_chunk=128)
+    params, _ = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    chunk = 32
+    batch = 4
+    window_s = 0.1
+    n_requests = 4 if smoke else 8
+    plen_lo, plen_hi = 33, 64
+    max_new_lo, max_new_hi = (16, 24) if smoke else (24, 48)
+    # Cap between the 2-slot (80 W) and 3-slot (95 W) load levels:
+    # holding it forces concurrency 2, full batch would draw 110 W.
+    cap = IDLE_W + 2.5 * SLOT_W
+    workload = make_workload(n_requests, plen_lo, plen_hi, max_new_lo,
+                             max_new_hi, cfg.vocab_size)
+    padded_hi = -(-plen_hi // chunk) * chunk
+    max_len = padded_hi + max_new_hi
+
+    runs = {m: run_mode(cfg, params, workload, m, cap, batch, max_len,
+                        chunk, window_s)
+            for m in ("baseline", "uncapped", "capped")}
+    baseline, uncapped, capped = (runs[m] for m in
+                                  ("baseline", "uncapped", "capped"))
+
+    cap_tol = cap * 1.05
+    cap_held = capped["peak_window_watts"] <= cap_tol
+    cap_binding = uncapped["peak_window_watts"] > cap_tol
+    liveness = (capped["all_requests_complete"]
+                and capped["tokens"] == baseline["tokens"]
+                and capped["tokens_per_s"]
+                >= 0.25 * baseline["tokens_per_s"])
+    overhead_ok = uncapped["j_per_token"] \
+        <= 1.15 * baseline["j_per_token"]
+    acted = (capped["governor"]["throttle_decisions"] >= 1
+             and uncapped["governor"]["throttle_decisions"] == 0)
+    target_met = bool(cap_held and cap_binding and liveness
+                      and overhead_ok and acted)
+
+    print("# power-capped serving A/B (load-coupled dummy: "
+          f"{IDLE_W:.0f} W idle + {SLOT_W:.0f} W/slot, cap {cap:.0f} W)")
+    print(f"{'mode':10s} {'tok/s':>8s} {'J/token':>9s} {'seconds':>8s} "
+          f"{'peakW(win)':>11s} {'throttles':>9s}")
+    for d in runs.values():
+        g = d["governor"]
+        print(f"{d['mode']:10s} {d['tokens_per_s']:8.1f} "
+              f"{d['j_per_token']:9.4f} {d['seconds']:8.3f} "
+              f"{d['peak_window_watts']:11.1f} "
+              f"{g['throttle_decisions'] if g else '-':>9}")
+    print(f"# cap held: peak window {capped['peak_window_watts']:.1f} W "
+          f"<= {cap_tol:.1f} W ({'PASS' if cap_held else 'FAIL'}); "
+          f"binding: uncapped peak {uncapped['peak_window_watts']:.1f} W "
+          f"({'yes' if cap_binding else 'NO'})")
+    print(f"# liveness: complete={capped['all_requests_complete']} "
+          f"tokens {capped['tokens']}/{baseline['tokens']}, "
+          f"{capped['tokens_per_s'] / max(baseline['tokens_per_s'], 1e-9):.2f}x "
+          f"baseline tokens/s ({'PASS' if liveness else 'FAIL'}); "
+          f"observer overhead "
+          f"{uncapped['j_per_token'] / max(baseline['j_per_token'], 1e-12):.3f}x "
+          f"J/token ({'OK' if overhead_ok else 'FAIL'})")
+    print(f"# capped-run throttle actions: "
+          f"{capped['governor']['throttle_actions']} "
+          f"({'PASS' if acted else 'FAIL'}); overall "
+          f"{'PASS' if target_met else 'FAIL'}")
+
+    if json_out:
+        payload = {
+            "bench": "pmt_governor",
+            "schema_version": SCHEMA_VERSION,
+            "smoke": bool(smoke),
+            "workload": {
+                "arch": "smollm-135m (bench-scaled reduced cfg: 4L/d256, "
+                        "fp32)",
+                "backend": "dummy (load-coupled: idle + per-slot watts)",
+                "idle_watts": IDLE_W,
+                "slot_watts": SLOT_W,
+                "cap_watts": cap,
+                "window_s": window_s,
+                "n_requests": n_requests,
+                "batch": batch,
+                "max_len": max_len,
+                "prefill_chunk": chunk,
+                "prompt_lengths": [plen_lo, plen_hi],
+                "max_new_tokens": [max_new_lo, max_new_hi],
+            },
+            "baseline": baseline,
+            "uncapped": uncapped,
+            "capped": capped,
+            "cap_held": bool(cap_held),
+            "cap_binding": bool(cap_binding),
+            "liveness_ok": bool(liveness),
+            "observer_overhead_ok": bool(overhead_ok),
+            "governor_acted": bool(acted),
+            "target_met": target_met,
+        }
+        with open(json_out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_out}")
+    return target_met
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer/shorter requests)")
+    ap.add_argument("--json-out", default=DEFAULT_JSON,
+                    help="where to write BENCH_governor.json ('' disables)")
+    a = ap.parse_args()
+    ok = main(smoke=a.smoke, json_out=a.json_out)
+    raise SystemExit(0 if ok else 1)

@@ -93,11 +93,44 @@ def validate_prefill(d):
             f"{d['blocking']['p95_decode_stall_s'] * 1e3:.1f} ms")
 
 
+def validate_governor(d):
+    cap = d["workload"]["cap_watts"]
+    assert isinstance(cap, float) and cap > 0
+    for mode in ("baseline", "uncapped", "capped"):
+        _positive_float(d[mode], "tokens_per_s", "j_per_token", "seconds",
+                        "joules", "peak_window_watts", ctx=mode)
+        assert d[mode]["tokens"] > 0
+        assert d[mode]["all_requests_complete"] is True, mode
+        assert d[mode]["watts_samples"] > 0, mode
+    assert d["baseline"]["governor"] is None
+    assert d["uncapped"]["governor"]["cap_watts"] is None
+    assert d["uncapped"]["governor"]["throttle_decisions"] == 0
+    assert d["capped"]["governor"]["cap_watts"] == cap
+    assert d["capped"]["governor"]["throttle_decisions"] >= 1
+    # the headline gate: smoothed power stays under cap + 5% while the
+    # uncapped run proves the cap was actually binding
+    assert d["capped"]["peak_window_watts"] <= cap * 1.05, \
+        (d["capped"]["peak_window_watts"], cap)
+    assert d["uncapped"]["peak_window_watts"] > cap * 1.05
+    assert d["cap_held"] is True
+    assert d["cap_binding"] is True
+    assert d["liveness_ok"] is True
+    assert d["observer_overhead_ok"] is True
+    assert d["governor_acted"] is True
+    assert d["target_met"] is True, "governor did not hold the cap"
+    return (f"cap {cap:.0f} W held: capped peak "
+            f"{d['capped']['peak_window_watts']:.1f} W vs uncapped "
+            f"{d['uncapped']['peak_window_watts']:.1f} W, "
+            f"{d['capped']['tokens_per_s'] / d['baseline']['tokens_per_s']:.2f}x "
+            f"baseline tokens/s, all requests complete")
+
+
 VALIDATORS = {
     "pmt_overhead": validate_overhead,
     "pmt_serve": validate_serve,
     "pmt_decode": validate_decode,
     "pmt_prefill": validate_prefill,
+    "pmt_governor": validate_governor,
 }
 
 

@@ -225,6 +225,68 @@ def serving_mode():
               f"shape each)")
 
 
+def telemetry_mode():
+    """Live telemetry & power capping: the energy *control* plane.
+
+    Everything above measures; this closes the loop.  Two pieces, both
+    stdlib-only:
+
+      * :class:`repro.telemetry.PowerRecorder` — subscribes to the
+        session's ``MemoryExporter`` (resolved records) and polls each
+        backend's ring sampler (watts timelines) into bounded in-memory
+        rings, without perturbing the measurement plane.
+        :class:`repro.telemetry.TelemetryServer` serves it over plain
+        HTTP on an ephemeral (or fixed) port — ``/timeline`` (power
+        series), ``/requests`` (per-request prefill/decode joules, with
+        the raw records round-trippable via ``RegionRecord.from_json``),
+        ``/stats`` (engine counters), and ``/stream``, a live SSE feed
+        of every newly resolved record (``curl -N .../stream``).
+      * :class:`repro.serve.PowerGovernor` — a policy object the
+        ``ServeEngine`` consults at admission, chunk-drain, and decode
+        points.  It reads smoothed window power from the recorder and
+        holds the engine under a watts cap by (in escalating order)
+        gating/spacing admissions — with a *learned* per-admission
+        power step, so it blocks an admission whose settled load would
+        overshoot — pausing prefill chunks, and duty-cycling decode.
+        Per-tenant joules quotas deprioritize over-quota tenants at
+        admission without ever starving them.  Every throttle decision
+        is a ``serve/governor/<action>`` span in the same export
+        stream as the requests it shaped.
+
+    The launcher wires it all up: ``repro.launch.serve
+    --power-cap-watts 120 --telemetry-port 8321 --tenant-quota 50``.
+    benchmarks/bench_governor.py proves the loop on a load-coupled
+    dummy backend (watts tracks engine ``live_slots``): the cap holds
+    within 5% while every request completes (BENCH_governor.json).
+
+    Subscriber-exporter contract (see the Session docstring): exporter
+    and recorder callbacks run on the *resolving* thread and must not
+    block — the SSE fan-out uses bounded drop-oldest per-client queues
+    for exactly that reason.
+    """
+    from repro.serve.engine import Request, ServeEngine
+    from repro.telemetry import PowerRecorder, TelemetryServer
+    import json
+    import urllib.request
+
+    with pmt.Session(["dummy"]) as sess:
+        mem = sess.add_exporter(pmt.MemoryExporter())
+        with PowerRecorder().attach(sess, exporter=mem) as recorder:
+            with sess.region("warmup"):
+                time.sleep(0.05)
+            sess.flush()
+            recorder.poll_once()
+            with TelemetryServer(recorder) as srv:   # port=0: ephemeral
+                stats = json.loads(urllib.request.urlopen(
+                    srv.url + "/stats", timeout=5.0).read())
+                timeline = json.loads(urllib.request.urlopen(
+                    srv.url + "/timeline?window=5", timeout=5.0).read())
+                n = sum(len(s) for s in timeline["series"].values())
+                print(f"telemetry at {srv.url}: {stats['records']} records, "
+                      f"{n} watts samples, window mean "
+                      f"{timeline['window_mean_watts']:.1f} W")
+
+
 def dump_mode():
     """Dump mode: background thread writes a power timeline."""
     sensor = pmt.create("dummy", watts_fn=lambda t: 75.0 + 25.0 * (t % 0.1) / 0.1)
@@ -246,5 +308,7 @@ if __name__ == "__main__":
     listing2_decorators()
     print("\n== serving (continuous batching, per-request J/token)")
     serving_mode()
+    print("\n== live telemetry & power capping (the control plane)")
+    telemetry_mode()
     print("\n== dump mode")
     dump_mode()

@@ -24,6 +24,7 @@ import csv
 import dataclasses
 import json
 import threading
+import warnings
 from typing import Callable, List, Optional, TextIO
 
 
@@ -120,14 +121,30 @@ class JsonlExporter(Exporter):
                 self._f = None
 
 
-def read_jsonl(path: str) -> List[RegionRecord]:
-    """Parse a JSONL export back into records (skips blank lines)."""
+def read_jsonl(path: str, strict: bool = False) -> List[RegionRecord]:
+    """Parse a JSONL export back into records (skips blank lines).
+
+    A live export is appended to concurrently, so the file's last line
+    may be mid-write (truncated JSON) when a tailing reader — the
+    telemetry plane, a dashboard poller — gets to it.  Malformed lines
+    are therefore *skipped with a warning* rather than raised on;
+    ``strict=True`` restores the raising behaviour for post-hoc reads
+    where corruption should be loud.
+    """
     out: List[RegionRecord] = []
     with open(path) as f:
-        for line in f:
+        for lineno, line in enumerate(f, start=1):
             line = line.strip()
-            if line:
+            if not line:
+                continue
+            try:
                 out.append(RegionRecord.from_json(line))
+            except (json.JSONDecodeError, TypeError, KeyError) as e:
+                if strict:
+                    raise
+                warnings.warn(
+                    f"{path}:{lineno}: skipping unparseable JSONL line "
+                    f"({type(e).__name__}: {e}); truncated live export?")
     return out
 
 
@@ -137,6 +154,16 @@ class MemoryExporter(Exporter):
     Keeps every emitted record in ``records`` (bounded by ``maxlen``) and
     fans each one out to subscriber callbacks as it resolves — the seam a
     live dashboard or a per-request energy attributor hangs off.
+
+    Thread-safety contract: ``emit`` runs on whichever thread resolves a
+    span (usually the session's background resolver), concurrently with
+    ``subscribe``/``unsubscribe``/``records`` from e.g. a telemetry
+    server thread.  Callbacks are invoked *outside* the exporter lock
+    (a blocking callback can therefore stall record delivery but never
+    deadlock the exporter), against a snapshot of the subscriber list —
+    a subscriber removed mid-emit may see one final record.  A callback
+    that raises is warned about and dropped instead of killing the
+    resolver thread.
     """
 
     def __init__(self, maxlen: Optional[int] = None):
@@ -146,16 +173,27 @@ class MemoryExporter(Exporter):
         self._subs: List[Callable[[RegionRecord], None]] = []
 
     def subscribe(self, fn: Callable[[RegionRecord], None]) -> Callable[[], None]:
-        """Register ``fn`` for future records; returns an unsubscribe."""
+        """Register ``fn`` for future records; returns an unsubscribe.
+
+        ``fn`` runs on the resolving thread and must not block (see
+        class docstring); if it raises it is dropped with a warning.
+        """
         with self._lock:
             self._subs.append(fn)
 
         def unsubscribe() -> None:
-            with self._lock:
-                if fn in self._subs:
-                    self._subs.remove(fn)
+            self._drop(fn)
 
         return unsubscribe
+
+    def _drop(self, fn: Callable[[RegionRecord], None]) -> None:
+        with self._lock:
+            # identity, not equality: bound methods compare equal across
+            # instances, and a subscriber may be registered twice.
+            for i, sub in enumerate(self._subs):
+                if sub is fn:
+                    del self._subs[i]
+                    break
 
     def emit(self, r: RegionRecord) -> None:
         with self._lock:
@@ -164,7 +202,16 @@ class MemoryExporter(Exporter):
                 del self._records[:len(self._records) - self._maxlen]
             subs = list(self._subs)
         for fn in subs:
-            fn(r)
+            try:
+                fn(r)
+            except Exception as e:
+                # The emitting thread is usually the session's span
+                # resolver — one broken dashboard callback must not take
+                # the measurement plane down with it.
+                self._drop(fn)
+                warnings.warn(
+                    f"MemoryExporter subscriber {fn!r} raised "
+                    f"{type(e).__name__}: {e}; subscriber dropped")
 
     @property
     def records(self) -> List[RegionRecord]:

@@ -29,7 +29,8 @@ import contextlib
 import dataclasses
 import statistics
 import threading
-from typing import Dict, List, Optional, Sequence, TextIO, Union
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, TextIO, Union
 
 from repro.core.metrics import EfficiencyReport
 from repro.core.sensor import Sensor, SensorError
@@ -100,6 +101,7 @@ class PowerMonitor:
         self._records: List[StepEnergy] = []
         self._cumulative_joules = float(initial_joules)
         self._inflight: set = set()      # non-blocking boxes not yet settled
+        self._subs: List[Callable[[StepEnergy], None]] = []
         self._lock = threading.Lock()
         self._log: Optional[TextIO] = None
         if log_path:
@@ -110,6 +112,49 @@ class PowerMonitor:
     @property
     def session(self) -> Session:
         return self._session
+
+    # -- live record stream -------------------------------------------------
+    def subscribe(self, fn: Callable[[StepEnergy], None]):
+        """Register ``fn`` for every :class:`StepEnergy` as it settles
+        (step *and* request/phase records); returns an unsubscribe.
+
+        The callback runs on whichever thread resolves the span —
+        usually the session's background resolver — so it must not
+        block; if it raises it is dropped with a warning (mirroring the
+        :class:`~repro.core.export.MemoryExporter` subscriber contract).
+        The telemetry plane's :class:`~repro.telemetry.PowerRecorder`
+        hangs off this to stream per-step/per-request energy live.
+        """
+        with self._lock:
+            self._subs.append(fn)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                for i, sub in enumerate(self._subs):
+                    if sub is fn:
+                        del self._subs[i]
+                        break
+
+        return unsubscribe
+
+    def _fanout(self, recs: List[StepEnergy]) -> None:
+        """Deliver settled records to subscribers (no locks held)."""
+        with self._lock:
+            subs = list(self._subs)
+        for fn in subs:
+            for r in recs:
+                try:
+                    fn(r)
+                except Exception as e:
+                    with self._lock:
+                        for i, sub in enumerate(self._subs):
+                            if sub is fn:
+                                del self._subs[i]
+                                break
+                    warnings.warn(
+                        f"PowerMonitor subscriber {fn!r} raised "
+                        f"{type(e).__name__}: {e}; subscriber dropped")
+                    break
 
     # -- per-step measurement --------------------------------------------
     def measure_step(self, step: int, flops: Optional[float] = None,
@@ -186,6 +231,7 @@ class PowerMonitor:
                         self._write_log(r)
                 self._inflight.discard(box)
             box._records = recs
+            self._fanout(recs)
 
         handle = self._session.region(label, flops=flops, tokens=tokens,
                                       on_resolved=finish, nested=nested)

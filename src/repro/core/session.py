@@ -45,6 +45,17 @@ of silently under-reporting energy.
 
 Resolved regions flow to pluggable exporters (see repro.core.export).
 
+Subscriber-exporter contract: a :class:`~repro.core.export.MemoryExporter`
+subscriber callback (and a ``PowerMonitor.subscribe`` callback) is
+invoked on whichever thread resolves the span — normally the session's
+background resolver.  The callback **must not block**: while it runs, no
+further spans resolve and no other exporter receives records, so a slow
+callback back-pressures the whole measurement plane (the bounded span
+queue eventually drops the oldest spans from auto-resolution).  Hand the
+record to a queue and return — the telemetry server's SSE fan-out does
+exactly this.  A callback that raises is dropped with a warning rather
+than killing the resolver.
+
 The classic surfaces — ``@pmt.measure``, ``pmt.Region``, ``@pmt.dump``,
 ``pmt.PowerMonitor`` — are thin shims drawing their sensors from the
 process-wide :func:`default_pool`, so everything in one process shares
@@ -456,6 +467,22 @@ class Session:
     def sensors(self) -> List[Sensor]:
         with self._lock:
             return [lease.sensor for lease in self._leases.values()]
+
+    def samplers(self) -> List[Tuple[str, Any]]:
+        """``(backend name, ring sampler)`` per attached backend.
+
+        The read-only seam the telemetry plane taps for live power
+        timelines: a :class:`~repro.core.sampler.RingSampler`'s
+        ``timeline()``/``window_arrays()`` readers are seqlock-based and
+        never block the sampling thread, so a poller can copy watts
+        series as often as it likes without perturbing measurement.
+        Samplers are pool-owned; entries go stale once the session (or
+        the last sampling consumer) releases the backend.
+        """
+        with self._lock:
+            return [(lease.sensor.name, lease.sampler)
+                    for lease in self._leases.values()
+                    if lease.sampler is not None]
 
     def add_exporter(self, exporter: Exporter) -> Exporter:
         with self._lock:

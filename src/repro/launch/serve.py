@@ -1,9 +1,16 @@
 """Serving launcher: continuous-batching ServeEngine with PMT J/token
-accounting — aggregate and per-request.
+accounting — aggregate and per-request — plus the energy control plane:
+live HTTP/SSE telemetry and power-capped scheduling.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
       --reduced --requests 8 --max-new 16 [--mode wave]
+
+  # hold the run under 120 W and watch it live:
+  PYTHONPATH=src python -m repro.launch.serve --reduced \
+      --power-cap-watts 120 --telemetry-port 8321
+  curl -N http://127.0.0.1:8321/stream        # live SSE record feed
+  curl http://127.0.0.1:8321/timeline         # power series
 """
 from __future__ import annotations
 
@@ -16,6 +23,8 @@ import repro.core as pmt
 from repro import configs
 from repro.models import model as model_mod
 from repro.serve.engine import Request, ServeEngine, stall_p95
+from repro.serve.governor import PowerGovernor
+from repro.telemetry import PowerRecorder, TelemetryServer
 
 
 def main(argv=None):
@@ -41,6 +50,20 @@ def main(argv=None):
                          "blocking bucketed prefill baseline; default "
                          "resolves PMT_PREFILL_CHUNK then "
                          "cfg.prefill_chunk")
+    ap.add_argument("--power-cap-watts", type=float, default=None,
+                    help="hold measured window power under this budget "
+                         "via the PowerGovernor (admission gating, "
+                         "prefill-chunk pacing, decode duty-cycling); "
+                         "continuous mode only")
+    ap.add_argument("--tenant-quota", type=float, default=None,
+                    help="per-tenant joules quota: requests round-robin "
+                         "over synthetic tenants, and an over-quota "
+                         "tenant yields admission priority to in-quota "
+                         "ones (soft — never starved)")
+    ap.add_argument("--telemetry-port", type=int, default=None,
+                    help="serve live telemetry on this HTTP port "
+                         "(/timeline /requests /stats /stream SSE); "
+                         "0 = ephemeral (port printed at startup)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for decode; 0 (default) "
                          "= greedy argmax")
@@ -55,28 +78,51 @@ def main(argv=None):
     # thread never waits.
     session = pmt.Session(["cpuutil", "tpu"])
     energy = session.add_exporter(pmt.MemoryExporter())
+
+    # Control plane: recorder aggregates records + watts timelines; the
+    # governor (if capped) reads its smoothed window from it; the HTTP
+    # server (if requested) serves both live.
+    recorder = PowerRecorder().attach(session, exporter=energy)
+    governor = None
+    if (args.power_cap_watts is not None or args.tenant_quota is not None) \
+            and args.mode == "continuous":
+        governor = PowerGovernor(recorder,
+                                 cap_watts=args.power_cap_watts,
+                                 tenant_quota_j=args.tenant_quota)
+    server = None
+    if args.telemetry_port is not None:
+        server = TelemetryServer(recorder, port=args.telemetry_port).start()
+        print(f"telemetry: {server.url} "
+              f"(/timeline /requests /stats /stream)")
+
     engine = ServeEngine(cfg, params, batch_size=args.batch,
                          max_len=args.max_len, session=session,
                          mode=args.mode,
                          decode_attn_impl=args.decode_attn_impl,
                          prefill_chunk=args.prefill_chunk,
+                         governor=governor,
                          greedy=args.temperature <= 0.0,
                          temperature=args.temperature or 1.0,
                          seed=args.seed)
+    recorder.add_stats_provider(engine.stats)
 
     rng = np.random.default_rng(args.seed)
     # heterogeneous lengths: the workload continuous batching is for
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=rng.integers(2, 9)).tolist(),
-                    max_new_tokens=int(rng.integers(2, args.max_new + 1)))
-            for _ in range(args.requests)]
+                    max_new_tokens=int(rng.integers(2, args.max_new + 1)),
+                    tenant=(f"tenant{i % 2}" if args.tenant_quota is not None
+                            else None))
+            for i in range(args.requests)]
     done = engine.generate(reqs)
     n_tokens = sum(len(r.out) for r in done)
     for i, r in enumerate(done[:4]):
         print(f"req{i}: prompt={r.prompt} -> {r.out}")
     session.flush()              # settle any spans still in flight
+    recorder.poll_once()         # final watts tail into the timeline
     per_req = [r for r in energy.records if r.path.startswith("serve/req")]
-    agg = [r for r in energy.records if not r.path.startswith("serve/req")]
+    agg = [r for r in energy.records
+           if not r.path.startswith(("serve/req", "serve/governor"))]
     agg_j = sum(r.joules for r in agg)
     print(f"served {len(done)} requests, {n_tokens} tokens "
           f"[{args.mode}], {agg_j:.2f} J aggregate, "
@@ -102,12 +148,30 @@ def main(argv=None):
               f"{worst[1]['joules'] / max(worst[1]['tokens'], 1):.4f} J/token "
               f"({worst[1]['prefill']:.2f} J prefill / "
               f"{worst[1]['decode']:.2f} J decode)")
-    if engine.stall_events:
-        unit = "one chunk" if engine.prefill_chunk else "a whole prompt"
-        print(f"decode stalls: {len(engine.stall_events)} prefill "
-              f"dispatches while decoding, p95 "
-              f"{stall_p95(engine.stall_events) * 1e3:.2f} ms (each "
-              f"bounded by {unit})")
+
+    # end-of-run scheduler report: stalls, retraces, throttle decisions
+    st = engine.stats()
+    report = (f"scheduler: {st['stall_events']} decode stalls "
+              f"(p95 {st['stall_p95_s'] * 1e3:.2f} ms"
+              f"{', each bounded by one chunk' if engine.prefill_chunk else ''}"
+              f"), compiles {st['compile_counts']}")
+    if governor is not None:
+        g = st["governor"]
+        watts = recorder.mean_watts(governor.window_s)
+        report += (f"; governor: {g['throttle_decisions']} throttle "
+                   f"decisions {g['throttle_actions']}, "
+                   f"{g['pause_total_s'] * 1e3:.1f} ms paused, "
+                   f"window {watts if watts is None else round(watts, 1)} W "
+                   f"vs cap {g['cap_watts']} W")
+        if g["tenant_joules"]:
+            report += f", tenant J {g['tenant_joules']}"
+    print(report)
+
+    if server is not None:
+        server.close()
+    if governor is not None:
+        governor.close()
+    recorder.close()
     session.close()
 
 

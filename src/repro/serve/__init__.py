@@ -1,7 +1,9 @@
 from repro.serve.engine import (Request, ServeEngine, make_decode_fn,
                                 make_prefill_chunk_fn, make_prefill_fn,
-                                prompt_bucket, resolve_prefill_chunk)
+                                prompt_bucket, resolve_prefill_chunk,
+                                stall_p95)
+from repro.serve.governor import PowerGovernor, ThrottleDecision
 
-__all__ = ["Request", "ServeEngine", "make_prefill_fn",
-           "make_prefill_chunk_fn", "make_decode_fn", "prompt_bucket",
-           "resolve_prefill_chunk"]
+__all__ = ["Request", "ServeEngine", "PowerGovernor", "ThrottleDecision",
+           "make_prefill_fn", "make_prefill_chunk_fn", "make_decode_fn",
+           "prompt_bucket", "resolve_prefill_chunk", "stall_p95"]

@@ -191,6 +191,7 @@ class Request:
     max_new_tokens: int
     out: List[int] = dataclasses.field(default_factory=list)
     id: Optional[int] = None        # assigned by the engine at admission
+    tenant: Optional[str] = None    # quota accounting key (governor)
 
 
 @dataclasses.dataclass
@@ -242,6 +243,15 @@ class ServeEngine:
         blocking bucketed admission (the measured baseline); None
         (default) resolves ``PMT_PREFILL_CHUNK`` then
         ``cfg.prefill_chunk``.
+      governor: a ``serve.governor.PowerGovernor`` consulted by the
+        continuous scheduler at admission (gate + tenant-priority pick),
+        chunk drain (0..max chunks per decode step), and before each
+        decode dispatch (duty-cycle pause) — holds the engine under the
+        governor's watts cap / tenant quotas.  With a cap set, decode
+        runs one step per loop so the governor sees every step;
+        ``cap_watts=None`` keeps the bursty device-side decode runs.
+        Ignored in wave mode (the synchronized baseline has no
+        per-step scheduling points to govern).
       greedy, temperature, seed: decoding policy.  ``greedy=False``
         threads ``fold_in(PRNGKey(seed), step)`` into every decode
         step's categorical draw (and the prefill first-token pick);
@@ -264,6 +274,7 @@ class ServeEngine:
                  cache_impl: str = "auto",
                  decode_attn_impl: Optional[str] = None,
                  prefill_chunk: Optional[int] = None,
+                 governor=None,
                  greedy: bool = True, temperature: float = 1.0,
                  seed: int = 0, cache_dtype=jnp.bfloat16):
         if mode not in ("continuous", "wave"):
@@ -290,8 +301,15 @@ class ServeEngine:
             # config/env default larger than this engine's cache: clamp
             # (one whole-cache chunk) rather than refuse to serve.
             self.prefill_chunk = max_len
+        self.governor = governor
         self.greedy = greedy
         self.temperature = temperature
+        # Scheduler gauges — plain attribute reads, safe from any thread
+        # (e.g. a load-coupled DummySensor watts_fn or a telemetry stats
+        # provider sampling engine state mid-run).
+        self.live_slots = 0             # decoding + mid-prefill slots
+        self.queue_depth = 0            # admitted-nothing-yet backlog
+        self.pending_prefill_chunks = 0
         self._key_base = jax.random.PRNGKey(seed)
         self._step_idx = 0          # monotone sampling-step counter
         self._batch_count = 0       # aggregate regions (waves or batches)
@@ -413,6 +431,8 @@ class ServeEngine:
                         f"request needs {need} cache slots (bucketed prompt "
                         f"+ max_new_tokens) but max_len is {self.max_len}")
         self.stall_events = []
+        if self.governor is not None and self.mode == "continuous":
+            self.governor.begin(self)
         if self.mode == "wave":
             done: List[Request] = []
             for i in range(0, len(requests), self.batch):
@@ -420,6 +440,24 @@ class ServeEngine:
                 done.extend(self._run_wave(wave))
             return done
         return self._run_continuous(requests)
+
+    def stats(self) -> Dict[str, Any]:
+        """Scheduler counters snapshot — what the telemetry ``/stats``
+        endpoint and the launcher's end-of-run report surface."""
+        s: Dict[str, Any] = {
+            "mode": self.mode,
+            "batch_slots": self.batch,
+            "requests_admitted": self._request_count,
+            "live_slots": self.live_slots,
+            "queue_depth": self.queue_depth,
+            "pending_prefill_chunks": self.pending_prefill_chunks,
+            "stall_events": len(self.stall_events),
+            "stall_p95_s": stall_p95(self.stall_events),
+            "compile_counts": dict(self.compile_counts),
+        }
+        if self.governor is not None:
+            s["governor"] = self.governor.stats()
+        return s
 
     # -- continuous batching --------------------------------------------------
     def _admit(self, r: Request) -> Request:
@@ -480,8 +518,11 @@ class ServeEngine:
     def _run_continuous(self, requests: List[Request]) -> List[Request]:
         b = self.batch
         chunk = self.prefill_chunk
-        queue = list(requests)
-        qi = 0                                   # admission cursor
+        gov = self.governor
+        # Admission order is FIFO without a governor; with one, an
+        # over-quota tenant's requests yield to in-quota tenants (but
+        # are never skipped outright — see the tenant pick below).
+        waiting = list(requests)
         caches = model_mod.init_caches(self.cfg, b, self.max_len,
                                        dtype=self.cache_dtype)
         tokens = np.zeros((b, 1), np.int32)
@@ -532,19 +573,45 @@ class ServeEngine:
             req_ctxs[j] = None
             active[j] = None
 
+        def update_gauges():
+            self.queue_depth = len(waiting)
+            self.live_slots = sum(1 for a in active if a is not None) \
+                + sum(reserved)
+            self.pending_prefill_chunks = sum(
+                max(0, st.toks.shape[1] - st.offset) // chunk
+                for st in prefills) if chunk else 0
+
         with self._measure_ctx(agg_id, tokens=total_tokens):
             try:
-                while qi < len(queue) or prefills \
+                while waiting or prefills \
                         or any(r is not None for r in active):
+                    update_gauges()
                     # slot-granular admission: every free slot refills
                     # now (blocking) or enters the chunk queue (chunked)
-                    # instead of waiting for the batch to drain.
+                    # instead of waiting for the batch to drain.  The
+                    # governor gates the rate and picks *which* waiting
+                    # request (in-quota tenants first); when it blocks
+                    # admission while the engine is completely idle, the
+                    # engine admits anyway — power can only be idle draw,
+                    # and liveness beats an unholdable cap.
                     for j in range(b):
                         if active[j] is not None or reserved[j] \
-                                or qi >= len(queue):
+                                or not waiting:
                             continue
-                        r = self._admit(queue[qi])
-                        qi += 1
+                        k = 0
+                        if gov is not None:
+                            if not gov.admission_allowed():
+                                if any(a is not None for a in active) \
+                                        or prefills:
+                                    break
+                                gov.note_forced_admit()
+                            else:
+                                k = next(
+                                    (i for i, w in enumerate(waiting)
+                                     if gov.tenant_allowed(w.tenant)), 0)
+                        r = self._admit(waiting.pop(k))
+                        if gov is not None:
+                            gov.note_admitted(r)
                         req_ctxs[j] = open_ctx(r.id, r.max_new_tokens)
                         pf_ctxs[j] = open_ctx(r.id, len(r.prompt),
                                               phase="prefill")
@@ -562,25 +629,46 @@ class ServeEngine:
                         close_ctx(pf_ctxs[j])
                         pf_ctxs[j] = None
                         caches = activate(j, r, row, first, bucket)
+                    update_gauges()
 
-                    # one prefill chunk interleaves with each decode
-                    # step; with no live decode rows the chunk queue
-                    # drains back-to-back.
+                    # prefill chunks interleave with each decode step —
+                    # one per step by default, 0 while the governor is
+                    # shedding load (forced back to 1 when nothing is
+                    # decoding: pausing prefill then would idle the
+                    # engine, not save power), several when the governor
+                    # sees ample headroom.  With no live decode rows the
+                    # chunk queue drains back-to-back.
                     if prefills:
-                        st = prefills[0]
                         decode_live = any(a is not None for a in active)
-                        first = self._step_chunked_prefill(st, decode_live)
-                        if first is not None:
-                            prefills.popleft()
-                            reserved[st.slot] = False
-                            close_ctx(pf_ctxs[st.slot])
-                            pf_ctxs[st.slot] = None
-                            caches = activate(st.slot, st.req, st.caches,
-                                              first, st.plen)
+                        budget = 1
+                        if gov is not None:
+                            budget = gov.prefill_chunk_budget(decode_live)
+                            if budget < 1 and not decode_live:
+                                budget = 1
+                                gov.note_forced_chunk()
+                        for _ in range(budget):
+                            if not prefills:
+                                break
+                            st = prefills[0]
+                            first = self._step_chunked_prefill(
+                                st, decode_live)
+                            if first is not None:
+                                prefills.popleft()
+                                reserved[st.slot] = False
+                                close_ctx(pf_ctxs[st.slot])
+                                pf_ctxs[st.slot] = None
+                                caches = activate(st.slot, st.req,
+                                                  st.caches, first,
+                                                  st.plen)
+                        update_gauges()
 
                     live = [j for j in range(b) if active[j] is not None]
                     if not live:
                         continue          # everything retired at prefill
+                    if gov is not None:
+                        # Last-resort lever: duty-cycle decode while
+                        # power exceeds the hard-over threshold.
+                        gov.maybe_pause_decode()
                     # Retirement is deterministic (exactly max_new_tokens
                     # per request), so with no admission work pending
                     # decode runs device-side until the *next* slot
@@ -590,8 +678,12 @@ class ServeEngine:
                     # interleave).  Inactive rows decode garbage into
                     # their own (dead, about-to-be-overwritten) cache
                     # rows only.
-                    steps = 1 if prefills else min(remaining[j]
-                                                   for j in live)
+                    # Under an active power cap decode advances one step
+                    # per loop so every step passes the governor's
+                    # pause/admission checkpoints.
+                    governed = gov is not None and gov.cap_watts is not None
+                    steps = 1 if (prefills or governed) \
+                        else min(remaining[j] for j in live)
                     tok_dev = jnp.asarray(tokens)
                     pos_dev = jnp.asarray(pos)
                     outs = []
@@ -619,6 +711,8 @@ class ServeEngine:
                 # request/phase spans: they hold ring-sampler pins on
                 # the shared session for its whole lifetime.
                 prefills.clear()
+                waiting.clear()
+                update_gauges()
                 for j in range(b):
                     close_ctx(pf_ctxs[j])
                     pf_ctxs[j] = None

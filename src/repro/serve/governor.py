@@ -1,0 +1,386 @@
+"""``PowerGovernor`` — energy-aware scheduling policy for the serve
+engine: the control half of the measurement -> control loop.
+
+The engine measures J/token per request; the governor *acts* on it.  It
+reads smoothed power from a :class:`~repro.telemetry.PowerRecorder`
+window and holds the engine under a configured watts cap (and per-tenant
+joules quotas) by modulating, in escalating order:
+
+  1. **admission rate** — new requests are admitted only while smoothed
+     power sits below ``admit_frac * cap_watts``, and at most one
+     admission per ``admit_hold_s`` so each admission's power step is
+     *observed* before the next one lands (no multi-slot overshoot
+     through the smoothing lag);
+  2. **prefill chunk pacing** — the interleaved chunk queue drains 0
+     chunks per decode step while power is above the admission
+     threshold (and up to ``max_chunks_per_step`` when there is lots of
+     headroom), trading time-to-first-token for cap headroom while
+     in-flight decodes proceed untouched;
+  3. **decode idling (last resort)** — when power exceeds
+     ``cap_watts * (1 + hard_over_frac)`` the governor duty-cycles the
+     decode loop with ``pause_s`` sleeps, stretching wall-clock to pull
+     average watts down.  Decode never stops outright, so no request
+     starves.
+
+Liveness guarantee: every lever only *defers* work — admission resumes
+as soon as the window drops, a paused chunk queue is force-drained when
+nothing is decoding (the engine calls :meth:`note_forced_chunk`), and
+pauses are bounded sleeps between decode steps.  A governor with
+``cap_watts=None`` is a pure observer (every lever wide open), which is
+what the uncapped leg of ``benchmarks/bench_governor.py`` measures.
+
+Tenant quotas are *soft priorities*, not hard kills: a tenant whose
+accumulated request joules (fed back from the recorder's resolved
+``serve/req<N>`` records) exceed its quota is deprioritised behind
+other tenants at admission, but is still served when nothing else is
+waiting — quota pressure cannot deadlock the queue.
+
+Every throttle decision (state transitions and each decode pause) is
+recorded in :attr:`decisions` *and* as a flat ``serve/governor/<action>``
+session span, so the control actions themselves show up in the energy
+export stream next to the requests they shaped.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+from repro.core.export import RegionRecord
+
+_REQ = "serve/req"
+
+
+@dataclasses.dataclass(frozen=True)
+class ThrottleDecision:
+    """One governor action: what, when, and on which power reading."""
+
+    t: float                      # governor-clock timestamp
+    action: str                   # admit_block/admit_resume/chunk_pause/
+                                  # chunk_resume/chunk_force/decode_pause/
+                                  # tenant_defer/tenant_resume
+    watts: Optional[float]        # smoothed window power at decision time
+    cap: Optional[float]
+    detail: str = ""
+
+
+class PowerGovernor:
+    """Energy-aware admission/pacing policy consulted by ``ServeEngine``.
+
+    Args:
+      recorder: the :class:`~repro.telemetry.PowerRecorder` whose watts
+        window is the control signal (and whose resolved ``serve/req<N>``
+        records feed tenant quota accounting).
+      cap_watts: power budget; ``None`` disables power capping (the
+        governor still tracks tenants and records nothing).
+      window_s: trailing smoothing window for the control signal.
+      admit_frac: admissions (and chunk drains) allowed only below
+        ``admit_frac * cap_watts`` — the hysteresis band that absorbs
+        the one-slot power step an admission causes.
+      hard_over_frac: decode pauses engage above
+        ``cap_watts * (1 + hard_over_frac)``.
+      admit_hold_s: minimum spacing between admissions near the cap
+        (defaults to ``window_s`` so each admission is visible in the
+        window before the next); ignored while power is below
+        ``boost_frac * cap_watts``.
+      pause_s: duration of one decode-idle sleep.
+      max_chunks_per_step: chunk-drain budget when power sits below
+        ``boost_frac * cap_watts`` (ample headroom).
+      tenant_quota_j: per-tenant joules quota — a single float applied
+        to every tenant, or a ``{tenant: quota}`` dict (missing tenants
+        unlimited).
+      backend: restrict the control signal to one backend's watts
+        (default: sum over all backends the recorder sees).
+      clock: injectable time source for deterministic tests.
+    """
+
+    def __init__(self, recorder, cap_watts: Optional[float] = None,
+                 window_s: float = 0.25, admit_frac: float = 0.9,
+                 hard_over_frac: float = 0.10,
+                 admit_hold_s: Optional[float] = None,
+                 pause_s: float = 0.005, max_chunks_per_step: int = 2,
+                 tenant_quota_j: Union[None, float, Dict[str, float]] = None,
+                 backend: Optional[str] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if cap_watts is not None and cap_watts <= 0:
+            raise ValueError(f"cap_watts must be > 0, got {cap_watts}")
+        if not 0.0 < admit_frac <= 1.0:
+            raise ValueError(f"admit_frac must be in (0, 1], got {admit_frac}")
+        if max_chunks_per_step < 1:
+            raise ValueError("max_chunks_per_step must be >= 1")
+        self.recorder = recorder
+        self.cap_watts = cap_watts
+        self.window_s = float(window_s)
+        self.admit_frac = float(admit_frac)
+        self.hard_over_frac = float(hard_over_frac)
+        self.admit_hold_s = (window_s if admit_hold_s is None
+                             else float(admit_hold_s))
+        self.pause_s = float(pause_s)
+        self.max_chunks_per_step = int(max_chunks_per_step)
+        self.boost_frac = 0.5 * self.admit_frac
+        self.backend = backend
+        self._clock = clock
+        self._quota = tenant_quota_j
+        self._lock = threading.Lock()
+        self._tenant_joules: Dict[str, float] = {}
+        self._rid_tenant: Dict[int, str] = {}
+        self._tenant_blocked: Dict[str, bool] = {}
+        self._last_admit_t = float("-inf")
+        self._admit_blocked = False
+        self._hold_blocked = False
+        self._chunk_blocked = False
+        # Learned per-admission power step (EWMA, biased high): each
+        # settled admission updates it from the observed window delta,
+        # so the admission gate can *predict* whether one more slot
+        # still fits under the cap instead of discovering the overshoot
+        # after the fact.
+        self._step_w: Optional[float] = None
+        self._pending_step: Optional[Tuple[Optional[float], float]] = None
+        self.decisions: collections.deque = collections.deque(maxlen=4096)
+        self.throttle_count = 0       # total decisions ever (ring-proof)
+        self.pause_total_s = 0.0
+        self._session = None          # bound by begin()
+        self._unsub: Optional[Callable[[], None]] = None
+        if recorder is not None:
+            self._unsub = recorder.subscribe(self._on_record)
+
+    # -- engine binding -----------------------------------------------------
+    def begin(self, engine) -> None:
+        """Called by the engine at the top of each ``generate()``: binds
+        the session used for ``serve/governor`` spans and re-arms the
+        admission hold."""
+        session = engine.session
+        if session is None and engine.monitor is not None:
+            session = engine.monitor.session
+        self._session = session
+        self._last_admit_t = float("-inf")
+
+    def close(self) -> None:
+        if self._unsub is not None:
+            self._unsub()
+            self._unsub = None
+
+    # -- control signal -----------------------------------------------------
+    def window_watts(self) -> Optional[float]:
+        """Smoothed power over the trailing window (``None`` = no data
+        yet, every lever stays open)."""
+        if self.recorder is None:
+            return None
+        return self.recorder.mean_watts(self.window_s, backend=self.backend)
+
+    # -- levers (consulted by ServeEngine._run_continuous) -------------------
+    def admission_allowed(self) -> bool:
+        """Whether a new request may be admitted right now."""
+        if self.cap_watts is None:
+            return True
+        w = self.window_watts()
+        if w is not None:
+            self._settle_step(w)
+            # Predictive gate: one more slot costs ~the learned step, so
+            # block unless current + step still fits under the cap.  The
+            # admit_frac threshold alone is not enough — when a slot's
+            # power step exceeds the (1 - admit_frac) headroom band, a
+            # transient dip below the threshold would admit a slot whose
+            # settled load overshoots the cap.
+            step = self._step_w if self._step_w is not None \
+                else self.cap_watts * (1.0 - self.admit_frac)
+            if w >= self.cap_watts * self.admit_frac \
+                    or w + step > self.cap_watts:
+                self._transition("_admit_blocked", True, "admit_block", w)
+                return False
+            self._transition("_admit_blocked", False, "admit_resume", w)
+        if (w is None or w >= self.cap_watts * self.boost_frac) and \
+                self._clock() - self._last_admit_t < self.admit_hold_s:
+            # Near the cap — or with no signal yet (recorder hasn't
+            # polled): space admissions out so each one's power step is
+            # observed in the window before the next lands.  An unknown
+            # signal must be treated as near-cap, or the first scheduler
+            # pass fills every slot before the first sample arrives.
+            # One admit_hold decision per hold episode, not per attempt.
+            self._transition("_hold_blocked", True, "admit_hold", w)
+            return False
+        self._hold_blocked = False       # episode over; no resume span
+        return True
+
+    def prefill_chunk_budget(self, decode_live: bool) -> int:
+        """Chunks to drain alongside this decode step (0 pauses the
+        queue).  The engine force-drains one chunk anyway when nothing
+        is decoding (see :meth:`note_forced_chunk`) so a paused queue
+        cannot starve."""
+        if self.cap_watts is None:
+            return 1
+        w = self.window_watts()
+        if w is None:
+            return 1
+        if w >= self.cap_watts * self.admit_frac:
+            self._transition("_chunk_blocked", True, "chunk_pause", w)
+            return 0
+        self._transition("_chunk_blocked", False, "chunk_resume", w)
+        if w < self.cap_watts * self.boost_frac:
+            return self.max_chunks_per_step
+        return 1
+
+    def maybe_pause_decode(self) -> float:
+        """Last-resort duty cycling: sleep ``pause_s`` when smoothed
+        power exceeds the hard-over threshold.  Returns the seconds
+        slept (0.0 when no pause was needed).  The sleep itself runs
+        inside a ``serve/governor/decode_pause`` span, so idling shows
+        up in the energy export like any other scheduled activity."""
+        if self.cap_watts is None:
+            return 0.0
+        w = self.window_watts()
+        if w is None or w <= self.cap_watts * (1.0 + self.hard_over_frac):
+            return 0.0
+        self._decide("decode_pause", w, detail=f"sleep {self.pause_s}s",
+                     span_sleep_s=self.pause_s)
+        with self._lock:
+            self.pause_total_s += self.pause_s
+        return self.pause_s
+
+    def note_forced_chunk(self) -> None:
+        """The engine drained a chunk despite a 0 budget (nothing was
+        decoding, so pausing prefill would have idled the engine)."""
+        self._decide("chunk_force", self.window_watts(),
+                     detail="no live decode; liveness override")
+
+    def note_forced_admit(self) -> None:
+        """The engine admitted despite a blocked gate: it was completely
+        idle (no live decode, no pending prefill) with work waiting, so
+        the measured power can only be idle draw — if *that* exceeds the
+        cap the cap is unholdable and liveness wins."""
+        self._decide("admit_force", self.window_watts(),
+                     detail="engine idle with work waiting; liveness override")
+
+    # -- tenant quotas ------------------------------------------------------
+    def _quota_for(self, tenant: str) -> Optional[float]:
+        if self._quota is None:
+            return None
+        if isinstance(self._quota, dict):
+            return self._quota.get(tenant)
+        return float(self._quota)
+
+    def tenant_allowed(self, tenant: Optional[str]) -> bool:
+        """Whether ``tenant`` is inside its joules quota.  The engine
+        uses this as a *priority* hint: over-quota tenants yield to
+        others at admission but are still served when alone."""
+        if tenant is None:
+            return True
+        quota = self._quota_for(tenant)
+        if quota is None:
+            return True
+        with self._lock:
+            spent = self._tenant_joules.get(tenant, 0.0)
+        over = spent >= quota
+        self._tenant_transition(tenant, over, spent, quota)
+        return not over
+
+    def tenant_joules(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._tenant_joules)
+
+    def _settle_step(self, w_now: float) -> None:
+        """Fold a settled admission's observed power delta into the
+        learned per-slot step (biased high: a step estimate that decays
+        too eagerly re-opens the overshoot the gate exists to prevent)."""
+        if self._pending_step is None:
+            return
+        pre, t_adm = self._pending_step
+        if self._clock() - t_adm < self.admit_hold_s:
+            return
+        self._pending_step = None
+        if pre is not None:
+            obs = max(0.0, w_now - pre)
+            self._step_w = obs if self._step_w is None \
+                else max(0.5 * (self._step_w + obs), obs)
+
+    def note_admitted(self, request) -> None:
+        """Engine callback at admission: arms the admission hold,
+        snapshots pre-admission power for step learning, and registers
+        the request's tenant for quota attribution."""
+        self._pending_step = (self.window_watts(), self._clock())
+        self._last_admit_t = self._clock()
+        tenant = getattr(request, "tenant", None)
+        if tenant is not None and request.id is not None:
+            with self._lock:
+                self._rid_tenant[request.id] = tenant
+
+    def _on_record(self, rec: RegionRecord) -> None:
+        """Recorder subscriber: fold resolved whole-request spans into
+        per-tenant joules accounting."""
+        path = rec.path
+        if not path.startswith(_REQ) or "/" in path[len(_REQ):]:
+            return
+        try:
+            rid = int(path[len(_REQ):])
+        except ValueError:
+            return
+        with self._lock:
+            tenant = self._rid_tenant.get(rid)
+            if tenant is not None:
+                self._tenant_joules[tenant] = \
+                    self._tenant_joules.get(tenant, 0.0) + rec.joules
+
+    # -- decision recording -------------------------------------------------
+    def _transition(self, attr: str, blocked: bool, action: str,
+                    watts: Optional[float]) -> None:
+        """Record a lever state *transition* (not every consultation —
+        a long over-cap episode is one block + one resume, not a span
+        flood)."""
+        if getattr(self, attr) == blocked:
+            return
+        setattr(self, attr, blocked)
+        self._decide(action, watts)
+
+    def _tenant_transition(self, tenant: str, over: bool, spent: float,
+                           quota: float) -> None:
+        with self._lock:
+            was = self._tenant_blocked.get(tenant, False)
+            if was == over:
+                return
+            self._tenant_blocked[tenant] = over
+        self._decide("tenant_defer" if over else "tenant_resume",
+                     None, detail=f"{tenant}: {spent:.3f}/{quota:.3f} J")
+
+    def _decide(self, action: str, watts: Optional[float],
+                detail: str = "", span_sleep_s: float = 0.0) -> None:
+        d = ThrottleDecision(t=self._clock(), action=action, watts=watts,
+                             cap=self.cap_watts, detail=detail)
+        with self._lock:
+            self.decisions.append(d)
+            self.throttle_count += 1
+            n = self.throttle_count
+        session = self._session
+        if session is not None:
+            # Flat span (depth 0, no nesting stack) so governor actions
+            # are energy-attributed like request spans.  The pause's
+            # sleep runs inside its span; transition spans are instants.
+            try:
+                with session.region(f"serve/governor/{action}{n}",
+                                    nested=False):
+                    if span_sleep_s > 0.0:
+                        time.sleep(span_sleep_s)
+            except Exception:
+                pass          # session closed mid-run: keep governing
+        elif span_sleep_s > 0.0:
+            time.sleep(span_sleep_s)
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            actions: Dict[str, int] = {}
+            for d in self.decisions:
+                actions[d.action] = actions.get(d.action, 0) + 1
+            return {
+                "cap_watts": self.cap_watts,
+                "window_s": self.window_s,
+                "throttle_decisions": self.throttle_count,
+                "throttle_actions": actions,
+                "pause_total_s": self.pause_total_s,
+                "tenant_joules": dict(self._tenant_joules),
+            }
+
+    def __repr__(self):
+        return (f"<PowerGovernor cap={self.cap_watts} "
+                f"window={self.window_s}s decisions={self.throttle_count}>")

@@ -1,0 +1,25 @@
+"""Live telemetry plane: the measurement -> observation half of the
+energy control loop.
+
+The serve engine *measures* (per-request, per-phase J/token through
+``pmt.Session`` spans); this package makes those measurements
+observable while the engine is still running, with zero dependencies
+beyond the stdlib:
+
+  * :class:`PowerRecorder` — append-only, bounded in-memory store fed
+    by the session's ``MemoryExporter`` (resolved ``RegionRecord``\\ s),
+    a ``PowerMonitor`` subscription (``StepEnergy`` records), and a
+    non-perturbing poll of each backend's ring sampler (watts
+    timelines).  The smoothing window the ``PowerGovernor`` reads lives
+    here too.
+  * :class:`TelemetryServer` — a stdlib ``http.server`` HTTP endpoint
+    over a recorder: ``/timeline`` (power series), ``/requests``
+    (per-request prefill/decode joules), ``/stats`` (engine counters),
+    and ``/stream`` (live SSE feed of new records).
+"""
+from repro.telemetry.recorder import PowerRecorder, WattsSample
+from repro.telemetry.server import TelemetryServer
+from repro.telemetry.sse import SSESubscriber, format_sse
+
+__all__ = ["PowerRecorder", "WattsSample", "TelemetryServer",
+           "SSESubscriber", "format_sse"]

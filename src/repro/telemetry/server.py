@@ -1,0 +1,194 @@
+"""``TelemetryServer`` — stdlib HTTP/SSE endpoint over a
+:class:`~repro.telemetry.recorder.PowerRecorder`.
+
+Zero dependencies: ``http.server.ThreadingHTTPServer`` (one daemon
+thread per connection) bound to an ephemeral port by default
+(``port=0`` — read the real one back from :attr:`port`), fully
+exercisable with ``urllib`` in tests.
+
+Endpoints (all JSON unless noted):
+
+  * ``GET /``          — endpoint index.
+  * ``GET /timeline``  — per-backend power series
+    ``{"series": {backend: [[t, watts], ...]}, "window_mean_watts": x}``.
+    Query: ``backend=<name>``, ``since=<t>`` (sensor-clock seconds),
+    ``window=<s>`` (smoothing window for the mean, default 1.0).
+  * ``GET /requests``  — per-request energy with the prefill/decode
+    split; each request carries its contributing ``RegionRecord``\\ s as
+    ``as_json()`` strings (bit-faithful round-trip).
+  * ``GET /stats``     — recorder counters merged with engine-provided
+    counters (``stall_events``/``stall_p95``, compile counts, throttle
+    decisions — whatever the attached stats providers contribute).
+  * ``GET /stream``    — ``text/event-stream`` (SSE): a ``hello`` event,
+    then one ``record`` event per newly resolved region record, with
+    ``: keepalive`` comments while idle.  ``curl -N <url>/stream``.
+
+The serving thread never touches the measurement plane: every read
+goes through the recorder's locked snapshots, and the SSE fan-out is a
+bounded drop-oldest queue per client (see :mod:`repro.telemetry.sse`).
+"""
+from __future__ import annotations
+
+import http.server
+import json
+import threading
+import urllib.parse
+from typing import Optional
+
+from repro.telemetry.recorder import PowerRecorder
+from repro.telemetry.sse import SSESubscriber, format_sse
+
+_INDEX = {
+    "endpoints": {
+        "/timeline": "power series per backend "
+                     "(?backend=, ?since=, ?window=)",
+        "/requests": "per-request prefill/decode joules + raw records",
+        "/stats": "engine + recorder counters",
+        "/stream": "SSE stream of resolved records (curl -N)",
+    },
+}
+
+
+class _Handler(http.server.BaseHTTPRequestHandler):
+    # the server instance injects .recorder/.closing (see TelemetryServer)
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, fmt, *args):  # quiet: telemetry, not access logs
+        pass
+
+    # -- plumbing -----------------------------------------------------------
+    def _send_json(self, payload, status: int = 200) -> None:
+        body = json.dumps(payload, sort_keys=True).encode("utf-8")
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _query(self):
+        parsed = urllib.parse.urlsplit(self.path)
+        return parsed.path, dict(urllib.parse.parse_qsl(parsed.query))
+
+    # -- routes -------------------------------------------------------------
+    def do_GET(self):  # noqa: N802 (BaseHTTPRequestHandler API)
+        path, q = self._query()
+        try:
+            if path == "/":
+                self._send_json(_INDEX)
+            elif path == "/timeline":
+                self._timeline(q)
+            elif path == "/requests":
+                self._requests()
+            elif path == "/stats":
+                self._send_json(self.server.recorder.stats())
+            elif path == "/stream":
+                self._stream()
+            else:
+                self._send_json({"error": f"unknown path {path!r}"},
+                                status=404)
+        except (BrokenPipeError, ConnectionResetError):
+            pass                      # client went away mid-response
+
+    def _timeline(self, q) -> None:
+        rec: PowerRecorder = self.server.recorder
+        try:
+            since = float(q["since"]) if "since" in q else None
+            window = float(q.get("window", 1.0))
+        except ValueError as e:
+            self._send_json({"error": f"bad query parameter: {e}"},
+                            status=400)
+            return
+        backend = q.get("backend")
+        self._send_json({
+            "series": rec.watts_series(backend=backend, since=since),
+            "window_s": window,
+            "window_mean_watts": rec.mean_watts(window, backend=backend),
+        })
+
+    def _requests(self) -> None:
+        rec: PowerRecorder = self.server.recorder
+        reqs = {str(rid): d for rid, d in rec.request_energy().items()}
+        self._send_json({"requests": reqs, "count": len(reqs)})
+
+    def _stream(self) -> None:
+        rec: PowerRecorder = self.server.recorder
+        sub = SSESubscriber()
+        unsubscribe = rec.subscribe(lambda r: sub.put(r))
+        try:
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            # SSE is an unbounded stream: no Content-Length, close
+            # delimits (keep-alive would have the client wait forever).
+            self.send_header("Connection", "close")
+            self.end_headers()
+            self.wfile.write(format_sse(
+                json.dumps({"records": rec.stats()["records"]}),
+                event="hello"))
+            self.wfile.flush()
+            while not self.server.closing.is_set():
+                item = sub.get(timeout=self.server.sse_keepalive_s)
+                if item is None:
+                    self.wfile.write(b": keepalive\n\n")
+                else:
+                    self.wfile.write(format_sse(item.as_json(),
+                                                event="record"))
+                self.wfile.flush()
+        finally:
+            unsubscribe()
+
+
+class TelemetryServer:
+    """Threaded HTTP/SSE server over a recorder.
+
+    Args:
+      recorder: the :class:`PowerRecorder` to serve.
+      host: bind address (default loopback — telemetry is unauthenticated,
+        so exposing it beyond the host is an explicit opt-in).
+      port: TCP port; 0 (default) binds an ephemeral port, read it back
+        from :attr:`port` after construction.
+
+    ``start()`` returns immediately (daemon serving thread);
+    ``close()`` shuts the listener down and releases SSE clients within
+    one keep-alive period.  Usable as a context manager.
+    """
+
+    def __init__(self, recorder: PowerRecorder, host: str = "127.0.0.1",
+                 port: int = 0, sse_keepalive_s: float = 0.25):
+        self.recorder = recorder
+        self._httpd = http.server.ThreadingHTTPServer((host, port),
+                                                      _Handler)
+        self._httpd.daemon_threads = True
+        self._httpd.recorder = recorder
+        self._httpd.closing = threading.Event()
+        self._httpd.sse_keepalive_s = float(sse_keepalive_s)
+        self.host = host
+        self.port = int(self._httpd.server_address[1])
+        self.url = f"http://{host}:{self.port}"
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "TelemetryServer":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._httpd.serve_forever,
+                kwargs={"poll_interval": 0.05},
+                name="pmt-telemetry-http", daemon=True)
+            self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop serving (idempotent): unblocks SSE handlers, shuts the
+        accept loop down, and closes the listening socket."""
+        self._httpd.closing.set()
+        if self._thread is not None:
+            self._httpd.shutdown()
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        self._httpd.server_close()
+
+    def __enter__(self) -> "TelemetryServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

@@ -1,0 +1,396 @@
+"""Telemetry plane: recorder aggregation, HTTP/SSE endpoints, and the
+exporter plumbing underneath them.
+
+The end-to-end gates: a live engine's per-request energy is readable
+over plain ``urllib`` against an ephemeral port while the run is still
+warm (zero added dependencies), the ``/requests`` payload satisfies the
+``prefill_joules + decode_joules == joules`` invariant, and the raw
+``RegionRecord``\\ s survive the exporter -> recorder -> HTTP -> client
+round trip bit-faithfully (``as_json``/``from_json``).
+
+The plumbing gates below them: ``MemoryExporter`` stays consistent
+under concurrent emit + subscribe/unsubscribe and drops (never
+propagates) a raising subscriber, and ``read_jsonl`` skips a truncated
+trailing line instead of losing the whole export.
+"""
+import dataclasses
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+import warnings
+
+import pytest
+
+import repro.core as pmt
+from repro.core.backends.dummy import DummySensor
+from repro.core.export import MemoryExporter, RegionRecord, read_jsonl
+from repro.telemetry import (PowerRecorder, SSESubscriber, TelemetryServer,
+                             format_sse)
+
+
+@pytest.fixture(scope="module")
+def smollm_serve():
+    import jax
+    from repro import configs
+    from repro.models import model as M
+    cfg = dataclasses.replace(configs.get_config("smollm-135m",
+                                                 reduced=True),
+                              dtype="float32")
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def rec_for(path, joules=1.0, tokens=None, start=0.0, end=1.0):
+    return RegionRecord(path=path, label=path.rsplit("/", 1)[-1], depth=0,
+                        sensor="dummy", kind="modeled", start_s=start,
+                        end_s=end, seconds=end - start, joules=joules,
+                        watts=joules / max(end - start, 1e-9),
+                        tokens=tokens)
+
+
+def get_json(url):
+    with urllib.request.urlopen(url, timeout=5.0) as resp:
+        assert resp.status == 200
+        return json.loads(resp.read().decode())
+
+
+# -- recorder ---------------------------------------------------------------
+
+class TestPowerRecorder:
+    def test_mean_watts_windowing(self):
+        rec = PowerRecorder()
+        for i in range(10):
+            rec.add_watts("dummy", float(i), 100.0 if i >= 5 else 10.0)
+        # window covering only the 100 W tail
+        assert rec.mean_watts(4.0) == pytest.approx(100.0)
+        # window spanning everything
+        assert rec.mean_watts(100.0) == pytest.approx(55.0)
+        assert rec.mean_watts(1.0, backend="nope") is None
+
+    def test_mean_watts_sums_backends(self):
+        rec = PowerRecorder()
+        rec.add_watts("a", 1.0, 30.0)
+        rec.add_watts("b", 1.0, 12.0)
+        assert rec.mean_watts(5.0) == pytest.approx(42.0)
+        assert rec.mean_watts(5.0, backend="a") == pytest.approx(30.0)
+
+    def test_nonfinite_watts_skipped(self):
+        rec = PowerRecorder()
+        rec.add_watts("dummy", 0.0, float("nan"))
+        rec.add_watts("dummy", 1.0, float("inf"))
+        assert rec.mean_watts(10.0) is None
+
+    def test_bounded_rings_count_total(self):
+        rec = PowerRecorder(record_capacity=4)
+        for i in range(10):
+            rec.on_record(rec_for(f"r{i}"))
+        assert len(rec.records()) == 4
+        st = rec.stats()
+        assert st["records"] == 10 and st["records_retained"] == 4
+
+    def test_subscriber_fanout_and_drop_on_raise(self):
+        rec = PowerRecorder()
+        got = []
+        rec.subscribe(got.append)
+
+        def bad(r):
+            raise RuntimeError("boom")
+
+        rec.subscribe(bad)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            rec.on_record(rec_for("a"))
+            rec.on_record(rec_for("b"))
+        assert [r.path for r in got] == ["a", "b"]
+        assert any("subscriber dropped" in str(x.message) for x in w)
+        assert rec.stats()["subscribers"] == 1
+
+    def test_request_energy_aggregation(self):
+        rec = PowerRecorder()
+        rec.on_record(rec_for("serve/req3", joules=10.0, tokens=5))
+        rec.on_record(rec_for("serve/req3/prefill", joules=6.0))
+        rec.on_record(rec_for("serve/req3/decode", joules=4.0))
+        rec.on_record(rec_for("serve/batch0", joules=99.0))  # not a request
+        energy = rec.request_energy()
+        assert set(energy) == {3}
+        d = energy[3]
+        assert d["joules"] == pytest.approx(10.0)
+        assert d["prefill_joules"] + d["decode_joules"] \
+            == pytest.approx(d["joules"])
+        assert d["tokens"] == 5
+        assert d["j_per_token"] == pytest.approx(2.0)
+        assert len(d["records"]) == 3
+
+    def test_attach_polls_session_watts(self):
+        sensor = DummySensor(watts=42.0)
+        with pmt.Session([sensor], pool=pmt.SensorPool(),
+                         period_s=0.002) as sess:
+            with PowerRecorder(poll_period_s=0.01).attach(sess) as rec:
+                with sess.region("work"):
+                    time.sleep(0.05)
+                sess.flush()
+                rec.poll_once()
+                series = rec.watts_series("dummy")["dummy"]
+                assert series, "no watts polled off the ring sampler"
+                assert all(w == pytest.approx(42.0) for _t, w in series)
+                assert rec.mean_watts(1.0) == pytest.approx(42.0)
+                assert any(r.path == "work" for r in rec.records())
+
+    def test_stats_providers_merge_and_capture_errors(self):
+        rec = PowerRecorder()
+        rec.add_stats_provider(lambda: {"extra": 7})
+        rec.add_stats_provider(lambda: 1 / 0)
+        st = rec.stats()
+        assert st["extra"] == 7
+        assert any("ZeroDivisionError" in e
+                   for e in st["stats_provider_errors"])
+
+
+# -- SSE plumbing -----------------------------------------------------------
+
+class TestSSE:
+    def test_format_sse_framing(self):
+        msg = format_sse("a\nb", event="record", event_id="7")
+        assert msg == b"id: 7\nevent: record\ndata: a\ndata: b\n\n"
+        assert format_sse("") == b"data: \n\n"
+
+    def test_subscriber_drops_oldest_never_blocks(self):
+        sub = SSESubscriber(maxlen=3)
+        for i in range(6):
+            sub.put(i)
+        assert sub.dropped == 3
+        assert [sub.get(0.01) for _ in range(3)] == [3, 4, 5]
+        assert sub.get(0.01) is None    # timeout, not a hang
+
+
+# -- HTTP endpoints ---------------------------------------------------------
+
+@pytest.fixture()
+def served_recorder():
+    rec = PowerRecorder()
+    rec.add_watts("dummy", 1.0, 50.0)
+    rec.add_watts("dummy", 2.0, 70.0)
+    rec.on_record(rec_for("serve/req0", joules=9.0, tokens=3))
+    rec.on_record(rec_for("serve/req0/prefill", joules=5.0))
+    rec.on_record(rec_for("serve/req0/decode", joules=4.0))
+    with TelemetryServer(rec, sse_keepalive_s=0.05) as srv:
+        yield rec, srv
+    rec.close()
+
+
+class TestTelemetryServer:
+    def test_index_and_404(self, served_recorder):
+        _rec, srv = served_recorder
+        idx = get_json(srv.url + "/")
+        assert "/timeline" in idx["endpoints"]
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(srv.url + "/nope", timeout=5.0)
+        assert ei.value.code == 404
+
+    def test_timeline_params(self, served_recorder):
+        _rec, srv = served_recorder
+        d = get_json(srv.url + "/timeline?window=5")
+        assert d["series"]["dummy"] == [[1.0, 50.0], [2.0, 70.0]]
+        assert d["window_mean_watts"] == pytest.approx(60.0)
+        d = get_json(srv.url + "/timeline?since=1.5")
+        assert d["series"]["dummy"] == [[2.0, 70.0]]
+        assert get_json(srv.url + "/timeline?backend=nope")["series"] == {}
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(srv.url + "/timeline?window=bogus",
+                                   timeout=5.0)
+        assert ei.value.code == 400
+
+    def test_requests_invariant_and_roundtrip(self, served_recorder):
+        rec, srv = served_recorder
+        d = get_json(srv.url + "/requests")
+        assert d["count"] == 1
+        req = d["requests"]["0"]
+        assert req["prefill_joules"] + req["decode_joules"] \
+            == pytest.approx(req["joules"])
+        # bit-faithful round trip: the HTTP payload carries the exact
+        # as_json() strings, which from_json() must invert
+        originals = {r.path: r for r in rec.records()
+                     if r.path.startswith("serve/req")}
+        for line in req["records"]:
+            back = RegionRecord.from_json(line)
+            assert back == originals[back.path]
+            assert back.as_json() == line
+
+    def test_stats_endpoint(self, served_recorder):
+        _rec, srv = served_recorder
+        st = get_json(srv.url + "/stats")
+        assert st["records"] == 3
+        assert st["watts_samples"] == 2
+
+    def test_sse_stream_delivers_new_records(self, served_recorder):
+        rec, srv = served_recorder
+        req = urllib.request.Request(srv.url + "/stream")
+        resp = urllib.request.urlopen(req, timeout=5.0)
+        assert resp.headers["Content-Type"] == "text/event-stream"
+        lines = [resp.readline() for _ in range(3)]     # hello event
+        assert lines[0] == b"event: hello\n"
+        fresh = rec_for("serve/req1", joules=2.5, tokens=1)
+        rec.on_record(fresh)
+        deadline = time.monotonic() + 5.0
+        data = None
+        while time.monotonic() < deadline:
+            line = resp.readline()
+            if line.startswith(b"data: ") and b"serve/req1" in line:
+                data = line[len(b"data: "):-1].decode()
+                break
+        assert data is not None, "record never arrived on the SSE stream"
+        assert RegionRecord.from_json(data) == fresh
+        resp.close()
+
+    def test_close_is_idempotent(self, served_recorder):
+        _rec, srv = served_recorder
+        srv.close()
+        srv.close()
+
+
+# -- end-to-end: engine -> exporter -> recorder -> HTTP ---------------------
+
+def test_serve_engine_requests_over_http(smollm_serve):
+    """The ISSUE invariant, end to end on a live engine: per-request
+    prefill + decode joules equal the request total as seen through
+    ``/requests``, and the round-tripped records match the exporter's
+    bit for bit."""
+    cfg, params = smollm_serve
+    from repro.serve.engine import Request, ServeEngine
+    sensor = DummySensor(watts=100.0)
+    with pmt.Session([sensor], pool=pmt.SensorPool(),
+                     period_s=0.002) as sess:
+        mem = sess.add_exporter(MemoryExporter())
+        with PowerRecorder(poll_period_s=0.01).attach(
+                sess, exporter=mem) as rec:
+            eng = ServeEngine(cfg, params, batch_size=2, max_len=48,
+                              session=sess, prefill_chunk=8)
+            rec.add_stats_provider(eng.stats)
+            reqs = [Request(prompt=[1, 2, 3], max_new_tokens=4),
+                    Request(prompt=[4, 5, 6, 7, 8, 9], max_new_tokens=3)]
+            done = eng.generate(reqs)
+            sess.flush()
+            rec.poll_once()
+            with TelemetryServer(rec) as srv:
+                d = get_json(srv.url + "/requests")
+                st = get_json(srv.url + "/stats")
+                tl = get_json(srv.url + "/timeline?window=60")
+    assert d["count"] == len(done)
+    exported = {r.as_json() for r in mem.records}
+    for rid, req in d["requests"].items():
+        assert req["prefill_joules"] > 0 and req["decode_joules"] > 0, rid
+        assert req["prefill_joules"] + req["decode_joules"] \
+            == pytest.approx(req["joules"], rel=0.02)
+        for line in req["records"]:
+            assert line in exported, "HTTP record not bit-identical"
+            assert RegionRecord.from_json(line).as_json() == line
+    # engine counters ride the /stats payload via the provider hook
+    assert st["requests_admitted"] == len(done)
+    assert "stall_p95_s" in st and "compile_counts" in st
+    assert tl["series"]["dummy"], "no watts timeline over HTTP"
+    assert tl["window_mean_watts"] == pytest.approx(100.0)
+
+
+# -- MemoryExporter thread-safety (satellite) -------------------------------
+
+class TestMemoryExporterConcurrency:
+    def test_concurrent_emit_and_subscribe(self):
+        exp = MemoryExporter()
+        seen = []
+        stop = threading.Event()
+        errors = []
+
+        def churn():
+            # subscribe/unsubscribe continuously while emits run
+            try:
+                while not stop.is_set():
+                    unsub = exp.subscribe(lambda r: None)
+                    unsub()
+            except Exception as e:          # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=churn) for _ in range(3)]
+        for t in threads:
+            t.start()
+        exp.subscribe(seen.append)
+        n = 400
+        emitters = [threading.Thread(
+            target=lambda lo: [exp.emit(rec_for(f"r{lo}/{i}"))
+                               for i in range(n)], args=(k,))
+            for k in range(2)]
+        for t in emitters:
+            t.start()
+        for t in emitters:
+            t.join()
+        stop.set()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert len(exp.records) == 2 * n
+        assert len(seen) == 2 * n       # stable subscriber saw every emit
+
+    def test_raising_subscriber_dropped_with_warning(self):
+        exp = MemoryExporter()
+        calls = []
+
+        def bad(r):
+            calls.append(r)
+            raise ValueError("subscriber bug")
+
+        exp.subscribe(bad)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            exp.emit(rec_for("a"))
+            exp.emit(rec_for("b"))      # bad is gone: no second call
+        assert len(calls) == 1
+        assert any("subscriber dropped" in str(x.message) for x in w)
+        assert [r.path for r in exp.records] == ["a", "b"]
+
+    def test_unsubscribe_is_identity_based(self):
+        exp = MemoryExporter()
+        hits = []
+
+        def cb(r):
+            hits.append(r)
+
+        u1 = exp.subscribe(cb)
+        u2 = exp.subscribe(cb)          # same fn twice
+        u1()
+        exp.emit(rec_for("x"))
+        assert len(hits) == 1           # one registration survives
+        u2()
+        exp.emit(rec_for("y"))
+        assert len(hits) == 1
+
+
+# -- read_jsonl robustness (satellite) --------------------------------------
+
+class TestReadJsonl:
+    def test_skips_truncated_trailing_line(self, tmp_path):
+        good = rec_for("a", joules=3.0)
+        p = tmp_path / "export.jsonl"
+        p.write_text(good.as_json() + "\n"
+                     + good.as_json()[: len(good.as_json()) // 2])
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = read_jsonl(p)
+        assert out == [good]
+        assert any("skipping unparseable" in str(x.message) for x in w)
+
+    def test_skips_wrong_schema_line(self, tmp_path):
+        good = rec_for("a")
+        p = tmp_path / "export.jsonl"
+        p.write_text('{"not": "a record"}\n' + good.as_json() + "\n")
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = read_jsonl(p)
+        assert out == [good]
+        assert len(w) == 1
+
+    def test_strict_mode_still_raises(self, tmp_path):
+        p = tmp_path / "export.jsonl"
+        p.write_text("{broken\n")
+        with pytest.raises(Exception):
+            read_jsonl(p, strict=True)
