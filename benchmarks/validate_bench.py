@@ -125,12 +125,52 @@ def validate_governor(d):
             f"baseline tokens/s, all requests complete")
 
 
+def validate_faults(d):
+    ov = d["overhead"]
+    assert isinstance(ov["ratio"], float) and 0 < ov["ratio"] <= 1.10, ov
+    assert ov["ok"] is True
+    assert d["workload"]["blackout_s"][0] < d["workload"]["blackout_s"][1]
+    assert d["workload"]["blackout_s"][1] <= d["workload"]["flap_s"][0]
+    for run in ("healthy", "chaos", "failover"):
+        r = d[run]
+        _positive_float(r, "seconds", ctx=run)
+        assert r["tokens"] > 0 and r["all_requests_complete"] is True, run
+        assert r["sampler_thread_alive"] is True, run
+        assert r["watts_samples"] > 0, run
+    assert d["chaos"]["tokens"] == d["healthy"]["tokens"]
+    # the blackout actually happened and was surfaced, not papered over
+    assert d["chaos"]["read_errors"] > 0
+    assert d["chaos"]["coverage_gaps"] >= 1
+    assert d["chaos"]["degraded_records"] > 0
+    assert d["chaos"]["session_degraded_spans"] > 0
+    assert len(d["chaos"]["health_events"]) >= 2
+    assert "signal_stale" in d["chaos"]["governor_actions"]
+    assert "signal_fresh" in d["chaos"]["governor_actions"]
+    cap = d["workload"]["cap_watts"]
+    assert d["recap_peak_window_watts"] <= cap * 1.05
+    # with a fallback in the chain the same blackout is a non-event
+    fo = d["failover"]["supervisor"]["counters"]
+    assert fo["failovers"] >= 1 and fo["failbacks"] >= 1, fo
+    assert d["failover"]["coverage_gaps"] == 0
+    assert d["failover"]["degraded_records"] == 0
+    for gates in ("chaos_gates", "failover_gates"):
+        for name, ok in d[gates].items():
+            assert ok is True, (gates, name)
+    assert d["target_met"] is True, "fault-tolerance gates not met"
+    return (f"supervised read {ov['ratio']:.3f}x raw; blackout survived "
+            f"({d['chaos']['read_errors']} read errors, "
+            f"{d['chaos']['degraded_records']} degraded records, cap "
+            f"re-held at {d['recap_peak_window_watts']:.1f} W); failover "
+            f"{fo['failovers']}/{fo['failbacks']} over/back with 0 gaps")
+
+
 VALIDATORS = {
     "pmt_overhead": validate_overhead,
     "pmt_serve": validate_serve,
     "pmt_decode": validate_decode,
     "pmt_prefill": validate_prefill,
     "pmt_governor": validate_governor,
+    "pmt_faults": validate_faults,
 }
 
 

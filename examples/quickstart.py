@@ -287,6 +287,91 @@ def telemetry_mode():
                       f"{timeline['window_mean_watts']:.1f} W")
 
 
+def fault_tolerance_mode():
+    """Degraded mode: what happens when the power sensor itself fails.
+
+    Real power counters drop samples, hang, reset mid-run, and report
+    garbage.  The measurement plane treats sensor failure as a state to
+    *survive and label*, never a reason to crash — or worse, to
+    silently interpolate energy that was never measured:
+
+      * :class:`repro.core.SensorSupervisor` wraps a failover chain of
+        backends behind the ordinary ``Sensor`` interface: per-read
+        deadline, bounded retries with jittered exponential backoff, a
+        circuit breaker per backend (open after N consecutive failures,
+        half-open probe after a cooldown), and sanitization — NaN /
+        negative watts rejected, a MAD-based spike gate, and joules
+        counter-reset *rebasing* so a RAPL wraparound shows up as a
+        monotonic series plus a ``counter_resets`` tick instead of a
+        negative energy delta.  Health is a three-state machine
+        (``OK``/``DEGRADED``/``FAILED``) with transition callbacks.
+      * The background ``RingSampler`` survives any read exception:
+        errors are warned (rate-limited) and counted, and the outage
+        becomes a *coverage gap*.  Spans that overlap a gap resolve
+        with ``degraded=True`` — carried through ``Measurement``,
+        ``RegionRecord``, JSONL/CSV export, and ``session.stats()`` —
+        because an energy integral over a blackout is a lower bound,
+        not a measurement.
+      * :class:`repro.serve.PowerGovernor` takes ``signal_ttl_s`` +
+        ``fail_mode``: when the watts signal goes stale, ``"closed"``
+        (default) stops admitting new work until the signal returns
+        (never throttling blind — a frozen window reading would
+        otherwise keep reporting its last value forever), ``"open"``
+        keeps serving uncapped.  Either way it *re-establishes the cap
+        automatically when samples resume*.
+      * ``PowerRecorder`` polls sampler/supervisor health and emits
+        ``HealthEvent`` transitions on the SSE stream (``event:
+        health``) and the ``/health`` endpoint.
+
+    Fault injection (:class:`repro.core.FaultInjectingSensor`) scripts
+    all of this deterministically — the fault matrix: ``error`` (read
+    raises), ``hang`` (slow read), ``nan`` / ``negative`` / ``spike``
+    (garbage watts), ``stuck`` (frozen sample), ``reset`` (joules
+    counter restarts), ``flap`` (intermittent error) — windowed by
+    read index (bit-exact tests) or by time relative to ``arm()``
+    (live chaos runs).  benchmarks/bench_faults.py drives a governed
+    serve run through a blackout + flap and gates on: sampler thread
+    alive, every request complete, blackout spans ``degraded``, cap
+    re-held after recovery, supervised reads <= 1.1x raw
+    (BENCH_faults.json).  The launcher flag ``repro.launch.serve
+    --supervise`` wraps each backend in a supervisor with a fail-safe
+    fallback.
+    """
+    # Short index-window blackout: once the breaker opens, the faulted
+    # window drains at one half-open probe per cooldown, so it must be
+    # only a few reads long to clear within the demo region.
+    blackout = pmt.Fault("error", start=20, count=3)
+
+    # With a fallback in the chain, a primary blackout is a non-event:
+    # reads fail over (then back), no gap, nothing degraded.
+    flaky = pmt.FaultInjectingSensor(pmt.create("dummy", watts=60.0),
+                                     plan=[blackout])
+    sup = pmt.SensorSupervisor(
+        [flaky, pmt.create("dummy", watts=60.0)],
+        retries=1, backoff_s=0.001, breaker_cooldown_s=0.02)
+    with pmt.Session([sup], pool=pmt.SensorPool(), period_s=0.002) as sess:
+        with sess.region("covered") as r:
+            time.sleep(0.15)
+        m = r.measurements[0]
+        c = sup.health()["counters"]
+        print(f"failover: {m.joules:.3f} J degraded={m.degraded} "
+              f"(failovers={c['failovers']} failbacks={c['failbacks']} "
+              f"state={sup.state})")
+
+    # Without a fallback the outage becomes a labeled coverage gap.
+    flaky = pmt.FaultInjectingSensor(pmt.create("dummy", watts=60.0),
+                                     plan=[blackout])
+    solo = pmt.SensorSupervisor([flaky], retries=0, breaker_cooldown_s=0.01)
+    with pmt.Session([solo], pool=pmt.SensorPool(), period_s=0.002) as sess:
+        ring = dict(sess.samplers())[solo.name]
+        with sess.region("blackout") as r:
+            time.sleep(0.15)
+        m = r.measurements[0]
+        print(f"blackout: {m.joules:.3f} J degraded={m.degraded} "
+              f"(read_errors={ring.health()['read_errors']}, "
+              f"stats={sess.stats()['degraded']} degraded span(s))")
+
+
 def dump_mode():
     """Dump mode: background thread writes a power timeline."""
     sensor = pmt.create("dummy", watts_fn=lambda t: 75.0 + 25.0 * (t % 0.1) / 0.1)
@@ -310,5 +395,7 @@ if __name__ == "__main__":
     serving_mode()
     print("\n== live telemetry & power capping (the control plane)")
     telemetry_mode()
+    print("\n== fault tolerance (supervisor, degraded spans, fail-safe)")
+    fault_tolerance_mode()
     print("\n== dump mode")
     dump_mode()

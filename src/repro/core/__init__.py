@@ -61,10 +61,13 @@ from repro.core.monitor import (PowerMonitor, StepEnergy, StragglerVerdict,
                                 detect_stragglers)
 from repro.core.registry import (available_backend_names, backend_names,
                                  create, get_backend, register_backend)
+from repro.core.faults import FAULT_KINDS, Fault, FaultInjectingSensor
 from repro.core.resolver import SpanResolver, batch_joules_at
 from repro.core.sampler import (DumpThread, LegacyRingSampler, RingSampler,
+                                SamplerCoverageGap, SamplerReadError,
                                 SamplerWindowEvicted, make_ring_sampler)
 from repro.core.sensor import Sample, Sensor, SensorError
+from repro.core.supervisor import DEGRADED, FAILED, OK, SensorSupervisor
 from repro.core.session import (RegionHandle, SensorLease, SensorPool,
                                 Session, default_pool, default_session,
                                 region, set_default_session)
@@ -86,7 +89,11 @@ __all__ = [
     # classic modes (shims over the default session)
     "measure", "dump", "Region", "Measurement", "Measurements",
     "DumpThread", "RingSampler", "LegacyRingSampler", "make_ring_sampler",
-    "SamplerWindowEvicted", "SpanResolver", "batch_joules_at",
+    "SamplerWindowEvicted", "SamplerReadError", "SamplerCoverageGap",
+    "SpanResolver", "batch_joules_at",
+    # fault tolerance
+    "SensorSupervisor", "OK", "DEGRADED", "FAILED",
+    "Fault", "FaultInjectingSensor", "FAULT_KINDS",
     "DumpHeader", "DumpRecord", "read_dump", "total_joules", "average_watts",
     # energy model & metrics
     "EnergyModel", "HardwareSpec", "TPU_V5E",

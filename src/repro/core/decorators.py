@@ -56,6 +56,11 @@ class Measurement:
     ring: its bracketing start sample was overwritten before resolution,
     so ``joules`` covers a truncated window (see
     ``repro.core.sampler.SamplerWindowEvicted``).
+
+    ``degraded`` flags a region that straddled a sampler coverage gap
+    (failed reads / sensor blackout): ``joules`` interpolates across the
+    blackout, so treat the number as a lower-confidence estimate (see
+    ``repro.core.sampler.SamplerCoverageGap``).
     """
 
     sensor: str
@@ -67,6 +72,7 @@ class Measurement:
     end: State
     label: Optional[str] = None
     window_evicted: bool = False
+    degraded: bool = False
 
     def __str__(self) -> str:
         tag = f"{self.sensor}" + (f"[{self.label}]" if self.label else "")

@@ -47,6 +47,10 @@ class RegionRecord:
     # True when the region outlived the sampling ring and resolved from
     # a truncated window (energy under-reported; see SamplerWindowEvicted).
     window_evicted: bool = False
+    # True when the region straddled a sampler coverage gap (failed
+    # reads): joules interpolates across the blackout, lower confidence
+    # (see SamplerCoverageGap).
+    degraded: bool = False
 
     def as_json(self) -> str:
         d = dataclasses.asdict(self)
@@ -72,7 +76,7 @@ class CsvExporter(Exporter):
     """Append-mode CSV sink, one flushed line per record."""
 
     HEADER = ("path,label,depth,sensor,kind,start_s,end_s,seconds,"
-              "joules,watts,flops,tokens,window_evicted\n")
+              "joules,watts,flops,tokens,window_evicted,degraded\n")
 
     def __init__(self, path: str):
         self._lock = threading.Lock()
@@ -93,7 +97,7 @@ class CsvExporter(Exporter):
                 f"{r.joules:.6f}", f"{r.watts:.3f}",
                 "" if r.flops is None else f"{r.flops:.0f}",
                 "" if r.tokens is None else r.tokens,
-                int(r.window_evicted)])
+                int(r.window_evicted), int(r.degraded)])
 
     def close(self) -> None:
         with self._lock:

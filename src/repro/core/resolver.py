@@ -42,7 +42,7 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.export import RegionRecord
-from repro.core.sampler import SamplerWindowEvicted
+from repro.core.sampler import SamplerCoverageGap, SamplerWindowEvicted
 from repro.core.sensor import SensorError
 from repro.core.state import State
 
@@ -110,10 +110,14 @@ def _resolve_key_scalar(session: "Session", key, lease, sampler, todo,
         span = todo[i]
         t0, t1 = span.t0[key], span.t1[key]
         samples, ts = sampler.window(t0, t1)
+        close_failed = False
         if not samples or ts[-1] < t1:
             if not force:
                 continue
-            sampler.sample_now()
+            try:
+                sampler.sample_now()
+            except Exception:   # noqa: BLE001 — resolve from what we have
+                close_failed = True
             samples, ts = sampler.window(t0, t1)
         if not samples:
             span.error = SensorError(
@@ -121,7 +125,10 @@ def _resolve_key_scalar(session: "Session", key, lease, sampler, todo,
             continue
         j0 = _joules_at(samples, ts, t0)
         j1 = _joules_at(samples, ts, t1)
-        per_span_parts[i][key] = (lease, t0, t1, j0, j1, bool(ts[0] > t0))
+        degraded = sampler.gap_overlaps(t0, t1) \
+            or (close_failed and ts[-1] < t1)
+        per_span_parts[i][key] = (lease, t0, t1, j0, j1,
+                                  bool(ts[0] > t0), degraded)
 
 
 def _covered(session: "Session", span: "_Span") -> bool:
@@ -187,10 +194,18 @@ def resolve_spans(session: "Session", spans: Sequence["_Span"],
         t0_list = [todo[i].t0[key] for i in idxs]
         t1_list = [todo[i].t1[key] for i in idxs]
         t_max = max(t1_list)
+        close_failed = False
         if sampler.last_ts() < t_max:
             if not force:
                 continue
-            sampler.sample_now()
+            # The closing sample can fail mid-blackout; resolve from
+            # whatever the ring holds (clamped at the last good sample)
+            # and mark the affected spans degraded instead of raising
+            # out of flush()/close().
+            try:
+                sampler.sample_now()
+            except Exception:   # noqa: BLE001 — resolve from what we have
+                close_failed = True
         ts, js, window_evicted = sampler.window_arrays(min(t0_list), t_max)
         if ts.size == 0:
             for i in idxs:
@@ -206,15 +221,19 @@ def resolve_spans(session: "Session", spans: Sequence["_Span"],
             j0 = batch_joules_at(ts, js, np.array(t0_list))
             j1 = batch_joules_at(ts, js, np.array(t1_list))
         oldest = float(ts[0])
+        newest = float(ts[-1])
         for pos, i in enumerate(idxs):
             span = todo[i]
             evicted = window_evicted and t0_list[pos] < oldest
             pin = span.pins.get(key)
             if pin is not None and pin[0].pin_evicted(pin[1]):
                 evicted = True
+            degraded = sampler.gap_overlaps(t0_list[pos], t1_list[pos]) \
+                or (close_failed and newest < t1_list[pos])
             per_span_parts[i][key] = (
                 lease, t0_list[pos], t1_list[pos],
-                float(j0[pos]), float(j1[pos]), bool(evicted))
+                float(j0[pos]), float(j1[pos]), bool(evicted),
+                bool(degraded))
 
     for i, span in enumerate(todo):
         if span.error is not None:
@@ -229,7 +248,7 @@ def resolve_spans(session: "Session", spans: Sequence["_Span"],
             part = per_span_parts[i].get(key)
             if part is None:
                 continue
-            lease, t0, t1, j0v, j1v, evicted = part
+            lease, t0, t1, j0v, j1v, evicted, degraded = part
             joules = max(0.0, j1v - j0v)
             secs = t1 - t0
             watts = joules / secs if secs > 0 else 0.0
@@ -241,21 +260,29 @@ def resolve_spans(session: "Session", spans: Sequence["_Span"],
                 watts=watts, seconds=secs,
                 start=State(timestamp_s=t0, joules=j0v),
                 end=State(timestamp_s=t1, joules=j1v),
-                label=span.path, window_evicted=evicted))
+                label=span.path, window_evicted=evicted,
+                degraded=degraded))
             records.append(RegionRecord(
                 path=span.path, label=span.label, depth=span.depth,
                 sensor=name, kind=lease.sensor.kind, start_s=t0, end_s=t1,
                 seconds=secs, joules=joules, watts=watts,
                 flops=span.flops, tokens=span.tokens,
-                window_evicted=evicted))
+                window_evicted=evicted, degraded=degraded))
             if evicted:
                 warnings.warn(SamplerWindowEvicted(
                     f"span {span.path!r} outlived the {name!r} ring: "
                     "start bracket evicted; energy resolves from a "
                     "truncated window"))
+            if degraded:
+                warnings.warn(SamplerCoverageGap(
+                    f"span {span.path!r} straddles a {name!r} coverage "
+                    "gap (failed sensor reads); energy interpolates "
+                    "across the blackout"))
         span.resolved = out
-        session._note_span_resolved(span, evicted=any(
-            r.window_evicted for r in records))
+        session._note_span_resolved(
+            span,
+            evicted=any(r.window_evicted for r in records),
+            degraded=any(r.degraded for r in records))
         # Exporter fan-out and the user callback run *after* the caller
         # releases the resolve lock (session._drain_emissions) — a
         # callback is then free to call back into the session.

@@ -50,11 +50,13 @@ the perf trajectory has a few array-core data points.
 from __future__ import annotations
 
 import bisect
+import collections
 import itertools
 import math
 import os
 import threading
 import time
+import warnings
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -62,12 +64,27 @@ import numpy as np
 from repro.core.dumpfile import DumpWriter
 from repro.core.sensor import Sensor
 from repro.core.state import State
+from repro.core.supervisor import DEGRADED, FAILED, OK
 
 
 class SamplerWindowEvicted(UserWarning):
     """A span outlived the ring: its bracketing start sample was
     overwritten before resolution, so its energy resolves from a
     truncated window (flagged ``window_evicted`` on the measurement)."""
+
+
+class SamplerReadError(UserWarning):
+    """A background sampler read raised; the tick was skipped.  The
+    sampler thread survives and keeps ticking — the failed interval is
+    recorded as a coverage gap (see :class:`SamplerCoverageGap`).
+    Warned once per failure streak, not once per tick."""
+
+
+class SamplerCoverageGap(UserWarning):
+    """A resolved span straddles a sampler coverage gap (a stretch of
+    failed reads).  Its energy interpolates *across* the blackout, so
+    the measurement is flagged ``degraded`` instead of being silently
+    reported as trustworthy."""
 
 
 class _PeriodicThread(threading.Thread):
@@ -112,9 +129,22 @@ class DumpThread(_PeriodicThread):
         self._writer = DumpWriter(filename, sensor.name, sensor.kind)
         self._first: Optional[State] = None
         self._prev: Optional[State] = None
+        self.read_errors = 0
+        self._in_error_streak = False
 
     def _tick(self) -> None:
-        st = self._sensor.read()
+        # A transient read failure skips this row (with one warning per
+        # failure streak) instead of killing the dump thread mid-file.
+        try:
+            st = self._sensor.read()
+        except Exception as e:   # noqa: BLE001 — any backend fault
+            self.read_errors += 1
+            if not self._in_error_streak:
+                self._in_error_streak = True
+                warnings.warn(f"dump read failed ({e!r}); skipping row",
+                              SamplerReadError, stacklevel=2)
+            return
+        self._in_error_streak = False
         if self._first is None:
             self._first = st
         if st.watts is not None:
@@ -190,6 +220,16 @@ class RingSampler(_PeriodicThread):
         self._pin_ids = itertools.count(1)
         self._evicted_pins = set()
         self._evictions = 0
+        # Fault tolerance: failed reads never kill the thread — they
+        # open a *coverage gap* from the last good sample until the next
+        # successful read, so resolution can mark spans that straddle a
+        # blackout as degraded instead of silently interpolating.
+        # Mutated only under _write_mutex; read lock-free (GIL-atomic
+        # deque/scalar ops) by gap_overlaps()/health().
+        self.read_errors = 0
+        self._gaps = collections.deque(maxlen=256)   # closed (t0, t1)
+        self._gap_open_ts: Optional[float] = None
+        self._in_error_streak = False
 
     @property
     def sensor(self) -> Sensor:
@@ -202,8 +242,31 @@ class RingSampler(_PeriodicThread):
     # -- writer side -------------------------------------------------------
     def _tick(self) -> None:
         with self._write_mutex:
-            t, j, w = self._sensor.read_raw()
+            try:
+                t, j, w = self._sensor.read_raw()
+            except Exception as e:   # noqa: BLE001 — any backend fault
+                self._note_read_failure(e)
+                return
+            self._note_read_success(t)
             self._publish(t, j, w)
+
+    def _note_read_failure(self, e: Exception) -> None:
+        """Record one failed read (caller holds ``_write_mutex``)."""
+        self.read_errors += 1
+        if self._gap_open_ts is None:
+            self._gap_open_ts = self.last_ts()
+        if not self._in_error_streak:
+            self._in_error_streak = True
+            warnings.warn(
+                f"sampler read failed ({e!r}); coverage gap opened",
+                SamplerReadError, stacklevel=3)
+
+    def _note_read_success(self, t: float) -> None:
+        """Close any open coverage gap (caller holds ``_write_mutex``)."""
+        if self._gap_open_ts is not None:
+            self._gaps.append((self._gap_open_ts, t))
+            self._gap_open_ts = None
+        self._in_error_streak = False
 
     def _publish(self, t: float, j: float, w: float) -> None:
         """Write one row (caller holds ``_write_mutex``)."""
@@ -243,7 +306,15 @@ class RingSampler(_PeriodicThread):
         I/O, they seqlock-retry around the final row publish only.
         """
         with self._write_mutex:
-            t, j, w = self._sensor.read_raw()
+            try:
+                t, j, w = self._sensor.read_raw()
+            except Exception as e:   # noqa: BLE001 — any backend fault
+                # Record the gap (the caller's span will resolve
+                # degraded) but re-raise: the *caller* asked for a
+                # sample and must know it didn't get one.
+                self._note_read_failure(e)
+                raise
+            self._note_read_success(t)
             self._publish(t, j, w)
         return State(timestamp_s=t, joules=j,
                      watts=None if math.isnan(w) else w)
@@ -371,6 +442,45 @@ class RingSampler(_PeriodicThread):
                 if self._wseq == s1:
                     return t
 
+    # -- fault-tolerance readers ------------------------------------------
+    def gap_overlaps(self, t0: float, t1: float) -> bool:
+        """Whether ``[t0, t1]`` straddles a coverage gap (a stretch of
+        failed reads), including a still-open gap.  Spans for which this
+        is true interpolate across a blackout and resolve ``degraded``.
+        """
+        open_ts = self._gap_open_ts
+        if open_ts is not None and t1 > open_ts:
+            return True
+        for g0, g1 in tuple(self._gaps):
+            if g0 < t1 and g1 > t0:
+                return True
+        return False
+
+    def staleness_s(self, now: Optional[float] = None) -> float:
+        """Age of the newest sample on the sensor clock (``inf`` if the
+        ring is empty) — the watchdog signal behind governor signal-TTL
+        and the ``/health`` endpoint."""
+        if now is None:
+            now = self._sensor.now()
+        return now - self.last_ts()
+
+    def health(self) -> dict:
+        """Sampler health snapshot, merged with the sensor's own
+        (supervisor) health when the backend exposes one."""
+        in_gap = self._gap_open_ts is not None
+        h = {"state": FAILED if in_gap else OK,
+             "read_errors": self.read_errors,
+             "in_gap": in_gap,
+             "gaps": len(self._gaps),
+             "staleness_s": self.staleness_s()}
+        sensor_health = getattr(self._sensor, "health", None)
+        if callable(sensor_health):
+            sup = sensor_health()
+            h["supervisor"] = sup
+            if not in_gap and sup.get("state") in (DEGRADED, FAILED):
+                h["state"] = sup["state"]
+        return h
+
     # -- State-compat readers (off the hot path) ---------------------------
     def window(self, t0: float, t1: float
                ) -> Tuple[List[State], List[float]]:
@@ -464,6 +574,20 @@ class LegacyRingSampler(_PeriodicThread):
     def last_ts(self) -> float:
         with self._buf_lock:
             return self._ts[-1] if self._ts else float("-inf")
+
+    # Coverage-gap tracking is an array-core feature; the legacy core
+    # answers the duck-typed API with "no gaps observed".
+    def gap_overlaps(self, t0: float, t1: float) -> bool:
+        return False
+
+    def staleness_s(self, now: Optional[float] = None) -> float:
+        if now is None:
+            now = self._sensor.now()
+        return now - self.last_ts()
+
+    def health(self) -> dict:
+        return {"state": OK, "read_errors": 0, "in_gap": False,
+                "gaps": 0, "staleness_s": self.staleness_s()}
 
     def window(self, t0: float, t1: float
                ) -> Tuple[List[State], List[float]]:

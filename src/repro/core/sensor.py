@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import math
 import threading
 import time
 from typing import Callable, Dict, Optional
@@ -108,17 +109,26 @@ class Sensor(abc.ABC):
         s = self._sample()
         if s.joules is not None:
             jl = s.joules
+            self._last_t = t
+            self._last_w = s.watts
         else:
             if s.watts is None:
                 raise SensorError(
                     f"backend {self.name!r} returned neither joules nor watts")
+            if not math.isfinite(s.watts) or s.watts < 0.0:
+                # A NaN/inf/negative instantaneous watt would poison the
+                # cumulative counter forever: drop the interval (no
+                # accumulation across it) and carry the last good watts
+                # forward so the *next* good interval integrates sanely.
+                self._last_t = t
+                return t, self._accum_joules, s
             if self._last_t is not None:
                 dt = max(0.0, t - self._last_t)
                 w_prev = self._last_w if self._last_w is not None else s.watts
                 self._accum_joules += 0.5 * (w_prev + s.watts) * dt
             jl = self._accum_joules
-        self._last_t = t
-        self._last_w = s.watts
+            self._last_t = t
+            self._last_w = s.watts
         return t, jl, s
 
     def read(self) -> State:

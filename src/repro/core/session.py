@@ -393,8 +393,8 @@ class Session:
         self._emit_queue: Deque[tuple] = collections.deque()
         self._emit_lock = threading.RLock()
         self._resolver: Optional[resolver_mod.SpanResolver] = None
-        self._stats = {"resolved": 0, "evicted": 0, "dropped": 0,
-                       "resolve_errors": 0}
+        self._stats = {"resolved": 0, "evicted": 0, "degraded": 0,
+                       "dropped": 0, "resolve_errors": 0}
         self._tls = threading.local()
         self._anon = itertools.count(1)
         self._closed = False
@@ -595,10 +595,13 @@ class Session:
         self._unpin_span(span)
 
     # -- resolution plumbing (called by repro.core.resolver) -----------------
-    def _note_span_resolved(self, span: _Span, evicted: bool) -> None:
+    def _note_span_resolved(self, span: _Span, evicted: bool,
+                            degraded: bool = False) -> None:
         self._stats["resolved"] += 1
         if evicted:
             self._stats["evicted"] += 1
+        if degraded:
+            self._stats["degraded"] += 1
         self._unpin_span(span)
 
     def _note_span_error(self, span: _Span) -> None:
@@ -730,9 +733,10 @@ class Session:
 
     def stats(self) -> Dict[str, int]:
         """Resolution counters: ``resolved``, ``evicted`` (spans flagged
-        ``window_evicted``), ``dropped`` (fell off the bounded queue —
-        handles still resolve on access), ``resolve_errors``, and
-        ``pending`` (closed spans not yet resolved)."""
+        ``window_evicted``), ``degraded`` (spans that straddled a sensor
+        coverage gap), ``dropped`` (fell off the bounded queue — handles
+        still resolve on access), ``resolve_errors``, and ``pending``
+        (closed spans not yet resolved)."""
         with self._resolve_lock:
             pending = len(self._queue) + sum(
                 1 for s in self._waiting
@@ -740,6 +744,17 @@ class Session:
             out = dict(self._stats)
         out["pending"] = pending
         return out
+
+    def health(self) -> Dict[str, Any]:
+        """Per-backend measurement-plane health, keyed by backend name.
+
+        Each entry is the backend sampler's :meth:`RingSampler.health`
+        snapshot (state ok/degraded/failed, read errors, coverage gaps,
+        staleness, plus the wrapped supervisor's chain health when the
+        backend is a :class:`~repro.core.supervisor.SensorSupervisor`).
+        """
+        return {name: sampler.health()
+                for name, sampler in self.samplers()}
 
     # -- lifecycle -----------------------------------------------------------
     def close(self, timeout: float = 5.0) -> None:

@@ -21,6 +21,8 @@ import numpy as np
 
 import repro.core as pmt
 from repro import configs
+from repro.core.backends.dummy import DummySensor
+from repro.core.supervisor import SensorSupervisor
 from repro.models import model as model_mod
 from repro.serve.engine import Request, ServeEngine, stall_p95
 from repro.serve.governor import PowerGovernor
@@ -60,6 +62,28 @@ def main(argv=None):
                          "over synthetic tenants, and an over-quota "
                          "tenant yields admission priority to in-quota "
                          "ones (soft — never starved)")
+    ap.add_argument("--request-deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline (from "
+                         "submission): requests still waiting or "
+                         "mid-generation past it finish with reason "
+                         "'timeout', keeping partial output; continuous "
+                         "mode only")
+    ap.add_argument("--signal-ttl-s", type=float, default=None,
+                    help="governor power-signal freshness budget: when "
+                         "the newest watts sample is older than this the "
+                         "signal is stale and the governor degrades per "
+                         "--governor-fail-mode")
+    ap.add_argument("--governor-fail-mode", default="closed",
+                    choices=["closed", "open"],
+                    help="stale-signal policy: closed = stop admitting / "
+                         "zero the prefill budget until the signal "
+                         "recovers (protects the power budget); open = "
+                         "run unthrottled (protects availability)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="wrap each backend in a SensorSupervisor with a "
+                         "fail-safe dummy fallback: reads get deadline/"
+                         "retry/circuit-breaker protection and fail over "
+                         "instead of killing the sampler thread")
     ap.add_argument("--telemetry-port", type=int, default=None,
                     help="serve live telemetry on this HTTP port "
                          "(/timeline /requests /stats /stream SSE); "
@@ -76,7 +100,15 @@ def main(argv=None):
     # flat serve/req<N> span are O(1) enqueues; energy resolves on the
     # background resolver thread into the MemoryExporter — the serving
     # thread never waits.
-    session = pmt.Session(["cpuutil", "tpu"])
+    backends = ["cpuutil", "tpu"]
+    if args.supervise:
+        # Fail-safe chain per backend: the real sensor first, a 0 W dummy
+        # last so a dead backend degrades measurements instead of the run.
+        backends = [SensorSupervisor([pmt.create(name),
+                                      DummySensor(watts=0.0)],
+                                     deadline_s=0.25)
+                    for name in backends]
+    session = pmt.Session(backends)
     energy = session.add_exporter(pmt.MemoryExporter())
 
     # Control plane: recorder aggregates records + watts timelines; the
@@ -88,7 +120,9 @@ def main(argv=None):
             and args.mode == "continuous":
         governor = PowerGovernor(recorder,
                                  cap_watts=args.power_cap_watts,
-                                 tenant_quota_j=args.tenant_quota)
+                                 tenant_quota_j=args.tenant_quota,
+                                 signal_ttl_s=args.signal_ttl_s,
+                                 fail_mode=args.governor_fail_mode)
     server = None
     if args.telemetry_port is not None:
         server = TelemetryServer(recorder, port=args.telemetry_port).start()
@@ -104,7 +138,7 @@ def main(argv=None):
                          greedy=args.temperature <= 0.0,
                          temperature=args.temperature or 1.0,
                          seed=args.seed)
-    recorder.add_stats_provider(engine.stats)
+    recorder.attach_engine(engine)
 
     rng = np.random.default_rng(args.seed)
     # heterogeneous lengths: the workload continuous batching is for
@@ -112,7 +146,9 @@ def main(argv=None):
                                         size=rng.integers(2, 9)).tolist(),
                     max_new_tokens=int(rng.integers(2, args.max_new + 1)),
                     tenant=(f"tenant{i % 2}" if args.tenant_quota is not None
-                            else None))
+                            else None),
+                    deadline_s=(args.request_deadline_s
+                                if args.mode == "continuous" else None))
             for i in range(args.requests)]
     done = engine.generate(reqs)
     n_tokens = sum(len(r.out) for r in done)
@@ -155,6 +191,8 @@ def main(argv=None):
               f"(p95 {st['stall_p95_s'] * 1e3:.2f} ms"
               f"{', each bounded by one chunk' if engine.prefill_chunk else ''}"
               f"), compiles {st['compile_counts']}")
+    if args.request_deadline_s is not None:
+        report += f", {st['requests_timed_out']} timed out"
     if governor is not None:
         g = st["governor"]
         watts = recorder.mean_watts(governor.window_s)
@@ -166,6 +204,10 @@ def main(argv=None):
         if g["tenant_joules"]:
             report += f", tenant J {g['tenant_joules']}"
     print(report)
+    if args.supervise:
+        health = recorder.health()
+        print(f"measurement plane: {health['state']} "
+              f"({health['health_events']} health transitions)")
 
     if server is not None:
         server.close()

@@ -192,6 +192,14 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     id: Optional[int] = None        # assigned by the engine at admission
     tenant: Optional[str] = None    # quota accounting key (governor)
+    # Wall-clock budget in seconds, measured from generate() submission
+    # (continuous mode only).  A request past its deadline — waiting,
+    # mid-prefill, or mid-decode — retires with finish_reason "timeout",
+    # keeps whatever tokens it generated, closes its spans cleanly, and
+    # frees its slot.  None = no deadline.
+    deadline_s: Optional[float] = None
+    # "length" (ran to max_new_tokens) or "timeout"; None until served.
+    finish_reason: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -315,6 +323,10 @@ class ServeEngine:
         self._batch_count = 0       # aggregate regions (waves or batches)
         self._request_count = 0
         self.stall_events: List[float] = []
+        self._timeouts = 0          # requests retired past their deadline
+        # rid -> tenant for every admitted request (telemetry's
+        # /requests?tenant= filter reads this via attach_engine).
+        self.request_tenants: Dict[int, str] = {}
         self.compile_counts: Dict[str, int] = {"prefill": 0, "decode": 0,
                                                "prefill_chunk": 0}
         self.cache_dtype = cache_dtype
@@ -414,6 +426,15 @@ class ServeEngine:
         for r in requests:
             if r.max_new_tokens < 1:
                 raise ValueError("max_new_tokens must be >= 1")
+            if r.deadline_s is not None:
+                if r.deadline_s <= 0:
+                    raise ValueError(
+                        f"deadline_s must be > 0, got {r.deadline_s}")
+                if self.mode == "wave":
+                    raise ValueError(
+                        "deadline_s requires continuous mode (waves have "
+                        "no per-request retirement point)")
+            r.finish_reason = None
             plen = len(r.prompt)
             if chunk:
                 padded = math.ceil(plen / chunk) * chunk
@@ -453,6 +474,7 @@ class ServeEngine:
             "pending_prefill_chunks": self.pending_prefill_chunks,
             "stall_events": len(self.stall_events),
             "stall_p95_s": stall_p95(self.stall_events),
+            "requests_timed_out": self._timeouts,
             "compile_counts": dict(self.compile_counts),
         }
         if self.governor is not None:
@@ -464,6 +486,8 @@ class ServeEngine:
         r.id = self._request_count
         self._request_count += 1
         r.out = []
+        if r.tenant is not None:
+            self.request_tenants[r.id] = r.tenant
         return r
 
     def _prefill_request(self, r: Request) -> Tuple[np.ndarray, Any, int]:
@@ -534,6 +558,10 @@ class ServeEngine:
         dec_ctxs: List[Any] = [None] * b
         prefills: Deque[_Prefill] = collections.deque()
         reserved = [False] * b                   # slot held by a prefill
+        # Deadlines anchor at submission; keyed by object identity since
+        # waiting requests have no engine id yet.
+        deadlines = {id(r): time.monotonic() + r.deadline_s
+                     for r in requests if r.deadline_s is not None}
         total_tokens = sum(r.max_new_tokens for r in requests)
         agg_id = self._batch_count
         self._batch_count += 1
@@ -564,14 +592,51 @@ class ServeEngine:
                 retire(j)
             return caches_j
 
-        def retire(j: int) -> None:
+        def retire(j: int, reason: str = "length") -> None:
             # The caller already fenced this slot's last token (np reads
             # block), so closing the spans here attributes correctly.
+            active[j].finish_reason = reason
             close_ctx(dec_ctxs[j])
             dec_ctxs[j] = None
             close_ctx(req_ctxs[j])
             req_ctxs[j] = None
             active[j] = None
+
+        def sweep_deadlines() -> None:
+            """Retire every request past its deadline — waiting (drop
+            from the queue), mid-prefill (free the reserved slot, close
+            the open prefill/request spans), or mid-decode (retire the
+            slot, keeping the tokens generated so far)."""
+            if not deadlines:
+                return
+            now = time.monotonic()
+
+            def expired(r: Request) -> bool:
+                dl = deadlines.get(id(r))
+                return dl is not None and now > dl
+
+            if any(expired(r) for r in waiting):
+                kept = []
+                for r in waiting:
+                    if expired(r):
+                        r.finish_reason = "timeout"
+                        self._timeouts += 1
+                    else:
+                        kept.append(r)
+                waiting[:] = kept
+            for st in [st for st in prefills if expired(st.req)]:
+                prefills.remove(st)
+                reserved[st.slot] = False
+                close_ctx(pf_ctxs[st.slot])
+                pf_ctxs[st.slot] = None
+                close_ctx(req_ctxs[st.slot])
+                req_ctxs[st.slot] = None
+                st.req.finish_reason = "timeout"
+                self._timeouts += 1
+            for j in range(b):
+                if active[j] is not None and expired(active[j]):
+                    retire(j, reason="timeout")
+                    self._timeouts += 1
 
         def update_gauges():
             self.queue_depth = len(waiting)
@@ -585,6 +650,7 @@ class ServeEngine:
             try:
                 while waiting or prefills \
                         or any(r is not None for r in active):
+                    sweep_deadlines()
                     update_gauges()
                     # slot-granular admission: every free slot refills
                     # now (blocking) or enters the chunk queue (chunked)
@@ -684,6 +750,14 @@ class ServeEngine:
                     governed = gov is not None and gov.cap_watts is not None
                     steps = 1 if (prefills or governed) \
                         else min(remaining[j] for j in live)
+                    if steps > 1 and deadlines \
+                            and any(id(active[j]) in deadlines
+                                    for j in live):
+                        # A deadline'd request must pass the sweep
+                        # checkpoint between bursts: bound the
+                        # device-side run so it overshoots by at most a
+                        # few steps, not the whole request.
+                        steps = min(steps, 8)
                     tok_dev = jnp.asarray(tokens)
                     pos_dev = jnp.asarray(pos)
                     outs = []
@@ -767,4 +841,5 @@ class ServeEngine:
         gen = np.asarray(gen)
         for j, r in enumerate(wave):
             r.out = gen[j, :r.max_new_tokens].tolist()
+            r.finish_reason = "length"
         return wave

@@ -93,6 +93,18 @@ class PowerGovernor:
         unlimited).
       backend: restrict the control signal to one backend's watts
         (default: sum over all backends the recorder sees).
+      signal_ttl_s: maximum age of the newest watts sample before the
+        control signal is declared *stale* (sensor blackout / dead
+        sampler).  ``None`` (default) trusts the signal forever — the
+        pre-fault-tolerance behaviour.
+      fail_mode: what a stale signal means.  ``"closed"`` (default, the
+        conservative choice): stop admitting and pause chunk drains
+        until the signal recovers — a power-capped fleet must not go
+        uncapped just because its meter died; liveness is preserved by
+        the engine's existing forced-admit/forced-chunk overrides.
+        ``"open"``: keep serving as if uncapped (availability over the
+        cap).  Decode is never paused on a stale signal in either mode
+        (pausing blind only burns wall-clock).
       clock: injectable time source for deterministic tests.
     """
 
@@ -103,6 +115,8 @@ class PowerGovernor:
                  pause_s: float = 0.005, max_chunks_per_step: int = 2,
                  tenant_quota_j: Union[None, float, Dict[str, float]] = None,
                  backend: Optional[str] = None,
+                 signal_ttl_s: Optional[float] = None,
+                 fail_mode: str = "closed",
                  clock: Callable[[], float] = time.monotonic):
         if cap_watts is not None and cap_watts <= 0:
             raise ValueError(f"cap_watts must be > 0, got {cap_watts}")
@@ -110,6 +124,11 @@ class PowerGovernor:
             raise ValueError(f"admit_frac must be in (0, 1], got {admit_frac}")
         if max_chunks_per_step < 1:
             raise ValueError("max_chunks_per_step must be >= 1")
+        if signal_ttl_s is not None and signal_ttl_s <= 0:
+            raise ValueError(f"signal_ttl_s must be > 0, got {signal_ttl_s}")
+        if fail_mode not in ("open", "closed"):
+            raise ValueError(
+                f"fail_mode must be 'open' or 'closed', got {fail_mode!r}")
         self.recorder = recorder
         self.cap_watts = cap_watts
         self.window_s = float(window_s)
@@ -121,6 +140,10 @@ class PowerGovernor:
         self.max_chunks_per_step = int(max_chunks_per_step)
         self.boost_frac = 0.5 * self.admit_frac
         self.backend = backend
+        self.signal_ttl_s = (None if signal_ttl_s is None
+                             else float(signal_ttl_s))
+        self.fail_mode = fail_mode
+        self._stale_blocked = False
         self._clock = clock
         self._quota = tenant_quota_j
         self._lock = threading.Lock()
@@ -170,12 +193,46 @@ class PowerGovernor:
             return None
         return self.recorder.mean_watts(self.window_s, backend=self.backend)
 
+    def signal_stale(self) -> bool:
+        """Whether the watts signal has outlived ``signal_ttl_s``.
+
+        Stale means: at least one watts sample was ever recorded *and*
+        the newest one is older than the TTL on the governor clock.  A
+        cold start (no samples yet) is not stale — that is the existing
+        "no signal yet" regime, handled by the admission hold.
+        """
+        if self.signal_ttl_s is None or self.recorder is None:
+            return False
+        last = self.recorder.last_watts_ts(backend=self.backend)
+        if last is None:
+            return False
+        return self._clock() - last > self.signal_ttl_s
+
+    def _signal(self) -> Tuple[Optional[float], bool]:
+        """Control signal + freshness: ``(window watts, stale?)``.
+
+        Records the stale/fresh transition once per episode (shared
+        ``_stale_blocked`` state across all levers).  ``mean_watts``
+        anchors its window at the newest *sample* — a frozen trace keeps
+        reporting its last smoothed value forever — so a stale signal
+        must be checked here, not inferred from ``window_watts()``.
+        """
+        w = self.window_watts()
+        stale = self.signal_stale()
+        self._transition("_stale_blocked", stale,
+                         "signal_stale" if stale else "signal_fresh", w)
+        return w, stale
+
     # -- levers (consulted by ServeEngine._run_continuous) -------------------
     def admission_allowed(self) -> bool:
         """Whether a new request may be admitted right now."""
         if self.cap_watts is None:
             return True
-        w = self.window_watts()
+        w, stale = self._signal()
+        if stale:
+            if self.fail_mode == "closed":
+                return False
+            w = None          # fail_open: ignore the frozen window value
         if w is not None:
             self._settle_step(w)
             # Predictive gate: one more slot costs ~the learned step, so
@@ -211,7 +268,12 @@ class PowerGovernor:
         cannot starve."""
         if self.cap_watts is None:
             return 1
-        w = self.window_watts()
+        w, stale = self._signal()
+        if stale:
+            # fail_closed: no chunk drains on a dead meter (the engine's
+            # forced-chunk override keeps an otherwise-idle engine live);
+            # fail_open: drain at the conservative 1/step rate.
+            return 0 if self.fail_mode == "closed" else 1
         if w is None:
             return 1
         if w >= self.cap_watts * self.admit_frac:
@@ -230,7 +292,9 @@ class PowerGovernor:
         up in the energy export like any other scheduled activity."""
         if self.cap_watts is None:
             return 0.0
-        w = self.window_watts()
+        w, stale = self._signal()
+        if stale:
+            return 0.0       # never duty-cycle decode on a dead meter
         if w is None or w <= self.cap_watts * (1.0 + self.hard_over_frac):
             return 0.0
         self._decide("decode_pause", w, detail=f"sleep {self.pause_s}s",
@@ -379,6 +443,9 @@ class PowerGovernor:
                 "throttle_actions": actions,
                 "pause_total_s": self.pause_total_s,
                 "tenant_joules": dict(self._tenant_joules),
+                "signal_ttl_s": self.signal_ttl_s,
+                "fail_mode": self.fail_mode,
+                "signal_stale": self.signal_stale(),
             }
 
     def __repr__(self):

@@ -17,9 +17,10 @@ beyond the stdlib:
     (per-request prefill/decode joules), ``/stats`` (engine counters),
     and ``/stream`` (live SSE feed of new records).
 """
-from repro.telemetry.recorder import PowerRecorder, WattsSample
+from repro.telemetry.recorder import (HealthEvent, PowerRecorder,
+                                      WattsSample)
 from repro.telemetry.server import TelemetryServer
 from repro.telemetry.sse import SSESubscriber, format_sse
 
-__all__ = ["PowerRecorder", "WattsSample", "TelemetryServer",
-           "SSESubscriber", "format_sse"]
+__all__ = ["PowerRecorder", "WattsSample", "HealthEvent",
+           "TelemetryServer", "SSESubscriber", "format_sse"]

@@ -29,6 +29,7 @@ between measurement and both consumers.
 from __future__ import annotations
 
 import collections
+import json
 import math
 import re
 import threading
@@ -43,6 +44,21 @@ class WattsSample(NamedTuple):
     backend: str
     timestamp_s: float
     watts: float
+
+
+class HealthEvent(NamedTuple):
+    """One backend health-state transition (ok/degraded/failed), as
+    observed by the recorder's poll loop.  Fans out on the SSE stream
+    (``event: health``) and is retained for the ``/health`` endpoint."""
+
+    backend: str
+    timestamp_s: float
+    state: str           # ok | degraded | failed
+    prev_state: str
+    detail: str = ""
+
+    def as_json(self) -> str:
+        return json.dumps(self._asdict(), sort_keys=True)
 
 
 _REQ_PATH = re.compile(r"^serve/req(\d+)(?:/(\w+))?$")
@@ -77,8 +93,17 @@ class PowerRecorder:
         self._total_steps = 0
         self._total_watts = 0
         self._subs: List[Callable[[RegionRecord], None]] = []
+        # Health events get their own subscriber list: record
+        # subscribers (e.g. the governor's quota accounting) index into
+        # RegionRecord fields and would break on a HealthEvent.
+        self._health_subs: List[Callable[[HealthEvent], None]] = []
+        self._health_events: collections.deque = \
+            collections.deque(maxlen=1024)
+        self._total_health_events = 0
+        self._last_health_state: Dict[str, str] = {}
         self._unsubs: List[Callable[[], None]] = []
         self._stats_providers: List[Callable[[], Dict[str, Any]]] = []
+        self._engine = None
         self._poll_period_s = max(0.010, float(poll_period_s))
         self._poll_stop = threading.Event()
         self._poll_thread: Optional[threading.Thread] = None
@@ -142,6 +167,13 @@ class PowerRecorder:
         self._unsubs.append(monitor.subscribe(self.on_step_energy))
         return self
 
+    def attach_engine(self, engine) -> "PowerRecorder":
+        """Bind a ``ServeEngine``: its counters join :meth:`stats` and
+        its per-request tenant map labels :meth:`request_energy`."""
+        self._engine = engine
+        self.add_stats_provider(engine.stats)
+        return self
+
     def add_stats_provider(self, fn: Callable[[], Dict[str, Any]]) -> None:
         """Register a callable contributing keys to :meth:`stats` (the
         serve engine's counters ride in this way)."""
@@ -159,6 +191,23 @@ class PowerRecorder:
 
         def unsubscribe() -> None:
             self._drop_subscriber(fn)
+
+        return unsubscribe
+
+    def subscribe_health(self, fn: Callable[[HealthEvent], None]
+                         ) -> Callable[[], None]:
+        """Register ``fn`` for backend health transitions (SSE fan-out);
+        returns an unsubscribe.  Same non-blocking contract as
+        :meth:`subscribe`."""
+        with self._lock:
+            self._health_subs.append(fn)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                for i, sub in enumerate(self._health_subs):
+                    if sub is fn:
+                        del self._health_subs[i]
+                        break
 
         return unsubscribe
 
@@ -202,7 +251,47 @@ class PowerRecorder:
                     n += 1
             if len(ts):
                 self._poll_last_t[name] = float(ts[-1])
+        self._poll_health(sources)
         return n
+
+    def _poll_health(self, sources) -> None:
+        """Watch each sampler's health state; emit a :class:`HealthEvent`
+        on every transition (first observation included when not ok)."""
+        for name, sampler in sources:
+            health_fn = getattr(sampler, "health", None)
+            if not callable(health_fn):
+                continue
+            try:
+                h = health_fn()
+            except Exception:
+                continue          # sampler stopped underneath us
+            state = h.get("state", "ok")
+            with self._lock:
+                prev = self._last_health_state.get(name)
+                if prev == state:
+                    continue
+                self._last_health_state[name] = state
+                if prev is None and state == "ok":
+                    continue      # don't announce the healthy baseline
+                sup = h.get("supervisor") or {}
+                ev = HealthEvent(
+                    backend=name,
+                    timestamp_s=float(sampler.last_ts())
+                    if math.isfinite(sampler.last_ts()) else 0.0,
+                    state=state, prev_state=prev or "ok",
+                    detail=f"read_errors={h.get('read_errors', 0)} "
+                           f"gaps={h.get('gaps', 0)} "
+                           f"active={sup.get('active_backend', name)}")
+                self._health_events.append(ev)
+                self._total_health_events += 1
+                subs = list(self._health_subs)
+            for fn in subs:
+                try:
+                    fn(ev)
+                except Exception as e:
+                    warnings.warn(
+                        f"PowerRecorder health subscriber {fn!r} raised "
+                        f"{type(e).__name__}: {e}")
 
     # -- reads --------------------------------------------------------------
     def watts_series(self, backend: Optional[str] = None,
@@ -247,6 +336,50 @@ class PowerRecorder:
             total = mean if total is None else total + mean
         return total
 
+    def last_watts_ts(self, backend: Optional[str] = None
+                      ) -> Optional[float]:
+        """Timestamp of the newest watts sample (``None`` if none yet) —
+        the governor's signal-TTL staleness check.  With multiple
+        backends summed into one control signal, the *oldest* newest
+        sample governs: the summed signal is only as fresh as its most
+        stale contributor."""
+        with self._lock:
+            newest = [ring[-1][0] for b, ring in self._watts.items()
+                      if ring and (backend is None or b == backend)]
+        return min(newest) if newest else None
+
+    def health(self) -> Dict[str, Any]:
+        """Measurement-plane health for the ``/health`` endpoint:
+        per-backend sampler/supervisor snapshots + recent transitions."""
+        with self._lock:
+            sources = list(self._poll_sources)
+            events = list(self._health_events)
+        backends: Dict[str, Any] = {}
+        worst = "ok"
+        rank = {"ok": 0, "degraded": 1, "failed": 2}
+        for name, sampler in sources:
+            health_fn = getattr(sampler, "health", None)
+            if not callable(health_fn):
+                continue
+            try:
+                h = health_fn()
+            except Exception as e:
+                h = {"state": "failed", "error": f"{type(e).__name__}: {e}"}
+            backends[name] = h
+            state = h.get("state", "ok")
+            if rank.get(state, 0) > rank[worst]:
+                worst = state
+        return {
+            "state": worst,
+            "backends": backends,
+            "events": [ev._asdict() for ev in events],
+            "health_events": self._total_health_events,
+        }
+
+    def health_events(self) -> List[HealthEvent]:
+        with self._lock:
+            return list(self._health_events)
+
     def records(self) -> List[RegionRecord]:
         with self._lock:
             return list(self._records)
@@ -255,7 +388,8 @@ class PowerRecorder:
         with self._lock:
             return list(self._steps)
 
-    def request_energy(self) -> Dict[int, Dict[str, Any]]:
+    def request_energy(self, tenant: Optional[str] = None
+                       ) -> Dict[int, Dict[str, Any]]:
         """Per-request energy as seen through the recorder.
 
         Aggregates ``serve/req<N>`` (and ``.../prefill``, ``.../decode``)
@@ -266,13 +400,22 @@ class PowerRecorder:
         holds each contributing region record's ``as_json()`` string, so
         a client can round-trip the exact resolved records
         (``RegionRecord.from_json``) bit-faithfully.
+
+        When an engine is attached (:meth:`attach_engine`) each bucket
+        carries the request's ``tenant``, and ``tenant=`` filters the
+        result to that tenant's requests.
         """
         out: Dict[int, Dict[str, Any]] = {}
+        engine = self._engine
+        tenants: Dict[int, str] = {}
+        if engine is not None:
+            tenants = dict(getattr(engine, "request_tenants", {}))
 
         def bucket(rid: int) -> Dict[str, Any]:
             return out.setdefault(rid, {
                 "joules": 0.0, "seconds": 0.0, "tokens": 0,
                 "prefill_joules": 0.0, "decode_joules": 0.0,
+                "tenant": tenants.get(rid),
                 "records": []})
 
         for rec in self.records():
@@ -302,6 +445,9 @@ class PowerRecorder:
                     + se.joules
         for d in out.values():
             d["j_per_token"] = d["joules"] / max(d["tokens"], 1)
+        if tenant is not None:
+            out = {rid: d for rid, d in out.items()
+                   if d["tenant"] == tenant}
         return out
 
     def stats(self) -> Dict[str, Any]:
@@ -316,6 +462,8 @@ class PowerRecorder:
                 "watts_backends": {b: len(ring)
                                    for b, ring in self._watts.items()},
                 "subscribers": len(self._subs),
+                "health_events": self._total_health_events,
+                "backend_health": dict(self._last_health_state),
             }
             providers = list(self._stats_providers)
         for fn in providers:

@@ -15,13 +15,23 @@ Endpoints (all JSON unless noted):
     ``window=<s>`` (smoothing window for the mean, default 1.0).
   * ``GET /requests``  — per-request energy with the prefill/decode
     split; each request carries its contributing ``RegionRecord``\\ s as
-    ``as_json()`` strings (bit-faithful round-trip).
+    ``as_json()`` strings (bit-faithful round-trip).  Query:
+    ``tenant=<name>`` filters to one tenant's requests.
   * ``GET /stats``     — recorder counters merged with engine-provided
     counters (``stall_events``/``stall_p95``, compile counts, throttle
     decisions — whatever the attached stats providers contribute).
+  * ``GET /health``    — measurement-plane health: per-backend
+    sampler/supervisor state (ok/degraded/failed), coverage gaps,
+    staleness, and recent health transitions.
   * ``GET /stream``    — ``text/event-stream`` (SSE): a ``hello`` event,
-    then one ``record`` event per newly resolved region record, with
+    then one ``record`` event per newly resolved region record and one
+    ``health`` event per backend health transition, with
     ``: keepalive`` comments while idle.  ``curl -N <url>/stream``.
+
+Malformed query values (non-numeric/non-finite ``window=``/``since=``,
+ill-formed ``tenant=``) return HTTP 400 with a JSON error body; an
+unexpected handler error returns HTTP 500 with a JSON error body — a
+monitoring client never sees a bare HTML traceback.
 
 The serving thread never touches the measurement plane: every read
 goes through the recorder's locked snapshots, and the SSE fan-out is a
@@ -31,22 +41,50 @@ from __future__ import annotations
 
 import http.server
 import json
+import math
+import re
 import threading
 import urllib.parse
 from typing import Optional
 
-from repro.telemetry.recorder import PowerRecorder
+from repro.telemetry.recorder import HealthEvent, PowerRecorder
 from repro.telemetry.sse import SSESubscriber, format_sse
 
 _INDEX = {
     "endpoints": {
         "/timeline": "power series per backend "
                      "(?backend=, ?since=, ?window=)",
-        "/requests": "per-request prefill/decode joules + raw records",
+        "/requests": "per-request prefill/decode joules + raw records "
+                     "(?tenant=)",
         "/stats": "engine + recorder counters",
-        "/stream": "SSE stream of resolved records (curl -N)",
+        "/health": "per-backend sampler/supervisor health + transitions",
+        "/stream": "SSE stream of resolved records + health events "
+                   "(curl -N)",
     },
 }
+
+# Tenant names accepted on the query string: word chars, dot, dash.
+_TENANT_RE = re.compile(r"^[\w.\-]{1,64}$")
+
+
+class _BadQuery(ValueError):
+    """A malformed query parameter (maps to HTTP 400)."""
+
+
+def _parse_float(q, key, default=None, positive=False):
+    """Parse a finite float query parameter or raise :class:`_BadQuery`."""
+    if key not in q:
+        return default
+    raw = q[key]
+    try:
+        v = float(raw)
+    except (TypeError, ValueError):
+        raise _BadQuery(f"{key}={raw!r} is not a number")
+    if not math.isfinite(v):
+        raise _BadQuery(f"{key}={raw!r} must be finite")
+    if positive and v <= 0:
+        raise _BadQuery(f"{key}={raw!r} must be > 0")
+    return v
 
 
 class _Handler(http.server.BaseHTTPRequestHandler):
@@ -78,9 +116,11 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             elif path == "/timeline":
                 self._timeline(q)
             elif path == "/requests":
-                self._requests()
+                self._requests(q)
             elif path == "/stats":
                 self._send_json(self.server.recorder.stats())
+            elif path == "/health":
+                self._send_json(self.server.recorder.health())
             elif path == "/stream":
                 self._stream()
             else:
@@ -88,16 +128,23 @@ class _Handler(http.server.BaseHTTPRequestHandler):
                                 status=404)
         except (BrokenPipeError, ConnectionResetError):
             pass                      # client went away mid-response
+        except _BadQuery as e:
+            try:
+                self._send_json({"error": str(e)}, status=400)
+            except (BrokenPipeError, ConnectionResetError):
+                pass
+        except Exception as e:        # noqa: BLE001 — JSON 500, not a
+            try:                      # bare HTML traceback page
+                self._send_json(
+                    {"error": f"internal error: {type(e).__name__}: {e}"},
+                    status=500)
+            except (BrokenPipeError, ConnectionResetError):
+                pass
 
     def _timeline(self, q) -> None:
         rec: PowerRecorder = self.server.recorder
-        try:
-            since = float(q["since"]) if "since" in q else None
-            window = float(q.get("window", 1.0))
-        except ValueError as e:
-            self._send_json({"error": f"bad query parameter: {e}"},
-                            status=400)
-            return
+        since = _parse_float(q, "since")
+        window = _parse_float(q, "window", default=1.0, positive=True)
         backend = q.get("backend")
         self._send_json({
             "series": rec.watts_series(backend=backend, since=since),
@@ -105,15 +152,22 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             "window_mean_watts": rec.mean_watts(window, backend=backend),
         })
 
-    def _requests(self) -> None:
+    def _requests(self, q) -> None:
         rec: PowerRecorder = self.server.recorder
-        reqs = {str(rid): d for rid, d in rec.request_energy().items()}
-        self._send_json({"requests": reqs, "count": len(reqs)})
+        tenant = q.get("tenant")
+        if tenant is not None and not _TENANT_RE.match(tenant):
+            raise _BadQuery(f"tenant={tenant!r} is not a valid tenant "
+                            "name ([\\w.-], 1-64 chars)")
+        reqs = {str(rid): d
+                for rid, d in rec.request_energy(tenant=tenant).items()}
+        self._send_json({"requests": reqs, "count": len(reqs),
+                         "tenant": tenant})
 
     def _stream(self) -> None:
         rec: PowerRecorder = self.server.recorder
         sub = SSESubscriber()
         unsubscribe = rec.subscribe(lambda r: sub.put(r))
+        unsubscribe_health = rec.subscribe_health(lambda ev: sub.put(ev))
         try:
             self.send_response(200)
             self.send_header("Content-Type", "text/event-stream")
@@ -131,11 +185,14 @@ class _Handler(http.server.BaseHTTPRequestHandler):
                 if item is None:
                     self.wfile.write(b": keepalive\n\n")
                 else:
+                    event = ("health" if isinstance(item, HealthEvent)
+                             else "record")
                     self.wfile.write(format_sse(item.as_json(),
-                                                event="record"))
+                                                event=event))
                 self.wfile.flush()
         finally:
             unsubscribe()
+            unsubscribe_health()
 
 
 class TelemetryServer:

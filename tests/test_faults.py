@@ -1,0 +1,734 @@
+"""Fault-tolerant measurement plane: fault injection, supervised reads,
+hardened samplers, degraded spans, and fail-safe governor/telemetry.
+
+Everything timing-sensitive runs on a fake clock and an injected sleep
+function — the fault plans in :mod:`repro.core.faults` select by read
+index or armed-relative time, so blackout/flap/recovery schedules are
+bit-exact without sleeping.  The few integration tests that need real
+threads (sampler survival, engine deadlines, HTTP hardening) assert
+properties that hold at any speed: the thread is still alive, the
+request finished with reason ``timeout``, the endpoint answered 400.
+"""
+import json
+import math
+import threading
+import time
+import urllib.error
+import urllib.request
+import warnings
+
+import pytest
+
+import repro.core as pmt
+from repro.core.backends.dummy import DummySensor
+from repro.core.faults import FAULT_KINDS, Fault, FaultInjectingSensor
+from repro.core.sampler import (DumpThread, RingSampler, SamplerCoverageGap,
+                                SamplerReadError)
+from repro.core.sensor import Sample, Sensor, SensorError
+from repro.core.supervisor import DEGRADED, FAILED, OK, SensorSupervisor
+from repro.telemetry import HealthEvent, PowerRecorder, TelemetryServer
+
+
+class Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class ScriptSensor(Sensor):
+    """Replays a scripted list of ``Sample``s / exceptions / callables.
+
+    The last item repeats forever, so "heal after N reads" scripts stay
+    short; ``heal()`` truncates to the final (healthy) item.
+    """
+
+    name = "script"
+    kind = "measured"
+    native_period_s = 0.0001
+
+    def __init__(self, script, clock=None):
+        super().__init__(clock=clock)
+        self.script = list(script)
+        self.reads = 0
+
+    def _sample(self) -> Sample:
+        item = self.script[min(self.reads, len(self.script) - 1)]
+        self.reads += 1
+        if isinstance(item, Exception):
+            raise item
+        if callable(item):
+            item = item()
+        return item
+
+    def heal(self):
+        self.script = [self.script[-1]]
+        self.reads = 0
+
+
+def J(x):
+    return Sample(joules=float(x))
+
+
+def W(x):
+    return Sample(watts=float(x))
+
+
+# -- fault plans -------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Fault("frobnicate", start=0)
+        with pytest.raises(ValueError):
+            Fault("error")                       # no selector
+        with pytest.raises(ValueError):
+            Fault("error", start=0, t0_s=0.0)    # both selectors
+        with pytest.raises(ValueError):
+            Fault("flap", start=0, period=2, duty=3)
+        assert set(FAULT_KINDS) >= {"error", "hang", "nan", "negative",
+                                    "spike", "stuck", "reset", "flap"}
+
+    def test_index_window_error(self):
+        clock = Clock()
+        fs = FaultInjectingSensor(DummySensor(watts=42.0, clock=clock),
+                                  plan=[Fault("error", start=2, count=2)])
+        outcomes = []
+        for _ in range(5):
+            clock.advance(0.1)
+            try:
+                fs.read()
+                outcomes.append("ok")
+            except SensorError:
+                outcomes.append("err")
+        assert outcomes == ["ok", "ok", "err", "err", "ok"]
+        assert fs.injected["error"] == 2
+
+    def test_time_window_rebased_by_arm(self):
+        clock = Clock()
+        fs = FaultInjectingSensor(
+            DummySensor(watts=42.0, clock=clock),
+            plan=[Fault("error", t0_s=1.0, t1_s=2.0)])
+        fs.arm()                                 # t=0: window is [1, 2)
+        fs.read()                                # rel_t = 0: healthy
+        clock.advance(1.5)
+        with pytest.raises(SensorError):
+            fs.read()                            # rel_t = 1.5: blackout
+        clock.advance(1.0)
+        fs.read()                                # rel_t = 2.5: recovered
+        fs.arm()                                 # rebase: window moves out
+        clock.advance(0.5)
+        fs.read()                                # rel_t = 0.5 again
+        with pytest.raises(SensorError):
+            clock.advance(1.0)                   # rel_t = 1.5
+            fs.read()
+
+    def test_nan_negative_spike_transforms(self):
+        clock = Clock()
+        for kind, check in [
+                ("nan", lambda w: math.isnan(w)),
+                ("negative", lambda w: w == -42.0),
+                ("spike", lambda w: w == pytest.approx(420.0))]:
+            fs = FaultInjectingSensor(DummySensor(watts=42.0, clock=clock),
+                                      plan=[Fault(kind, start=0, count=1)])
+            _t, _j, w = fs.read_raw()
+            assert check(w), (kind, w)
+            assert fs.injected[kind] == 1
+
+    def test_stuck_freezes_last_good_value(self):
+        clock = Clock()
+        inner = DummySensor(watts_fn=lambda t: 10.0 + t, clock=clock)
+        fs = FaultInjectingSensor(inner,
+                                  plan=[Fault("stuck", start=2, count=2)])
+        seen = []
+        for _ in range(5):
+            clock.advance(1.0)
+            seen.append(fs.read_raw()[2])
+        # reads 2 and 3 replay read 1's watts; read 4 is live again
+        assert seen[2] == seen[1] and seen[3] == seen[1]
+        assert seen[4] > seen[1]
+        assert fs.injected["stuck"] == 2
+
+    def test_reset_rolls_raw_counter_backwards(self):
+        clock = Clock()
+        inner = ScriptSensor([J(10), J(20), J(30), J(40)], clock=clock)
+        fs = FaultInjectingSensor(inner,
+                                  plan=[Fault("reset", start=2, count=None,
+                                              reset_to=0.0)])
+        js = []
+        for _ in range(4):
+            clock.advance(1.0)
+            js.append(fs.read_raw()[1])
+        # the faulted counter restarts from 0 — exactly the RAPL
+        # wraparound shape the supervisor's rebase must absorb
+        assert js == [10.0, 20.0, 0.0, 10.0]
+
+    def test_flap_duty_cycle(self):
+        clock = Clock()
+        fs = FaultInjectingSensor(
+            DummySensor(watts=42.0, clock=clock),
+            plan=[Fault("flap", start=0, period=3, duty=1)])
+        outcomes = []
+        for _ in range(6):
+            clock.advance(0.1)
+            try:
+                fs.read()
+                outcomes.append("ok")
+            except SensorError:
+                outcomes.append("err")
+        assert outcomes == ["err", "ok", "ok", "err", "ok", "ok"]
+
+
+# -- supervisor --------------------------------------------------------------
+
+class TestSupervisor:
+    def test_passthrough_ok_fast_path(self):
+        clock = Clock()
+        sup = SensorSupervisor([DummySensor(watts=42.0, clock=clock)],
+                               clock=clock)
+        for _ in range(3):
+            clock.advance(0.1)
+            sup.read()
+        assert sup.state == OK
+        h = sup.health()
+        assert h["state"] == OK and h["active_index"] == 0
+        assert h["counters"]["reads"] == 3
+        assert h["counters"]["failures"] == 0
+
+    def test_counter_reset_rebase_is_bit_exact(self):
+        clock = Clock()
+        inner = ScriptSensor([J(10), J(20), J(5), J(15)], clock=clock)
+        sup = SensorSupervisor([inner], clock=clock, retries=0)
+        js = []
+        for _ in range(4):
+            clock.advance(1.0)
+            js.append(sup.read_raw()[1])
+        # raw 10,20,5,15: the 20->5 regression is a reset; 5 J of the
+        # new epoch counts as accumulation since the reset
+        assert js == [10.0, 20.0, 25.0, 35.0]
+        assert sup.health()["counters"]["counter_resets"] == 1
+
+    def test_retry_backoff_schedule_is_deterministic(self):
+        clock = Clock()
+        sleeps = []
+        inner = ScriptSensor([SensorError("a"), SensorError("b"), W(5.0)],
+                             clock=clock)
+        sup = SensorSupervisor([inner], clock=clock, retries=2,
+                               backoff_s=0.01, backoff_jitter=0.1,
+                               sleep_fn=sleeps.append)
+        sup.read()
+        expected = [0.01 * (1.0 + 0.1 * (((i * 2654435761) & 0xFF) / 255.0)
+                            ) * (2.0 ** (i - 1))
+                    for i in (1, 2)]
+        assert sleeps == pytest.approx(expected)
+        assert sup.health()["counters"]["retries"] == 2
+        assert sup.state == OK
+
+    def test_failover_and_failback_keep_joules_continuous(self):
+        clock = Clock()
+        primary = ScriptSensor([J(100), SensorError("down"), J(130)],
+                               clock=clock)
+        fallback = ScriptSensor([J(7), J(8), J(9)], clock=clock)
+        transitions = []
+        sup = SensorSupervisor(
+            [primary, fallback], clock=clock, retries=0,
+            breaker_threshold=10, sleep_fn=lambda s: None,
+            on_transition=lambda old, new, d: transitions.append((old, new)))
+        js = []
+        for _ in range(3):
+            clock.advance(1.0)
+            js.append(sup.read_raw()[1])
+        assert transitions == [(OK, DEGRADED), (DEGRADED, OK)]
+        c = sup.health()["counters"]
+        assert c["failovers"] == 1 and c["failbacks"] == 1
+        # one continuous non-decreasing series across both switches
+        assert js == sorted(js)
+
+    def test_breaker_opens_skips_and_half_open_probes(self):
+        clock = Clock()
+        primary = ScriptSensor([SensorError("dead")], clock=clock)
+        fallback = DummySensor(watts=7.0, clock=clock)
+        sup = SensorSupervisor([primary, fallback], clock=clock, retries=0,
+                               breaker_threshold=2, breaker_cooldown_s=1.0,
+                               sleep_fn=lambda s: None)
+        clock.advance(0.1)
+        sup.read()                               # fail 1 -> fallback
+        sup.read()                               # fail 2 -> breaker opens
+        assert sup.health()["backends"][0]["breaker"] == "open"
+        assert sup.health()["counters"]["breaker_opens"] == 1
+        attempts = primary.reads
+        sup.read()                               # open: primary skipped
+        assert primary.reads == attempts
+        assert sup.state == DEGRADED
+        clock.advance(1.5)                       # past the cooldown
+        sup.read()                               # half-open probe fails
+        assert primary.reads == attempts + 1
+        assert sup.health()["backends"][0]["breaker"] == "open"
+        primary.heal()
+        primary.script = [J(50.0)]
+        clock.advance(1.5)
+        sup.read()                               # probe succeeds: closed
+        assert sup.health()["backends"][0]["breaker"] == "closed"
+        assert sup.state == OK
+
+    def test_whole_chain_exhausted_raises_and_recovers(self):
+        clock = Clock()
+        a = ScriptSensor([SensorError("a")], clock=clock)
+        b = ScriptSensor([SensorError("b")], clock=clock)
+        sup = SensorSupervisor([a, b], clock=clock, retries=0,
+                               breaker_threshold=99, sleep_fn=lambda s: None)
+        clock.advance(0.1)
+        with pytest.raises(SensorError):
+            sup.read()
+        assert sup.state == FAILED
+        a.script = [W(42.0)]
+        clock.advance(0.1)
+        sup.read()
+        assert sup.state == OK
+
+    def test_hang_fault_trips_read_deadline(self):
+        clock = Clock()
+        hung = FaultInjectingSensor(
+            DummySensor(watts=42.0, clock=clock),
+            plan=[Fault("hang", start=1, count=None, hang_s=0.5)],
+            clock=clock, sleep_fn=clock.advance)
+        fallback = DummySensor(watts=7.0, clock=clock)
+        sup = SensorSupervisor([hung, fallback], clock=clock,
+                               deadline_s=0.1, retries=0,
+                               breaker_threshold=99, sleep_fn=lambda s: None)
+        clock.advance(0.1)
+        sup.read()                               # read 0: fast, primary
+        assert sup.health()["active_index"] == 0
+        sup.read()                               # read 1 hangs 0.5s > 0.1s
+        assert sup.health()["counters"]["timeouts"] == 1
+        assert sup.health()["active_index"] == 1
+        assert sup.state == DEGRADED
+
+    def test_spike_gate_rejects_outlier_then_recovers(self):
+        clock = Clock()
+        inner = ScriptSensor([W(50.0)] * 16 + [W(5000.0), W(50.0)],
+                             clock=clock)
+        sup = SensorSupervisor([inner], clock=clock, retries=0,
+                               spike_sigma=8.0, sleep_fn=lambda s: None)
+        for _ in range(16):
+            clock.advance(0.1)
+            sup.read()
+        clock.advance(0.1)
+        with pytest.raises(SensorError):
+            sup.read()                           # 5 kW vs a 50 W band
+        assert sup.health()["counters"]["spikes_rejected"] == 1
+        clock.advance(0.1)
+        sup.read()
+        assert sup.state == OK
+
+
+# -- sensor base-class sanitization -----------------------------------------
+
+class TestSensorSanitize:
+    @pytest.mark.parametrize("kind", ["nan", "negative"])
+    def test_bad_watts_interval_dropped_not_integrated(self, kind):
+        clock = Clock()
+        fs = FaultInjectingSensor(DummySensor(watts=42.0, clock=clock),
+                                  plan=[Fault(kind, start=1, count=1)],
+                                  clock=clock)
+        fs.read()                                # t=0: baseline
+        clock.advance(1.0)
+        st = fs.read()                           # faulted interval
+        assert st.joules == pytest.approx(0.0)   # dropped, not poisoned
+        clock.advance(1.0)
+        st = fs.read()                           # good again: integrates
+        assert math.isfinite(st.joules)
+        assert st.joules == pytest.approx(42.0)  # one good 42 W second
+
+
+# -- hardened samplers -------------------------------------------------------
+
+class TestHardenedSampler:
+    def test_gap_open_close_and_overlap(self):
+        clock = Clock()
+        sensor = ScriptSensor([J(1.0)], clock=clock)
+        ring = RingSampler(sensor, period_s=1.0)     # never started: no thread
+        clock.t = 1.0
+        ring.sample_now()
+        sensor.script = [SensorError("blackout")]
+        clock.t = 2.0
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", SamplerReadError)
+            with pytest.raises(SensorError):
+                ring.sample_now()
+        assert ring.read_errors == 1
+        h = ring.health()
+        assert h["state"] == FAILED and h["in_gap"]
+        assert ring.gap_overlaps(1.5, 2.5)           # straddles the open gap
+        sensor.script = [J(2.0)]
+        clock.t = 3.0
+        ring.sample_now()                            # gap closes at t=3
+        h = ring.health()
+        assert h["state"] == OK and h["gaps"] == 1
+        assert ring.gap_overlaps(1.5, 2.0)           # inside [1, 3]
+        assert ring.gap_overlaps(0.5, 1.5)
+        assert not ring.gap_overlaps(0.0, 0.9)
+        assert not ring.gap_overlaps(3.1, 4.0)
+        clock.t = 5.0
+        assert ring.staleness_s() == pytest.approx(2.0)
+
+    def test_sampler_thread_survives_read_errors(self):
+        sensor = FaultInjectingSensor(
+            DummySensor(watts=42.0),
+            plan=[Fault("error", start=5, count=5)])
+        ring = RingSampler(sensor, period_s=0.001)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", SamplerReadError)
+            ring.start()
+            deadline = time.monotonic() + 5.0
+            while sensor._index < 20 and time.monotonic() < deadline:
+                time.sleep(0.005)
+            assert sensor._index >= 20, "sampler stopped ticking"
+            assert ring.is_alive(), "read errors killed the sampler thread"
+            before = ring.last_ts()
+            time.sleep(0.01)
+            ring.stop()
+        assert ring.read_errors == 5
+        assert ring.health()["gaps"] >= 1            # blackout recorded
+        assert ring.last_ts() > before               # still publishing after
+
+    def test_dump_thread_skips_row_on_read_error(self, tmp_path):
+        clock = Clock()
+        sensor = ScriptSensor([W(10.0), SensorError("x"), W(10.0)],
+                              clock=clock)
+        dump = DumpThread(sensor, str(tmp_path / "d.csv"), period_s=1.0)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", SamplerReadError)
+            clock.advance(1.0)
+            dump._tick()
+            clock.advance(1.0)
+            dump._tick()                             # failed read: no raise
+            clock.advance(1.0)
+            dump._tick()
+        assert dump.read_errors == 1
+        dump._writer.close()
+
+    def test_degraded_span_through_session(self):
+        # A region that straddles a scripted blackout resolves degraded:
+        # the paper's interpolation assumption is violated and the
+        # record says so instead of silently reporting made-up joules.
+        sensor = FaultInjectingSensor(
+            DummySensor(watts=50.0),
+            plan=[Fault("error", start=8, count=10_000)])
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", SamplerReadError)
+            warnings.simplefilter("ignore", SamplerCoverageGap)
+            with pmt.Session([sensor], pool=pmt.SensorPool(),
+                             period_s=0.001) as sess:
+                mem = sess.add_exporter(pmt.MemoryExporter())
+                with sess.region("blackout"):
+                    time.sleep(0.1)              # sampler hits read #8
+                sess.flush()
+                stats = sess.stats()
+                health = sess.health()
+        assert mem.records, "region produced no records"
+        assert any(r.degraded for r in mem.records)
+        assert stats["degraded"] >= 1
+        assert health["dummy"]["read_errors"] > 0
+        # degraded flag survives the JSON round trip
+        rt = pmt.RegionRecord.from_json(mem.records[0].as_json())
+        assert rt.degraded == mem.records[0].degraded
+
+
+# -- governor fail-safe ------------------------------------------------------
+
+def governed(clock, **kw):
+    rec = PowerRecorder()
+    gov = __import__("repro.serve.governor",
+                     fromlist=["PowerGovernor"]).PowerGovernor(
+        rec, window_s=0.5, clock=clock, **kw)
+    return gov, rec
+
+
+def feed(rec, clock, watts, seconds=1.0, dt=0.01):
+    end = clock.t + seconds
+    while clock.t < end:
+        clock.advance(dt)
+        rec.add_watts("dummy", clock.t, watts)
+
+
+class TestGovernorFailSafe:
+    def test_fail_closed_blocks_on_stale_signal(self):
+        clock = Clock()
+        gov, rec = governed(clock, cap_watts=100.0, signal_ttl_s=1.0,
+                            fail_mode="closed")
+        feed(rec, clock, 40.0)
+        assert not gov.signal_stale()
+        assert gov.admission_allowed()
+        clock.advance(5.0)                       # sampler went dark
+        assert gov.signal_stale()
+        assert not gov.admission_allowed()
+        assert gov.prefill_chunk_budget(decode_live=True) == 0
+        # liveness: a stale signal must never blind-pause live decode
+        assert gov.maybe_pause_decode() == 0.0
+        actions = [d.action for d in gov.decisions]
+        assert "signal_stale" in actions
+        feed(rec, clock, 40.0)                   # signal recovers
+        assert not gov.signal_stale()
+        assert gov.admission_allowed()
+        actions = [d.action for d in gov.decisions]
+        assert actions.count("signal_stale") == 1
+        assert actions.count("signal_fresh") == 1
+        st = gov.stats()
+        assert st["signal_ttl_s"] == 1.0
+        assert st["fail_mode"] == "closed"
+        assert st["signal_stale"] is False
+
+    def test_fail_open_runs_unthrottled_on_stale_signal(self):
+        clock = Clock()
+        gov, rec = governed(clock, cap_watts=100.0, signal_ttl_s=1.0,
+                            fail_mode="open")
+        feed(rec, clock, 95.0)                   # over the admit threshold
+        assert not gov.admission_allowed()
+        clock.advance(5.0)
+        assert gov.signal_stale()
+        # fail-open: the frozen 95 W reading no longer gates anything
+        assert gov.admission_allowed()
+        assert gov.prefill_chunk_budget(decode_live=True) == 1
+        assert gov.maybe_pause_decode() == 0.0
+
+    def test_cold_start_is_not_stale(self):
+        clock = Clock()
+        gov, _rec = governed(clock, cap_watts=100.0, signal_ttl_s=0.5)
+        clock.advance(100.0)
+        assert not gov.signal_stale()            # no sample yet: cold start
+        assert gov.admission_allowed()
+
+    def test_constructor_validation(self):
+        rec = PowerRecorder()
+        from repro.serve.governor import PowerGovernor
+        with pytest.raises(ValueError):
+            PowerGovernor(rec, cap_watts=10.0, signal_ttl_s=0.0)
+        with pytest.raises(ValueError):
+            PowerGovernor(rec, cap_watts=10.0, fail_mode="explode")
+
+    def test_last_watts_ts_is_min_over_backends(self):
+        rec = PowerRecorder()
+        rec.add_watts("a", 5.0, 10.0)
+        rec.add_watts("b", 2.0, 10.0)
+        # the summed signal is only as fresh as its most stale backend
+        assert rec.last_watts_ts() == pytest.approx(2.0)
+        assert rec.last_watts_ts(backend="a") == pytest.approx(5.0)
+        assert rec.last_watts_ts(backend="nope") is None
+
+
+# -- health events + telemetry hardening ------------------------------------
+
+class _FakeSampler:
+    def __init__(self):
+        self.state = OK
+
+    def health(self):
+        return {"state": self.state, "read_errors": 2, "gaps": 1}
+
+    def last_ts(self):
+        return 1.5
+
+    def timeline(self):
+        import numpy as np
+        z = np.zeros(0)
+        return z, z, z
+
+
+class TestHealthEvents:
+    def test_transitions_emit_events_and_fan_out(self):
+        rec = PowerRecorder()
+        fake = _FakeSampler()
+        got = []
+        rec.subscribe_health(got.append)
+        rec._poll_health([("dummy", fake)])      # ok baseline: no event
+        assert got == []
+        fake.state = FAILED
+        rec._poll_health([("dummy", fake)])
+        fake.state = OK
+        rec._poll_health([("dummy", fake)])
+        assert [(e.state, e.prev_state) for e in got] == \
+            [(FAILED, OK), (OK, FAILED)]
+        assert got[0].backend == "dummy"
+        assert got[0].timestamp_s == pytest.approx(1.5)
+        payload = json.loads(got[0].as_json())
+        assert payload["state"] == FAILED
+        h = rec.health()
+        assert h["state"] == OK
+        assert h["health_events"] == 2
+        assert rec.stats()["health_events"] == 2
+
+    def test_raising_health_subscriber_is_kept(self):
+        rec = PowerRecorder()
+        fake = _FakeSampler()
+        got = []
+
+        def bad(ev):
+            raise RuntimeError("boom")
+
+        rec.subscribe_health(bad)
+        rec.subscribe_health(got.append)
+        fake.state = DEGRADED
+        with warnings.catch_warnings(record=True):
+            warnings.simplefilter("always")
+            rec._poll_health([("dummy", fake)])
+            fake.state = OK
+            rec._poll_health([("dummy", fake)])
+        assert len(got) == 2                     # bad sub never blocked fan-out
+
+
+@pytest.fixture()
+def served():
+    rec = PowerRecorder()
+    srv = TelemetryServer(rec).start()
+    yield rec, srv
+    srv.close()
+    rec.close()
+
+
+def get_error(url):
+    try:
+        with urllib.request.urlopen(url, timeout=5.0):
+            pass
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read().decode())
+    raise AssertionError(f"expected an HTTP error from {url}")
+
+
+class TestServerHardening:
+    @pytest.mark.parametrize("query", [
+        "/timeline?window=abc",
+        "/timeline?window=-1",
+        "/timeline?window=0",
+        "/timeline?window=inf",
+        "/timeline?since=nan",
+        "/requests?tenant=../etc",
+        "/requests?tenant=" + "x" * 65,
+        "/requests?tenant=a%20b",
+    ])
+    def test_malformed_query_is_json_400(self, served, query):
+        _rec, srv = served
+        code, body = get_error(srv.url + query)
+        assert code == 400
+        assert "error" in body
+
+    def test_valid_tenant_filter_passes(self, served):
+        rec, srv = served
+        with urllib.request.urlopen(srv.url + "/requests?tenant=t-0.a",
+                                    timeout=5.0) as resp:
+            body = json.loads(resp.read().decode())
+        assert body["tenant"] == "t-0.a" and body["count"] == 0
+
+    def test_health_endpoint(self, served):
+        rec, srv = served
+        with urllib.request.urlopen(srv.url + "/health",
+                                    timeout=5.0) as resp:
+            body = json.loads(resp.read().decode())
+        assert body["state"] == OK
+        assert body["backends"] == {}
+
+    def test_sse_stream_delivers_health_events(self, served):
+        rec, srv = served
+        resp = urllib.request.urlopen(srv.url + "/stream", timeout=5.0)
+        for _ in range(3):
+            resp.readline()                      # hello event
+        fake = _FakeSampler()
+        fake.state = DEGRADED
+        rec._poll_health([("dummy", fake)])
+        deadline = time.monotonic() + 5.0
+        event = data = None
+        while time.monotonic() < deadline:
+            line = resp.readline()
+            if line == b"event: health\n":
+                event = "health"
+            elif event and line.startswith(b"data: "):
+                data = json.loads(line[len(b"data: "):].decode())
+                break
+        resp.close()
+        assert data is not None, "health event never arrived on /stream"
+        assert data["state"] == DEGRADED and data["backend"] == "dummy"
+
+
+# -- engine request deadlines ------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smollm():
+    import dataclasses
+
+    import jax
+
+    from repro import configs
+    from repro.models import model as M
+    cfg = dataclasses.replace(configs.get_config("smollm-135m",
+                                                 reduced=True),
+                              dtype="float32")
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def make_engine(cfg, params, **kw):
+    import jax.numpy as jnp
+
+    from repro.serve.engine import ServeEngine
+    kw.setdefault("batch_size", 1)
+    kw.setdefault("max_len", 128)
+    kw.setdefault("session", None)
+    kw.setdefault("cache_dtype", jnp.float32)
+    return ServeEngine(cfg, params, **kw)
+
+
+class TestEngineDeadlines:
+    def test_deadline_validation(self, smollm):
+        from repro.serve.engine import Request
+        cfg, params = smollm
+        eng = make_engine(cfg, params)
+        with pytest.raises(ValueError):
+            eng.generate([Request(prompt=[1], max_new_tokens=1,
+                                  deadline_s=-1.0)])
+        wave = make_engine(cfg, params, mode="wave")
+        with pytest.raises(ValueError):
+            wave.generate([Request(prompt=[1], max_new_tokens=1,
+                                   deadline_s=1.0)])
+
+    def test_waiting_request_times_out(self, smollm):
+        from repro.serve.engine import Request
+        cfg, params = smollm
+        eng = make_engine(cfg, params, batch_size=1)
+        eng.generate([Request(prompt=[1, 2], max_new_tokens=2)])  # warmup
+        slow = Request(prompt=[1] * 5, max_new_tokens=24)
+        doomed = Request(prompt=[2] * 5, max_new_tokens=4,
+                         deadline_s=0.001)
+        done = eng.generate([slow, doomed])
+        assert done[0].finish_reason == "length"
+        assert len(done[0].out) == 24
+        # one slot, held by `slow` well past the 1 ms deadline: `doomed`
+        # is swept from the waiting queue without ever being admitted
+        assert done[1].finish_reason == "timeout"
+        assert done[1].out == []
+        assert eng.stats()["requests_timed_out"] == 1
+
+    def test_mid_generation_timeout_keeps_partial_output(self, smollm):
+        from repro.serve.engine import Request
+        cfg, params = smollm
+        eng = make_engine(cfg, params, batch_size=1, max_len=128)
+        eng.generate([Request(prompt=[1, 2], max_new_tokens=2)])  # warmup
+        r = Request(prompt=[3] * 5, max_new_tokens=124, deadline_s=0.02)
+        done = eng.generate([r])
+        assert done[0].finish_reason == "timeout"
+        assert len(done[0].out) < 124                # cut short...
+        assert eng.live_slots == 0                   # ...slot reclaimed
+        assert eng.stats()["requests_timed_out"] == 1
+
+    def test_no_deadline_unchanged(self, smollm):
+        from repro.serve.engine import Request
+        cfg, params = smollm
+        eng = make_engine(cfg, params, batch_size=2)
+        done = eng.generate([Request(prompt=[4] * 3, max_new_tokens=3)
+                             for _ in range(2)])
+        assert all(r.finish_reason == "length" for r in done)
+        assert all(len(r.out) == 3 for r in done)
+        assert eng.stats()["requests_timed_out"] == 0
