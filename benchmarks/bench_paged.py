@@ -1,0 +1,265 @@
+"""Paged KV cache A/B — contiguous per-slot rows vs block-paged pools.
+
+Contiguous serving reserves ``max_len`` cache rows per slot, so the
+cache-memory budget caps concurrency at ``budget / max_len`` even when
+requests use a fraction of the reservation.  Paging allocates pages for
+what a request *actually* needs (prompt + generation, rounded up to the
+page), so the same bytes admit more concurrent requests — and the radix
+prefix tree turns retired prompts into copy-free cache hits for later
+requests sharing a prefix.
+
+Three comparisons on the same bench-scaled model and workload, each on
+a private dummy-backend session (constant watts: J/token is wall-time
+per token, which is what the layout changes):
+
+  * **equal batch** — contiguous vs paged at the same batch and a full
+    pool.  The layout must be ~free: paged J/token <= 1.05x contiguous.
+    The contiguous leg uses the length-aware ("flash") decode path so
+    both engines attend only written positions — apples to apples.
+  * **fixed cache budget** — paged serves the workload with 2x the
+    slots on the *same page budget* as the contiguous leg (requests
+    occupy pages proportional to their actual length, not ``max_len``).
+    Mean admitted concurrency (Little's law: request-span busy seconds
+    over wall seconds) must reach >= 1.5x the contiguous leg's.
+  * **prefix reuse** — a workload sharing a long system prompt, served
+    cold then warm through the same engine.  The warm run must take
+    prefix hits, accrue ``saved_prefill_joules > 0`` (priced at the
+    J/token the engine learned from the cold run's resolved prefill
+    spans), and cut the mean prefill (time-to-first-token) latency
+    below the cold run's.
+
+Pass criteria (written into BENCH_paged.json, validated by CI via
+benchmarks/validate_bench.py):
+  * paged_equal J/token <= 1.05x contiguous;
+  * paged_big mean concurrency >= 1.5x contiguous on the same page
+    budget, all requests completing;
+  * warm prefix run: saved_prefill_joules > 0, prefix_hit_tokens > 0,
+    mean prefill latency < cold mean.
+
+Usage: PYTHONPATH=src python benchmarks/bench_paged.py \
+           [--smoke] [--json-out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as pmt
+from repro import configs
+from repro.models import model as model_mod
+from repro.serve.engine import Request, ServeEngine
+
+SCHEMA_VERSION = 1
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_JSON = os.path.join(_REPO_ROOT, "BENCH_paged.json")
+
+PAGE = 32
+
+
+def bench_cfg():
+    """Bench-local scaled config: big enough that chunks/steps are
+    compute-bound on CPU (the A/B measures layout, not dispatch
+    overhead), fp32 throughout (CPU has no native bf16)."""
+    return dataclasses.replace(
+        configs.get_config("smollm-135m", reduced=True), dtype="float32",
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, d_ff=1024,
+        vocab_size=1024, attn_chunk=128, prefill_chunk=64)
+
+
+def make_workload(n_requests, plen_lo, plen_hi, max_new, vocab, seed=0,
+                  shared_prefix=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=shared_prefix).tolist()
+    reqs = []
+    for _ in range(n_requests):
+        plen = int(rng.integers(plen_lo, plen_hi + 1))
+        reqs.append(Request(
+            prompt=prefix + rng.integers(0, vocab, size=plen).tolist(),
+            max_new_tokens=max_new))
+    return reqs
+
+
+def run_leg(eng, workload, label):
+    """One measured ``generate()`` on a private session; returns
+    throughput/energy plus the span-derived concurrency and prefill
+    latency the gates consume."""
+    with pmt.Session(["dummy"], pool=pmt.SensorPool()) as sess:
+        mem = sess.add_exporter(pmt.MemoryExporter())
+        if hasattr(eng, "on_record"):
+            unsub = mem.subscribe(eng.on_record)
+        eng.session = sess
+        reqs = [dataclasses.replace(r) for r in workload]
+        t0 = time.perf_counter()
+        done = eng.generate(reqs)
+        seconds = time.perf_counter() - t0
+        eng.session = None
+        sess.flush()
+        unsub()
+    tokens = sum(len(r.out) for r in done)
+    assert all(len(r.out) == r.max_new_tokens for r in done), (
+        f"{label}: not every request completed")
+    agg_j = sum(r.joules for r in mem.records
+                if r.path.startswith("serve/batch"))
+    req_busy_s = sum(r.seconds for r in mem.records
+                     if r.path.startswith("serve/req")
+                     and "/" not in r.path[len("serve/req"):])
+    prefill_s = [r.seconds for r in mem.records
+                 if r.path.endswith("/prefill")]
+    leg = {
+        "label": label,
+        "batch_slots": eng.batch,
+        "seconds": seconds,
+        "tokens": tokens,
+        "tokens_per_s": tokens / max(seconds, 1e-9),
+        "joules": agg_j,
+        "j_per_token": agg_j / max(tokens, 1),
+        "mean_concurrency": req_busy_s / max(seconds, 1e-9),
+        "mean_prefill_s": (sum(prefill_s) / len(prefill_s))
+        if prefill_s else 0.0,
+    }
+    if eng.kv_layout == "paged":
+        kc = eng.stats()["kv_cache"]
+        leg["kv_cache"] = {k: kc[k] for k in
+                           ("page_size", "pages_total", "pages_free",
+                            "pages_used", "prefix_hit_tokens",
+                            "saved_prefill_joules")}
+    return leg
+
+
+def main(smoke=False, json_out=DEFAULT_JSON):
+    cfg = bench_cfg()
+    params, _ = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = 256
+    batch_c = 2
+    # the contiguous leg's cache budget, in pages
+    budget_pages = batch_c * max_len // PAGE
+    n_requests = 8 if smoke else 16
+    plen_lo, plen_hi = 56, 72
+    max_new = 6 if smoke else 3
+    # the smoke run is a CI liveness/schema check on a workload too
+    # small to amortize per-dispatch noise in the equal-batch J/token
+    # ratio; the committed full run is the real A/B at the tight gate.
+    jpt_gate = 1.25 if smoke else 1.05
+    workload = make_workload(n_requests, plen_lo, plen_hi, max_new,
+                             cfg.vocab_size)
+
+    def warm(eng):
+        eng.generate([Request(prompt=[1] * (cfg.prefill_chunk + 1),
+                              max_new_tokens=2)])
+
+    # -- leg 1: contiguous baseline (length-aware decode) ------------------
+    eng_c = ServeEngine(cfg, params, batch_size=batch_c, max_len=max_len,
+                        decode_attn_impl="flash", cache_dtype=jnp.float32)
+    warm(eng_c)
+    contiguous = run_leg(eng_c, workload, "contiguous")
+
+    # -- leg 2: paged, equal batch, full pool ------------------------------
+    eng_e = ServeEngine(cfg, params, batch_size=batch_c, max_len=max_len,
+                        kv_layout="paged", kv_page_size=PAGE,
+                        prefix_cache=False, cache_dtype=jnp.float32)
+    warm(eng_e)
+    paged_equal = run_leg(eng_e, workload, "paged_equal")
+
+    # -- leg 3: paged, 2x slots on the contiguous leg's page budget --------
+    eng_b = ServeEngine(cfg, params, batch_size=2 * batch_c,
+                        max_len=max_len, kv_layout="paged",
+                        kv_page_size=PAGE, kv_pool_pages=budget_pages,
+                        prefix_cache=False, cache_dtype=jnp.float32)
+    warm(eng_b)
+    paged_big = run_leg(eng_b, workload, "paged_big")
+
+    # -- leg 4: prefix reuse, cold then warm -------------------------------
+    shared = make_workload(n_requests, 8, 12, max_new, cfg.vocab_size,
+                           seed=1, shared_prefix=3 * PAGE)
+    eng_p = ServeEngine(cfg, params, batch_size=batch_c, max_len=max_len,
+                        kv_layout="paged", kv_page_size=PAGE,
+                        cache_dtype=jnp.float32)
+    warm(eng_p)
+    prefix_cold = run_leg(eng_p, shared, "prefix_cold")
+    prefix_warm = run_leg(eng_p, shared, "prefix_warm")
+
+    jpt_ratio = paged_equal["j_per_token"] / max(contiguous["j_per_token"],
+                                                 1e-12)
+    conc_ratio = paged_big["mean_concurrency"] \
+        / max(contiguous["mean_concurrency"], 1e-9)
+    saved_j = prefix_warm["kv_cache"]["saved_prefill_joules"]
+    hit_tokens = prefix_warm["kv_cache"]["prefix_hit_tokens"]
+    ttft_ratio = prefix_warm["mean_prefill_s"] \
+        / max(prefix_cold["mean_prefill_s"], 1e-9)
+
+    jpt_ok = jpt_ratio <= jpt_gate
+    conc_ok = conc_ratio >= 1.5
+    prefix_ok = saved_j > 0.0 and hit_tokens > 0 and ttft_ratio < 1.0
+    target_met = bool(jpt_ok and conc_ok and prefix_ok)
+
+    print("# paged KV A/B: contiguous vs block-paged pools")
+    print(f"{'leg':14s} {'slots':>5s} {'tok/s':>8s} {'J/token':>9s} "
+          f"{'conc':>6s} {'prefill ms':>11s}")
+    for d in (contiguous, paged_equal, paged_big, prefix_cold, prefix_warm):
+        print(f"{d['label']:14s} {d['batch_slots']:5d} "
+              f"{d['tokens_per_s']:8.1f} {d['j_per_token']:9.4f} "
+              f"{d['mean_concurrency']:6.2f} "
+              f"{d['mean_prefill_s'] * 1e3:11.2f}")
+    print(f"# equal batch: paged J/token {jpt_ratio:.3f}x contiguous "
+          f"(<= {jpt_gate:.2f} {'OK' if jpt_ok else 'FAIL'})")
+    print(f"# fixed {budget_pages}-page budget: {conc_ratio:.2f}x mean "
+          f"concurrency (>= 1.5 {'OK' if conc_ok else 'FAIL'})")
+    print(f"# prefix reuse: {hit_tokens} tokens reused, {saved_j:.2f} J "
+          f"prefill saved, warm TTFT {ttft_ratio:.2f}x cold "
+          f"({'OK' if prefix_ok else 'FAIL'})")
+    print(f"# {'PASS' if target_met else 'FAIL'}")
+
+    if json_out:
+        payload = {
+            "bench": "pmt_paged",
+            "schema_version": SCHEMA_VERSION,
+            "smoke": bool(smoke),
+            "workload": {
+                "arch": "smollm-135m (bench-scaled reduced cfg: 4L/d256, "
+                        "fp32)",
+                "backend": "dummy",
+                "n_requests": n_requests,
+                "batch": batch_c,
+                "max_len": max_len,
+                "page_size": PAGE,
+                "budget_pages": budget_pages,
+                "prompt_lengths": [plen_lo, plen_hi],
+                "max_new_tokens": max_new,
+                "prefill_chunk": cfg.prefill_chunk,
+                "shared_prefix_tokens": 3 * PAGE,
+            },
+            "contiguous": contiguous,
+            "paged_equal": paged_equal,
+            "paged_big": paged_big,
+            "prefix_cold": prefix_cold,
+            "prefix_warm": prefix_warm,
+            "jpt_ratio_paged_vs_contiguous": jpt_ratio,
+            "concurrency_ratio_fixed_budget": conc_ratio,
+            "saved_prefill_joules": saved_j,
+            "prefix_hit_tokens": hit_tokens,
+            "warm_ttft_ratio": ttft_ratio,
+            "target_met": target_met,
+        }
+        with open(json_out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_out}")
+    return target_met
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests)")
+    ap.add_argument("--json-out", default=DEFAULT_JSON,
+                    help="where to write BENCH_paged.json ('' disables)")
+    a = ap.parse_args()
+    ok = main(smoke=a.smoke, json_out=a.json_out)
+    raise SystemExit(0 if ok else 1)

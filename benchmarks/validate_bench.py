@@ -164,6 +164,46 @@ def validate_faults(d):
             f"{fo['failovers']}/{fo['failbacks']} over/back with 0 gaps")
 
 
+def validate_paged(d):
+    w = d["workload"]
+    assert w["page_size"] > 0 and w["budget_pages"] > 0
+    legs = ("contiguous", "paged_equal", "paged_big", "prefix_cold",
+            "prefix_warm")
+    for leg in legs:
+        _positive_float(d[leg], "tokens_per_s", "j_per_token", "seconds",
+                        "joules", ctx=leg)
+        assert d[leg]["tokens"] > 0
+        assert d[leg]["mean_concurrency"] > 0, leg
+    for leg in legs[1:]:
+        kc = d[leg]["kv_cache"]
+        assert kc["page_size"] == w["page_size"]
+        assert kc["pages_free"] + kc["pages_used"] == kc["pages_total"], leg
+    # equal batch: the layout is ~free (smoke workloads are too small to
+    # amortize per-dispatch noise, so the gate relaxes there; the
+    # committed full run holds the tight one)
+    jpt_gate = 1.25 if d.get("smoke") else 1.05
+    assert d["jpt_ratio_paged_vs_contiguous"] <= jpt_gate, \
+        d["jpt_ratio_paged_vs_contiguous"]
+    # fixed page budget: paging buys real admitted concurrency
+    assert d["paged_big"]["kv_cache"]["pages_total"] == w["budget_pages"]
+    assert d["paged_big"]["batch_slots"] >= 2 * d["contiguous"]["batch_slots"]
+    assert d["concurrency_ratio_fixed_budget"] >= 1.5, \
+        d["concurrency_ratio_fixed_budget"]
+    # prefix reuse: hits happened, were priced, and cut TTFT
+    assert d["prefix_hit_tokens"] > 0
+    assert d["saved_prefill_joules"] > 0.0
+    assert d["warm_ttft_ratio"] < 1.0, d["warm_ttft_ratio"]
+    assert d["prefix_warm"]["kv_cache"]["prefix_hit_tokens"] \
+        == d["prefix_hit_tokens"]
+    assert d["target_met"] is True, "paged KV gates not met"
+    return (f"J/token {d['jpt_ratio_paged_vs_contiguous']:.3f}x contiguous "
+            f"at equal batch, {d['concurrency_ratio_fixed_budget']:.2f}x "
+            f"concurrency on {w['budget_pages']} pages, "
+            f"{d['prefix_hit_tokens']} prefix tokens reused "
+            f"({d['saved_prefill_joules']:.1f} J saved, warm TTFT "
+            f"{d['warm_ttft_ratio']:.2f}x cold)")
+
+
 VALIDATORS = {
     "pmt_overhead": validate_overhead,
     "pmt_serve": validate_serve,
@@ -171,6 +211,7 @@ VALIDATORS = {
     "pmt_prefill": validate_prefill,
     "pmt_governor": validate_governor,
     "pmt_faults": validate_faults,
+    "pmt_paged": validate_paged,
 }
 
 

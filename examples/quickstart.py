@@ -225,6 +225,87 @@ def serving_mode():
               f"shape each)")
 
 
+def paged_mode():
+    """Paged KV cache: block pools, radix prefix reuse, batched admission.
+
+    ``ServeEngine(kv_layout="paged")`` replaces the contiguous
+    per-slot KV rows with **block-paged** storage: one physical pool of
+    ``(pages, page_size, ...)`` blocks per cache leaf (page 0 reserved
+    as a write-off scratch page), a host-side allocator, and one
+    ``(batch, pages_per_slot)`` int32 page table shared by every layer.
+    The serving kernels take the table through scalar-prefetch
+    ``BlockSpec`` index maps, so logical position ``t`` of row ``b``
+    reads physical page ``table[b, t // page_size]`` with no gather
+    materialised — and the layout is *transparent*: paged and
+    contiguous engines generate byte-identical tokens
+    (tests/test_serve_paged.py gates this across GQA, sliding-window,
+    and MLA-latent cache families).
+
+    What paging buys:
+
+      * **No per-slot reservation** — a slot's pages are allocated at
+        admission and freed at retirement, so a pool sized well under
+        ``batch * max_len`` serves the same workload; admissions wait
+        on pages instead of over-provisioned rows
+        (``kv_pool_pages=...`` / ``--kv-pool-blocks``).
+      * **Radix-tree prefix reuse** — retired requests' full pages are
+        adopted (refcounted, copy-free) into a radix tree keyed on
+        token ids; a new request whose prompt shares a cached prefix
+        maps those pages into its table and resumes prefill at the
+        match point.  Saved work is *priced*: the engine learns J/token
+        from resolved prefill spans and accrues
+        ``saved_prefill_joules`` for every reused token.  LRU eviction
+        reclaims tree pages under pool pressure; ``prefix_cache=False``
+        / ``--no-prefix-cache`` opts out.
+      * **Batched chunk admissions** — every pending admission's next
+        chunk rides ONE ``(batch, chunk)`` prefill dispatch at per-row
+        offsets (passenger rows masked to the scratch page), so
+        concurrent arrivals stop queueing behind each other's chunks.
+      * **Cache gauges** — ``engine.stats()["kv_cache"]`` (and the
+        telemetry ``/stats`` endpoint) reports pages free/used, prefix
+        hit rate, evictions, and saved prefill joules live; a governor
+        with ``pool_reserve_frac>0`` vetoes admissions when the free
+        fraction drops below the reserve.
+
+    Migration note: the contiguous layout stays the default
+    (``kv_layout="contiguous"``) and the only choice for state-carrying
+    (mamba/xlstm) and encoder-decoder archs; paged requires chunked
+    continuous admission (``prefill_chunk > 0``).  Sliding-window
+    layers store *unwrapped* pages (window applied as an explicit mask)
+    rather than the contiguous path's ring buffer, which is why a page
+    never has to be rewritten when the window slides.
+    benchmarks/bench_paged.py measures admitted concurrency at a fixed
+    cache-memory budget, J/token parity, and warm-vs-cold first-token
+    latency (BENCH_paged.json).
+    """
+    import dataclasses
+
+    import jax
+
+    from repro import configs
+    from repro.models import model as model_mod
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = dataclasses.replace(
+        configs.get_config("smollm-135m", reduced=True), dtype="float32")
+    params, _ = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    with pmt.Session(["dummy"]) as sess:
+        eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                          session=sess, kv_layout="paged", kv_page_size=8)
+        prompts = [[7, 3, 9, 1, 4, 2, 8, 5, 6, 1, 2, 3],   # shared prefix
+                   [7, 3, 9, 1, 4, 2, 8, 5, 9, 9],          # ... with this
+                   [5, 5, 5]]
+        eng.generate([Request(prompt=p, max_new_tokens=4) for p in prompts])
+        # second round: prompts 0/1 share pages the tree now holds
+        eng.generate([Request(prompt=p, max_new_tokens=4) for p in prompts])
+        sess.flush()
+        kc = eng.stats()["kv_cache"]
+        print(f"  pool {kc['pages_used']}/{kc['pages_total']} pages held, "
+              f"prefix hits {kc['prefix_hits']}/{kc['prefix_lookups']} "
+              f"({kc['prefix_hit_tokens']} tokens reused, "
+              f"{kc['prefix_evictions']} evictions)")
+
+
 def telemetry_mode():
     """Live telemetry & power capping: the energy *control* plane.
 
@@ -393,6 +474,8 @@ if __name__ == "__main__":
     listing2_decorators()
     print("\n== serving (continuous batching, per-request J/token)")
     serving_mode()
+    print("\n== paged KV (page pools, radix prefix reuse)")
+    paged_mode()
     print("\n== live telemetry & power capping (the control plane)")
     telemetry_mode()
     print("\n== fault tolerance (supervisor, degraded spans, fail-safe)")

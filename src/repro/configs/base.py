@@ -137,6 +137,10 @@ class ModelConfig:
     # baseline).  Env PMT_PREFILL_CHUNK and ServeEngine(prefill_chunk=)
     # override; see serve/engine.py.
     prefill_chunk: int = 32
+    # paged KV serving: tokens per physical cache page (block).  Used by
+    # ServeEngine(kv_layout="paged") for the page pool, the radix prefix
+    # cache edge length, and the kernels' scalar-prefetch page tables.
+    kv_page_size: int = 16
     ssm_chunk: int = 128             # time-chunk for mamba associative scan
     mla_absorb: bool = True          # DeepSeek absorbed-weights decode path
     kernels: str = "reference"       # reference | pallas

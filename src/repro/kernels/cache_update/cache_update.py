@@ -31,6 +31,73 @@ def _scatter_kernel(slots_ref, new_ref, cache_ref, out_ref):
     out_ref[...] = new_ref[...]
 
 
+def _paged_scatter_kernel(pt_ref, starts_ref, valids_ref, new_ref, pool_ref,
+                          out_ref):
+    # pool_ref is the aliased physical pool (never read): the alias
+    # keeps every row this program does not own; the out BlockSpec's
+    # index map already routed this program's row (or the scratch page,
+    # for masked rows) — see paged_cache_update_pallas.
+    del pt_ref, starts_ref, valids_ref, pool_ref
+    out_ref[...] = new_ref[...]
+
+
+def paged_cache_update_pallas(pool: jnp.ndarray, new: jnp.ndarray,
+                              page_table: jnp.ndarray, starts: jnp.ndarray,
+                              valids: jnp.ndarray,
+                              interpret: bool = False) -> jnp.ndarray:
+    """Paged scatter: row ``t`` of ``new[b]`` lands at logical position
+    ``starts[b] + t`` of row ``b``'s paged cache.
+
+    pool: (P, page_size, F) physical pages shared by all rows.
+    new: (B, T, F) rows to write.  page_table: (B, NB) int32 logical
+    block -> physical page.  starts: (B,) int32 first logical position.
+    valids: (B,) int32 — rows ``t >= valids[b]`` are masked: the index
+    map routes them to the scratch page 0 (whose content is undefined
+    by contract) so pad rows never touch real pages.
+
+    The same kernel covers both paged write paths: decode (T == 1,
+    valids == 1) and chunked prefill (T == chunk, per-row valid
+    lengths).  Returns the updated pool; the input pool is aliased.
+    """
+    p, ps, f = pool.shape
+    b, t, _ = new.shape
+    nb = page_table.shape[1]
+
+    def new_map(bi, ti, pt, starts, valids):
+        return (bi, ti, 0)
+
+    def out_map(bi, ti, pt, starts, valids):
+        # Page-table indirection in the index map: the scalar-prefetch
+        # page table turns (logical position) into (physical page, row).
+        # Masked rows go to scratch page 0 row 0 — revisits of that
+        # index collapse into at most one junk DMA per (b) sweep.
+        pos = jnp.minimum(starts[bi] + ti, nb * ps - 1)
+        ok = ti < valids[bi]
+        page = jnp.where(ok, pt[bi, pos // ps], 0)
+        row = jnp.where(ok, pos % ps, 0)
+        return (page, row, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, f), new_map),                 # new row
+            pl.BlockSpec(memory_space=pl.ANY),                # pool
+        ],
+        out_specs=pl.BlockSpec((1, 1, f), out_map),
+    )
+    return pl.pallas_call(
+        _paged_scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        # index 4 counts the scalar-prefetch operands:
+        # (page_table, starts, valids, new, pool)
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), starts.astype(jnp.int32),
+      valids.astype(jnp.int32), new.astype(pool.dtype), pool)
+
+
 def cache_update_pallas(cache: jnp.ndarray, new: jnp.ndarray,
                         slots: jnp.ndarray,
                         interpret: bool = False) -> jnp.ndarray:

@@ -16,8 +16,10 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cache_update.cache_update import cache_update_pallas
-from repro.kernels.cache_update.ref import cache_update_ref
+from repro.kernels.cache_update.cache_update import (
+    cache_update_pallas, paged_cache_update_pallas)
+from repro.kernels.cache_update.ref import (cache_update_ref,
+                                            paged_cache_update_ref)
 
 
 def _resolve(impl: str) -> str:
@@ -44,3 +46,29 @@ def cache_update(cache: jnp.ndarray, new: jnp.ndarray, slots: jnp.ndarray,
     out = cache_update_pallas(flat, new.astype(cache.dtype).reshape(b, 1, -1),
                               slots, interpret=impl == "pallas_interpret")
     return out.reshape(cache.shape)
+
+
+def paged_cache_update(pool: jnp.ndarray, new: jnp.ndarray,
+                       page_table: jnp.ndarray, starts: jnp.ndarray,
+                       valids: jnp.ndarray, impl: str = "auto") -> jnp.ndarray:
+    """Write ``new[b, t]`` at logical position ``starts[b] + t`` of row
+    ``b``'s paged cache, for ``t < valids[b]`` (masked rows land in the
+    scratch page 0, whose content is undefined).
+
+    pool: (P, page_size, *rest) physical pages shared by all rows.
+    new: (B, T, *rest)   page_table: (B, NB) int32   starts/valids: (B,).
+    One call covers both paged write paths: decode (T == 1) and chunked
+    prefill (T == chunk).  Dispatches on ``PMT_CACHE_UPDATE_IMPL`` like
+    ``cache_update``.
+    """
+    impl = _resolve(impl)
+    if impl == "lax":
+        return paged_cache_update_ref(pool, new, page_table, starts, valids)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown cache_update impl {impl!r}")
+    p, ps = pool.shape[:2]
+    b, t = new.shape[:2]
+    out = paged_cache_update_pallas(
+        pool.reshape(p, ps, -1), new.astype(pool.dtype).reshape(b, t, -1),
+        page_table, starts, valids, interpret=impl == "pallas_interpret")
+    return out.reshape(pool.shape)

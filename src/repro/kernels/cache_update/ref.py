@@ -17,3 +17,33 @@ def cache_update_ref(cache: jnp.ndarray, new: jnp.ndarray,
         return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), starts)
 
     return jax.vmap(row)(cache, new, slots.astype(jnp.int32))
+
+
+def paged_cache_update_ref(pool: jnp.ndarray, new: jnp.ndarray,
+                           page_table: jnp.ndarray, starts: jnp.ndarray,
+                           valids: jnp.ndarray) -> jnp.ndarray:
+    """Paged-scatter oracle: one flat scatter into the page pool.
+
+    pool: (P, page_size, *rest)  new: (B, T, *rest)
+    page_table: (B, NB) int32   starts/valids: (B,) int32.
+
+    Row ``t`` of ``new[b]`` lands at physical row
+    ``page_table[b, (starts[b]+t) // ps] * ps + (starts[b]+t) % ps`` of
+    the flattened pool when ``t < valids[b]``; masked rows are routed to
+    scratch page 0 (row 0), whose content is undefined by contract —
+    parity tests compare pools *excluding* page 0.
+    """
+    p, ps = pool.shape[:2]
+    b, t = new.shape[:2]
+    nb = page_table.shape[1]
+    pos = starts.astype(jnp.int32)[:, None] + jnp.arange(t, dtype=jnp.int32)
+    pos = jnp.minimum(pos, nb * ps - 1)                     # (B, T)
+    ok = jnp.arange(t, dtype=jnp.int32)[None, :] < \
+        valids.astype(jnp.int32)[:, None]
+    page = jnp.where(ok, jnp.take_along_axis(
+        page_table.astype(jnp.int32), pos // ps, axis=1), 0)
+    row = jnp.where(ok, pos % ps, 0)
+    flat = pool.reshape(p * ps, -1)
+    out = flat.at[(page * ps + row).reshape(-1)].set(
+        new.reshape(b * t, -1).astype(pool.dtype))
+    return out.reshape(pool.shape)

@@ -99,6 +99,126 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(lens_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         scale: float, window, softcap, ps: int,
+                         kv_steps: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    cur = lens_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_lo = ki * ps
+
+    # Paged caches are unwrapped (slot == position): pages beyond the
+    # row's new-token position hold nothing, and — for sliding-window
+    # layers — pages wholly below ``cur - window + 1`` are all masked.
+    # Both ends had their DMA elided by the index-map clamp; skip the
+    # compute too.
+    live = k_lo <= cur
+    if window is not None:
+        live &= (k_lo + ps - 1) >= cur - (window - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, hdq)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (ps, hdq)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G, ps)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = cols <= cur
+        if window is not None:
+            valid &= (cur - cols) < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                                   # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1,
+                                                  keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)             # (ps, hdv)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_paged_pallas(q, k_pool, v_pool, page_table, lens, *,
+                                  window=None, softcap=None,
+                                  scale: float = 1.0, v_width=None,
+                                  interpret: bool = False):
+    """Paged flash-decode: q (B, KVH, G, hdq) against physical page
+    pools k_pool/v_pool (P, page_size, KVH, hd*) through a
+    page_table (B, NB) int32.  lens: (B,) int32 new-token positions.
+    One kv block == one physical page; the K/V BlockSpec index maps
+    read the page table from scalar-prefetch SMEM — the paged lookup is
+    literally "the index map reads ``pt[b, block]`` instead of
+    ``(b, block)``", with the same clamp-to-elide-DMA trick on both
+    the beyond-``lens`` tail and (windowed) the below-window head.
+    Returns (B, KVH, G, hdv) in q.dtype.  ``v_width``: read only the
+    first lanes of v (``v_pool`` may alias ``k_pool`` — MLA)."""
+    b, kvh, g, hdq = q.shape
+    ps = k_pool.shape[1]
+    nb = page_table.shape[1]
+    c = nb * ps
+    hdv = v_width if v_width is not None else v_pool.shape[-1]
+
+    def q_map(bi, hi, ki, lens, pt):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, ki, lens, pt):
+        # Clamp the sweep to the row's needed page range, then map the
+        # logical page through the page table: a revisited *physical*
+        # index elides the HBM->VMEM copy entirely.
+        j = ki
+        last = jnp.minimum(lens[bi], c - 1) // ps
+        j = jnp.minimum(j, last)
+        if window is not None:
+            first = jnp.maximum(lens[bi] - (window - 1), 0) // ps
+            j = jnp.maximum(j, jnp.minimum(first, last))
+        return (pt[bi, j], 0, hi, 0)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, window=window, softcap=softcap,
+        ps=ps, kv_steps=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hdq), q_map),
+            pl.BlockSpec((1, ps, 1, hdq), kv_map),
+            pl.BlockSpec((1, ps, 1, hdv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hdv), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # m: running row max
+            pltpu.VMEM((g, 1), jnp.float32),     # l: running row sum
+            pltpu.VMEM((g, hdv), jnp.float32),   # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hdv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens.astype(jnp.int32), page_table.astype(jnp.int32), q, k_pool, v_pool)
+
+
 def decode_attention_pallas(q, k, v, lens, *, ring: bool = False,
                             softcap=None, scale: float = 1.0,
                             block_k: int = 128, v_width=None,

@@ -44,8 +44,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.constants import NEG_INF
-from repro.kernels.decode_attention.decode_attention import \
-    decode_attention_pallas
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_paged_pallas, decode_attention_pallas)
 
 
 def _resolve(impl: str) -> str:
@@ -139,6 +139,127 @@ def decode_attention_lax(q, k, v, lens, *, ring: bool = False,
     l = jnp.sum(w * jnp.stack([p[1] for p in parts]), axis=0)
     acc = jnp.sum(w * jnp.stack([p[2] for p in parts]), axis=0)
     return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def decode_attention_paged_lax(q, k_pool, v_pool, page_table, lens, *,
+                               window=None, softcap=None, scale: float = 1.0,
+                               v_width=None):
+    """Length-aware masked *paged* decode attention in plain XLA.
+
+    q (B, KVH, G, hdq); pools (P, page_size, KVH, *); page_table
+    (B, NB); lens (B,).  Same segment scheme as ``decode_attention_lax``
+    but each live segment first gathers its pages through the page
+    table (the gather is the XLA spelling of the kernel's index-map
+    indirection, and — like the kernel's clamp — it only happens for
+    segments the ``lax.cond`` actually runs, so the read/copy volume
+    still tracks the batch-max fill, not the pool size).  Paged caches
+    are unwrapped: sliding windows arrive as the explicit ``window``
+    mask, which also lets segments wholly below the batch-min window
+    start skip.
+    """
+    b, kvh, g, _ = q.shape
+    ps = k_pool.shape[1]
+    nb = page_table.shape[1]
+    c = nb * ps
+    hdv = v_width if v_width is not None else v_pool.shape[-1]
+    qs = q.astype(jnp.float32) * scale
+    lens = jnp.asarray(lens, jnp.int32)
+    pt = page_table.astype(jnp.int32)
+    alias = v_pool is k_pool
+    seg_pages = -(-nb // _LAX_SEGMENTS)
+
+    def seg_partial(pages, lo):
+        kp = jnp.take(k_pool, pages, axis=0)     # (B, sp, ps, KVH, hd)
+        sp = pages.shape[1] * ps
+        kf = kp.reshape(b, sp, kvh, -1).transpose(0, 2, 1, 3) \
+            .astype(jnp.float32)                 # (B, KVH, S, hdq)
+        if alias:
+            vf = kf[..., :hdv]
+        else:
+            vp = jnp.take(v_pool, pages, axis=0)
+            vf = vp.reshape(b, sp, kvh, -1).transpose(0, 2, 1, 3) \
+                .astype(jnp.float32)[..., :hdv]
+        s = jnp.einsum("bhgd,bhkd->bhgk", qs, kf)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        cols = lo + jnp.arange(sp, dtype=jnp.int32)[None, None, None]
+        cur = lens[:, None, None, None]
+        valid = cols <= cur
+        if window is not None:
+            valid &= (cur - cols) < window
+        s = jnp.where(valid, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        acc = jnp.einsum("bhgk,bhkd->bhgd", p, vf)
+        return m, l, acc
+
+    need = jnp.minimum(jnp.max(lens), c - 1) + 1
+    front = None
+    if window is not None:
+        front = jnp.maximum(jnp.min(lens) - (window - 1), 0)
+    skip = (jnp.full((b, kvh, g, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, 1), jnp.float32),
+            jnp.zeros((b, kvh, g, hdv), jnp.float32))
+    parts = []
+    for pg_lo in range(0, nb, seg_pages):
+        pages = pt[:, pg_lo:pg_lo + seg_pages]
+        lo = pg_lo * ps
+        hi = lo + pages.shape[1] * ps - 1
+        live = need > lo if lo else None
+        if front is not None:
+            f = front <= hi
+            live = f if live is None else live & f
+        if live is None:                # first segment, no window: always
+            parts.append(seg_partial(pages, 0))
+            continue
+        parts.append(jax.lax.cond(
+            live,
+            lambda pages_, lo_=lo: seg_partial(pages_, lo_),
+            lambda pages_: skip, pages))
+    ms = jnp.stack([p[0] for p in parts])
+    m = jnp.max(ms, axis=0)
+    w = jnp.exp(ms - m)             # (S, B, KVH, G, 1); skipped -> 0.0
+    l = jnp.sum(w * jnp.stack([p[1] for p in parts]), axis=0)
+    acc = jnp.sum(w * jnp.stack([p[2] for p in parts]), axis=0)
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def decode_attention_paged(q, k_pool, v_pool, page_table, cur_len, *,
+                           window=None, softcap=None, scale: float = 1.0,
+                           v_width=None, impl: str = "auto"):
+    """One-token decode attention over a *paged* cache.
+
+    q: (B, 1, H, hdq) new-token queries.  k_pool/v_pool:
+    (P, page_size, KVH, hd*) physical pages shared by all rows, *after*
+    the new token's k/v landed (``paged_cache_update``).  page_table:
+    (B, NB) int32 logical block -> physical page.  cur_len: (B,) int32.
+    Paged caches store sliding-window layers unwrapped, so ``window``
+    is an explicit mask here (no ``ring``).  ``v_width`` as in
+    ``decode_attention``.  Returns (B, 1, H, hdv) in q.dtype.
+    """
+    impl = _resolve(impl)
+    b, sq, h, hdq = q.shape
+    if sq != 1:
+        raise ValueError(f"decode_attention_paged takes one query token, "
+                         f"got Sq={sq}")
+    kvh = k_pool.shape[2]
+    if h % kvh:
+        raise ValueError(f"H={h} not divisible by KVH={kvh}")
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hdq)
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    kw = dict(window=window, softcap=softcap, scale=scale, v_width=v_width)
+    if impl == "lax":
+        out = decode_attention_paged_lax(qg, k_pool, v_pool, page_table,
+                                         lens, **kw)
+    elif impl in ("pallas", "pallas_interpret"):
+        out = decode_attention_paged_pallas(
+            qg, k_pool, v_pool, page_table, lens,
+            interpret=impl == "pallas_interpret", **kw)
+    else:
+        raise ValueError(f"unknown decode_attention impl {impl!r}")
+    return out.reshape(b, 1, h, out.shape[-1])
 
 
 def decode_attention(q, k, v, cur_len, *, ring: bool = False,

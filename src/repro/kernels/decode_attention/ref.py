@@ -51,7 +51,7 @@ def pick_block_k(cache_size: int, block_k: int) -> int:
 
 
 def _block_step(q, k_blk, v_blk, k_lo, lens, m, l, acc, *,
-                cache_size: int, ring: bool, softcap):
+                cache_size: int, ring: bool, softcap, window=None):
     """Fold one kv block into the online-softmax accumulator.
 
     q: (B, KVH, G, hdq) fp32, pre-scaled.  k_blk: (B, bk, KVH, hdq),
@@ -59,6 +59,11 @@ def _block_step(q, k_blk, v_blk, k_lo, lens, m, l, acc, *,
     the block (python int or traced scalar).  lens: (B,) int32.
     m, l: (B, KVH, G, 1) fp32 running max/sum.  acc: (B, KVH, G, hdv)
     fp32.  Returns the updated (m, l, acc).
+
+    ``window`` (non-ring only) masks positions below ``cur - window + 1``
+    — the *unwrapped* sliding-window layout the paged cache uses, where
+    slot ``s`` always holds position ``s`` and the window is an explicit
+    mask instead of a ring size.
     """
     bk = k_blk.shape[1]
     s = jnp.einsum("bhgd,bkhd->bhgk", q, k_blk.astype(jnp.float32))
@@ -70,6 +75,8 @@ def _block_step(q, k_blk, v_blk, k_lo, lens, m, l, acc, *,
         valid = jnp.mod(cur - cols, cache_size) <= cur
     else:
         valid = cols <= cur
+        if window is not None:
+            valid &= (cur - cols) < window
     s = jnp.where(valid, s, NEG_INF)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m, m_cur)
@@ -107,4 +114,53 @@ def decode_attention_ref(q, k, v, lens, *, ring: bool = False,
     # same loop structure as the implementations, so the comparison is
     # exact: block skipping is the only thing the fast paths add.
     m, l, acc = jax.lax.fori_loop(0, c // bk, body, (m, l, acc))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def decode_attention_paged_ref(q, k_pool, v_pool, page_table, lens, *,
+                               window=None, softcap=None, scale: float = 1.0,
+                               v_width=None):
+    """Blockwise twin of the *paged* flash-decode kernel.
+
+    q: (B, KVH, G, hdq); k_pool/v_pool: (P, page_size, KVH, hd*)
+    physical pages (``v_pool`` may be ``k_pool`` with ``v_width`` set —
+    the MLA concatenated latent cache); page_table: (B, NB) int32;
+    lens: (B,) int32.
+
+    Gathers the logical (B, NB*page_size, KVH, *) view through the page
+    table, then folds every page with ``block_k == page_size`` — the
+    exact blocking the paged kernel uses, so skipped pages (beyond
+    ``lens`` or wholly below the window) are bit-neutral updates and the
+    comparison is bitwise, same as the contiguous pair.
+    Paged caches are always *unwrapped* (slot == position): sliding
+    windows arrive as the explicit ``window`` mask, never ``ring``.
+    """
+    b, kvh, g, _ = q.shape
+    p, ps = k_pool.shape[0], k_pool.shape[1]
+    nb = page_table.shape[1]
+    c = nb * ps
+    pt = page_table.astype(jnp.int32)
+    k = jnp.take(k_pool, pt, axis=0).reshape(b, c, kvh, k_pool.shape[-1])
+    if v_pool is k_pool:
+        v = k
+    else:
+        v = jnp.take(v_pool, pt, axis=0).reshape(b, c, kvh, v_pool.shape[-1])
+    if v_width is not None:
+        v = v[..., :v_width]
+    hdv = v.shape[-1]
+    qs = q.astype(jnp.float32) * scale
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (b,))
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k, j * ps, ps, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, j * ps, ps, axis=1)
+        return _block_step(qs, k_blk, v_blk, j * ps, lens, m, l, acc,
+                           cache_size=c, ring=False, softcap=softcap,
+                           window=window)
+
+    m = jnp.full((b, kvh, g, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kvh, g, 1), jnp.float32)
+    acc = jnp.zeros((b, kvh, g, hdv), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nb, body, (m, l, acc))
     return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

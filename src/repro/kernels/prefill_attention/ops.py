@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.constants import DEFAULT_BLOCK_K, NEG_INF
-from repro.kernels.prefill_attention.prefill_attention import \
-    prefill_attention_pallas
+from repro.kernels.prefill_attention.prefill_attention import (
+    prefill_attention_paged_pallas, prefill_attention_pallas)
 
 
 def _resolve(impl: str) -> str:
@@ -84,6 +84,10 @@ def prefill_attention_lax(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
         last = off - 1
         pos = last - jnp.mod(last - slots, c)
         cache_ok = (pos >= 0) & (q_pos - pos < window)     # (B,1,T,1,C)
+    elif window is not None:
+        # unwrapped sliding window (paged layout): slot == position,
+        # window applied as an explicit mask
+        cache_ok = (slots < off) & (q_pos - slots < window)
     else:
         cache_ok = jnp.broadcast_to(slots < off, (b, 1, t, 1, c))
     diff = (jnp.arange(t, dtype=jnp.int32)[:, None]
@@ -98,6 +102,76 @@ def prefill_attention_lax(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhtgs,bshd->bhtgd", p, v_all.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def prefill_attention_paged_lax(q, k_chunk, v_chunk, k_pool, v_pool,
+                                page_table, offs, *, window=None,
+                                softcap=None, scale: float = 1.0,
+                                v_width=None):
+    """Fused masked *paged* chunk attention in plain XLA.
+
+    Gathers the logical (B, NB*page_size, KVH, *) cache view through
+    the page table — the XLA spelling of the kernel's index-map
+    indirection — then runs the same fused masked softmax as
+    ``prefill_attention_lax`` (chunked prefill is compute-bound, so
+    the one-gather copy is in the noise next to the T-query matmuls).
+    Paged caches are unwrapped: ``window`` is an explicit mask.
+    """
+    b, kvh, t, g, _ = q.shape
+    ps = k_pool.shape[1]
+    nb = page_table.shape[1]
+    pt = page_table.astype(jnp.int32)
+    k_cache = jnp.take(k_pool, pt, axis=0).reshape(b, nb * ps, kvh,
+                                                   k_pool.shape[-1])
+    if v_pool is k_pool:
+        v_cache = k_cache
+    else:
+        v_cache = jnp.take(v_pool, pt, axis=0).reshape(b, nb * ps, kvh,
+                                                       v_pool.shape[-1])
+    return prefill_attention_lax(q, k_chunk, v_chunk, k_cache, v_cache,
+                                 offs, ring=False, window=window,
+                                 softcap=softcap, scale=scale,
+                                 v_width=v_width)
+
+
+def prefill_attention_paged(q, k_chunk, v_chunk, k_pool, v_pool, page_table,
+                            offset, *, window=None, softcap=None,
+                            scale: float = 1.0, v_width=None,
+                            impl: str = "auto"):
+    """Chunked-prefill attention over a *paged* cache prefix.
+
+    q: (B, T, H, hdq) chunk queries at positions ``offset[b] + i``.
+    k_chunk/v_chunk: (B, T, KVH, *) — the chunk's own keys/values (NOT
+    yet scattered into the pool).  k_pool/v_pool: (P, page_size, KVH, *)
+    physical pages holding positions ``< offset[b]`` of every row,
+    addressed through page_table (B, NB) int32.  offset: scalar or (B,)
+    int32.  Paged caches store sliding-window layers unwrapped, so
+    ``window`` is an explicit mask (no ``ring``).  ``v_width`` as in
+    ``prefill_attention``.  Returns (B, T, H, hdv) in q.dtype.
+    """
+    impl = _resolve(impl)
+    b, t, h, hdq = q.shape
+    if k_chunk.shape[1] != t:
+        raise ValueError(f"chunk keys cover {k_chunk.shape[1]} tokens but "
+                         f"the query chunk has {t}")
+    kvh = k_pool.shape[2]
+    if h % kvh:
+        raise ValueError(f"H={h} not divisible by KVH={kvh}")
+    g = h // kvh
+    qg = q.reshape(b, t, kvh, g, hdq).transpose(0, 2, 1, 3, 4)
+    offs = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    kw = dict(window=window, softcap=softcap, scale=scale, v_width=v_width)
+    if impl == "lax":
+        out = prefill_attention_paged_lax(qg, k_chunk, v_chunk, k_pool,
+                                          v_pool, page_table, offs, **kw)
+    elif impl in ("pallas", "pallas_interpret"):
+        out = prefill_attention_paged_pallas(
+            qg, k_chunk, v_chunk, k_pool, v_pool, page_table, offs,
+            interpret=impl == "pallas_interpret", **kw)
+    else:
+        raise ValueError(f"unknown prefill_attention impl {impl!r}")
+    hdv = out.shape[-1]
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, t, h, hdv)
 
 
 def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,

@@ -120,6 +120,153 @@ def _prefill_kernel(offs_ref, q_ref, kx_ref, vx_ref, kc_ref, vc_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel(offs_ref, pt_ref, q_ref, kx_ref, vx_ref, kc_ref,
+                          vc_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                          scale: float, window, softcap,
+                          ps: int, bk_t: int, cache_steps: int,
+                          total_steps: int, chunk: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    off = offs_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, 1), 0)
+
+    def fold(k_blk, v_blk, valid):
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (T, G, hdq)
+        s = jax.lax.dot_general(
+            q, k_blk.astype(jnp.float32), (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (T, G, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                                # (T, G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1,
+                                                  keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v_blk.astype(jnp.float32), (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (T, G, hdv)
+        acc_ref[...] = alpha * acc_ref[...] + pv
+        m_ref[...] = m_new
+
+    # -- phase 1: the paged cache prefix.  One block == one physical
+    # page; unwrapped layout (slot == position), so beyond-prefix pages
+    # and — windowed — pages wholly below the first query's window
+    # start are both skippable (their DMA was elided by the index map).
+    k_lo = ki * ps
+    live = (ki < cache_steps) & (k_lo < off)
+    if window is not None:
+        live &= (k_lo + ps - 1) >= off - (window - 1)
+
+    @pl.when(live)
+    def _cache_phase():
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ps), 2)
+        q_pos = off + q_idx                                # (T, 1, 1)
+        valid = jnp.broadcast_to(cols < off, (chunk, 1, ps))
+        if window is not None:
+            valid &= (q_pos - cols) < window
+        fold(kc_ref[0, :, 0, :], vc_ref[0, :, 0, :], valid)
+
+    # -- phase 2: the chunk's own keys (causal; identical to the
+    # contiguous kernel — the chunk is not paged).
+    @pl.when(ki >= cache_steps)
+    def _chunk_phase():
+        j_lo = (ki - cache_steps) * bk_t
+        cols = j_lo + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk_t), 2)
+        diff = q_idx - cols                                # (T, 1, bk_t)
+        valid = diff >= 0
+        if window is not None:
+            valid &= diff < window
+        fold(kx_ref[0, :, 0, :], vx_ref[0, :, 0, :], valid)
+
+    @pl.when(ki == total_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def prefill_attention_paged_pallas(q, k_chunk, v_chunk, k_pool, v_pool,
+                                   page_table, offs, *, window=None,
+                                   softcap=None, scale: float = 1.0,
+                                   v_width=None, interpret: bool = False):
+    """Paged chunked-prefill: q (B, KVH, T, G, hdq); chunk k/v
+    (B, T, KVH, *); physical pools (P, page_size, KVH, *) addressed
+    through page_table (B, NB) int32; offs (B,) int32.  The cache-phase
+    BlockSpec index maps read the page table from scalar-prefetch SMEM
+    (one block == one page) with the same clamp-to-elide-DMA trick as
+    the contiguous kernel.  Paged caches are unwrapped: sliding windows
+    arrive as the explicit ``window`` mask, never ``ring``.  Returns
+    (B, KVH, T, G, hdv) in q.dtype."""
+    b, kvh, t, g, hdq = q.shape
+    ps = k_pool.shape[1]
+    nb = page_table.shape[1]
+    c = nb * ps
+    hdv = v_width if v_width is not None else v_pool.shape[-1]
+    bk_t = pick_block_k(t, ps)       # match the paged ref twin's blocking
+    cache_steps = nb
+    chunk_steps = t // bk_t
+    total_steps = cache_steps + chunk_steps
+
+    def q_map(bi, hi, ki, offs, pt):
+        return (bi, hi, 0, 0, 0)
+
+    def cache_map(bi, hi, ki, offs, pt):
+        # Clamp to the row's needed page range, then go through the
+        # page table: revisited physical indices elide the HBM copy
+        # (beyond-prefix pages, the whole chunk phase, and — windowed —
+        # the below-window head).
+        last = jnp.minimum(jnp.maximum(offs[bi] - 1, 0), c - 1) // ps
+        j = jnp.minimum(ki, last)
+        if window is not None:
+            first = jnp.maximum(offs[bi] - (window - 1), 0) // ps
+            j = jnp.maximum(j, jnp.minimum(first, last))
+        return (pt[bi, j], 0, hi, 0)
+
+    def chunk_map(bi, hi, ki, offs, pt):
+        j = jnp.clip(ki - cache_steps, 0, chunk_steps - 1)
+        return (bi, j, hi, 0)
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, scale=scale, window=window, softcap=softcap,
+        ps=ps, bk_t=bk_t, cache_steps=cache_steps, total_steps=total_steps,
+        chunk=t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, total_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, t, g, hdq), q_map),
+            pl.BlockSpec((1, bk_t, 1, hdq), chunk_map),
+            pl.BlockSpec((1, bk_t, 1, hdv), chunk_map),
+            pl.BlockSpec((1, ps, 1, hdq), cache_map),
+            pl.BlockSpec((1, ps, 1, hdv), cache_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t, g, hdv), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((t, g, 1), jnp.float32),     # m: running row max
+            pltpu.VMEM((t, g, 1), jnp.float32),     # l: running row sum
+            pltpu.VMEM((t, g, hdv), jnp.float32),   # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, t, g, hdv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(offs.astype(jnp.int32), page_table.astype(jnp.int32),
+      q, k_chunk, v_chunk, k_pool, v_pool)
+
+
 def prefill_attention_pallas(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
                              ring: bool = False, window=None, softcap=None,
                              scale: float = 1.0, block_k: int = DEFAULT_BLOCK_K,

@@ -66,7 +66,11 @@ def _fold_block(q, k_blk, v_blk, valid, m, l, acc, *, softcap):
 
 def _cache_valid(offs, cols, q_pos, *, cache_size, ring, window):
     """(B, 1, T, 1, bk) mask for cache slots ``cols`` against chunk
-    queries at ``q_pos``.  offs: (B,), cols: (bk,), q_pos: (T,)."""
+    queries at ``q_pos``.  offs: (B,), cols: (bk,), q_pos: (T,).
+
+    ``ring=False`` with ``window`` set is the *unwrapped* sliding-window
+    layout the paged cache uses: slot == position, window as an explicit
+    mask instead of a ring size."""
     off = offs[:, None, None, None, None]                  # (B,1,1,1,1)
     col = cols[None, None, None, None, :]                  # (1,1,1,1,bk)
     qp = (q_pos[None, :, None] + offs[:, None, None])[:, None, :, :, None]
@@ -74,6 +78,8 @@ def _cache_valid(offs, cols, q_pos, *, cache_size, ring, window):
         last = off - 1
         pos = last - jnp.mod(last - col, cache_size)       # (B,1,1,1,bk)
         valid = (pos >= 0) & (qp - pos < window)
+    elif window is not None:
+        valid = (col < off) & (qp - col < window)          # (B,1,T,1,bk)
     else:
         valid = jnp.broadcast_to(col < off, qp.shape[:4] + (cols.shape[0],))
     return valid
@@ -134,3 +140,39 @@ def prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
     m, l, acc = jax.lax.fori_loop(0, c // bk_c, cache_body, (m, l, acc))
     m, l, acc = jax.lax.fori_loop(0, t // bk_t, chunk_body, (m, l, acc))
     return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def prefill_attention_paged_ref(q, k_chunk, v_chunk, k_pool, v_pool,
+                                page_table, offs, *, window=None,
+                                softcap=None, scale: float = 1.0,
+                                v_width=None):
+    """Blockwise twin of the *paged* chunked-prefill kernel.
+
+    q: (B, KVH, T, G, hdq); k_chunk/v_chunk: (B, T, KVH, *);
+    k_pool/v_pool: (P, page_size, KVH, *) physical pages (``v_pool``
+    may be ``k_pool`` with ``v_width`` — MLA); page_table: (B, NB);
+    offs: (B,) int32 chunk start positions.
+
+    Gathers the logical cache view through the page table and sweeps it
+    with cache blocks of exactly one page — the paged kernel's blocking
+    — so pages it skips (beyond each row's prefix, or wholly below the
+    window) are bit-neutral folds and the comparison is bitwise.  Paged
+    caches are unwrapped: ``window`` is an explicit mask, never a ring.
+    """
+    b, kvh, t, g, _ = q.shape
+    ps = k_pool.shape[1]
+    nb = page_table.shape[1]
+    pt = page_table.astype(jnp.int32)
+    k_cache = jnp.take(k_pool, pt, axis=0).reshape(b, nb * ps, kvh,
+                                                   k_pool.shape[-1])
+    if v_pool is k_pool:
+        v_cache = k_cache
+    else:
+        v_cache = jnp.take(v_pool, pt, axis=0).reshape(b, nb * ps, kvh,
+                                                       v_pool.shape[-1])
+    if v_width is not None:
+        v_cache = v_cache[..., :v_width]
+        v_chunk = v_chunk[..., :v_width]
+    return prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache,
+                                 offs, ring=False, window=window,
+                                 softcap=softcap, scale=scale, block_k=ps)

@@ -52,6 +52,31 @@ def main(argv=None):
                          "blocking bucketed prefill baseline; default "
                          "resolves PMT_PREFILL_CHUNK then "
                          "cfg.prefill_chunk")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="KV cache layout: paged = block page pools + "
+                         "per-request page tables + radix prefix reuse "
+                         "(continuous mode only); contiguous = the "
+                         "per-slot baseline")
+    ap.add_argument("--kv-page-size", type=int, default=None,
+                    help="tokens per KV page (paged layout); default "
+                         "cfg.kv_page_size")
+    ap.add_argument("--kv-pool-blocks", type=int, default=None,
+                    help="total pages in the shared pool (paged layout); "
+                         "default batch * ceil(max_len / page_size). "
+                         "Smaller pools trade admission waits for cache "
+                         "memory; prefix-tree pages are evicted LRU "
+                         "under pressure")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="radix-tree prefix reuse across requests "
+                         "(paged layout; default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--pool-reserve-frac", type=float, default=0.0,
+                    help="governor admission veto when the page pool's "
+                         "free fraction drops below this reserve "
+                         "(paged layout + governor only; 0 disables)")
     ap.add_argument("--power-cap-watts", type=float, default=None,
                     help="hold measured window power under this budget "
                          "via the PowerGovernor (admission gating, "
@@ -122,7 +147,8 @@ def main(argv=None):
                                  cap_watts=args.power_cap_watts,
                                  tenant_quota_j=args.tenant_quota,
                                  signal_ttl_s=args.signal_ttl_s,
-                                 fail_mode=args.governor_fail_mode)
+                                 fail_mode=args.governor_fail_mode,
+                                 pool_reserve_frac=args.pool_reserve_frac)
     server = None
     if args.telemetry_port is not None:
         server = TelemetryServer(recorder, port=args.telemetry_port).start()
@@ -135,6 +161,10 @@ def main(argv=None):
                          decode_attn_impl=args.decode_attn_impl,
                          prefill_chunk=args.prefill_chunk,
                          governor=governor,
+                         kv_layout=args.kv_layout,
+                         kv_page_size=args.kv_page_size,
+                         kv_pool_pages=args.kv_pool_blocks,
+                         prefix_cache=args.prefix_cache,
                          greedy=args.temperature <= 0.0,
                          temperature=args.temperature or 1.0,
                          seed=args.seed)
@@ -204,6 +234,18 @@ def main(argv=None):
         if g["tenant_joules"]:
             report += f", tenant J {g['tenant_joules']}"
     print(report)
+    if args.kv_layout == "paged":
+        kc = st["kv_cache"]
+        line = (f"kv pool: {kc['pages_used']}/{kc['pages_total']} pages "
+                f"held ({kc['pages_free']} free, {kc['page_size']} "
+                f"tokens/page)")
+        if kc["prefix_cache"]:
+            line += (f"; prefix cache: {kc['prefix_hits']}/"
+                     f"{kc['prefix_lookups']} hits, "
+                     f"{kc['prefix_hit_tokens']} prompt tokens reused, "
+                     f"{kc['prefix_evictions']} evictions, "
+                     f"~{kc['saved_prefill_joules']:.2f} J prefill saved")
+        print(line)
     if args.supervise:
         health = recorder.health()
         print(f"measurement plane: {health['state']} "

@@ -395,6 +395,97 @@ def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
     return output_proj(p, o), {"k": k, "v": v}
 
 
+# -- paged KV cache (block pools + page-table indirection) --------------------
+
+def init_paged_kv_pools(cfg: ModelConfig, num_pages: int, page_size: int,
+                        dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Physical page pools for one attention layer.
+
+    (P, page_size, KVH, hd) k/v — every layer's pool shares ONE page-id
+    space: a request's single (NB,) page-table row addresses the same
+    physical page index in every leaf, so the host allocator hands out
+    one page id per ``page_size`` token positions across the whole
+    stack.  Page 0 is the scratch page (all masked/pad writes land
+    there; its content is undefined).  Sliding-window layers store
+    their positions *unwrapped* (slot == position) with the window as
+    an explicit attention mask — no ring arithmetic, so prefix pages
+    are position-stable and shareable across requests.
+    """
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    # distinct buffers — donated cache trees must not share (see
+    # init_kv_cache)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len,
+                                page_table, *,
+                                window: Optional[int] = None,
+                                cache_impl: str = "auto"):
+    """One-token decode against a *paged* cache.
+
+    x: (B, 1, d).  cache: {"k","v"} (P, page_size, KVH, hd) pools.
+    cur_len: (B,) per-row position counters (paged serving is always
+    continuous).  page_table: (B, NB) int32 — rows the scheduler has
+    masked to 0 (mid-prefill / dead slots) read and write only the
+    scratch page, so their garbage decode tokens cannot touch a live
+    request's pages.  Returns (out (B,1,d), new_cache).
+    """
+    from repro.kernels.cache_update import ops as cu_ops
+    from repro.kernels.decode_attention import ops as da_ops
+    b = x.shape[0]
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    positions = cur[:, None]
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
+
+    ones = jnp.ones((b,), jnp.int32)
+    k = cu_ops.paged_cache_update(cache["k"], k_new, page_table, cur, ones,
+                                  impl=cache_impl)
+    v = cu_ops.paged_cache_update(cache["v"], v_new, page_table, cur, ones,
+                                  impl=cache_impl)
+    scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
+    o = da_ops.decode_attention_paged(
+        q, k, v, page_table, cur, window=window,
+        softcap=cfg.attn_softcap, scale=scale)
+    return output_proj(p, o), {"k": k, "v": v}
+
+
+def paged_prefill_chunk_self_attention(cfg: ModelConfig, p, x, cache,
+                                       offset, valid_len, page_table, *,
+                                       window: Optional[int] = None,
+                                       cache_impl: str = "auto"):
+    """One chunk of chunked prefill through one attention layer, paged.
+
+    x: (B, T, d) at absolute positions ``offset[b] + i``; cache pools
+    hold positions ``< offset[b]`` of every row through page_table
+    (B, NB).  ``offset`` and ``valid_len`` are (B,) int32 — rows with
+    ``valid_len == 0`` (slots decoding, or idle, during this batched
+    admission dispatch) contribute garbage outputs the caller discards
+    and write nothing (their scatter is fully masked to the scratch
+    page).  Returns (out (B, T, d), new_cache).
+    """
+    from repro.kernels.cache_update import ops as cu_ops
+    from repro.kernels.prefill_attention import ops as pf_ops
+    b, t = x.shape[:2]
+    off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    positions = off[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[..., None], (b, t, 3))
+    q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
+
+    scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
+    o = pf_ops.prefill_attention_paged(
+        q, k_new, v_new, cache["k"], cache["v"], page_table, off,
+        window=window, softcap=cfg.attn_softcap, scale=scale)
+    valids = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    k = cu_ops.paged_cache_update(cache["k"], k_new, page_table, off,
+                                  valids, impl=cache_impl)
+    v = cu_ops.paged_cache_update(cache["v"], v_new, page_table, off,
+                                  valids, impl=cache_impl)
+    return output_proj(p, o), {"k": k, "v": v}
+
+
 def chunk_kv_write(cache, new, offset, valid_len, *,
                    ring: bool = False):
     """Write a prefill chunk's KV into a cache: ``new[:, t]`` lands at

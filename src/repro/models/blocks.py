@@ -365,6 +365,80 @@ def block_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len,
     return x + out, cache
 
 
+# -- paged decode / prefill (block pools + page tables) --------------------------------
+
+def init_paged_block_cache(cfg: ModelConfig, idx: int, num_pages: int,
+                           page_size: int,
+                           dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Paged pools for one block.  Only attention-kind layers ("A",
+    including MLA) page — state blocks carry O(1) recurrent state and
+    encoder-decoder blocks a one-shot cross cache, neither of which
+    a page table buys anything for (``model.supports_paged`` gates
+    whole-model eligibility)."""
+    if layer_kind(cfg, idx) != "A":
+        raise ValueError(f"layer {idx} (kind {layer_kind(cfg, idx)!r}) "
+                         "has no paged cache layout")
+    if cfg.attention == "mla":
+        return mla.init_paged_mla_pool(cfg, num_pages, page_size, dtype)
+    return attn.init_paged_kv_pools(cfg, num_pages, page_size, dtype)
+
+
+def paged_cache_axes(cfg: ModelConfig, idx: int):
+    """Logical axes for paged pool leaves — no batch axis (the pool's
+    leading dim is physical pages shared by every slot)."""
+    if cfg.attention == "mla":
+        return {"kv": ("kv_pages", "page", "kv_rank")}
+    ax = ("kv_pages", "page", "kv_heads", "head_dim")
+    return {"k": ax, "v": ax}
+
+
+def _block_tail(cfg: ModelConfig, p, x, out):
+    """Shared post-mixer tail: post-norm, residual, FFN (dense or MoE)."""
+    if cfg.post_block_norm:
+        out = layers.apply_norm(cfg, p["post_norm_1"], out)
+    x = x + out
+    h = layers.apply_norm(cfg, p["norm_2"], x)
+    if "router" in p["ffn"]:
+        out, _ = moe.apply_moe(cfg, p["ffn"], h)
+    else:
+        out = layers.apply_mlp(cfg, p["ffn"], h)
+    if cfg.post_block_norm:
+        out = layers.apply_norm(cfg, p["post_norm_2"], out)
+    return x + out
+
+
+def block_paged_decode(cfg: ModelConfig, p, x, cache, cur_len, page_table,
+                       idx: int):
+    """One-token decode through one block against paged pools.
+    x: (B,1,d); cur_len: (B,); page_table: (B, NB)."""
+    h = layers.apply_norm(cfg, p["norm_1"], x)
+    if cfg.attention == "mla":
+        out, cache = mla.mla_paged_decode_attention(cfg, p["mixer"], h,
+                                                    cache, cur_len,
+                                                    page_table)
+    else:
+        out, cache = attn.paged_decode_self_attention(
+            cfg, p["mixer"], h, cache, cur_len, page_table,
+            window=layer_window(cfg, idx))
+    return _block_tail(cfg, p, x, out), cache
+
+
+def block_paged_prefill_chunk(cfg: ModelConfig, p, x, cache, offset,
+                              valid_len, page_table, idx: int):
+    """One prefill chunk through one block against paged pools.
+    x: (B, T, d); offset/valid_len: (B,); page_table: (B, NB)."""
+    h = layers.apply_norm(cfg, p["norm_1"], x)
+    if cfg.attention == "mla":
+        out, cache = mla.mla_paged_prefill_chunk(cfg, p["mixer"], h, cache,
+                                                 offset, valid_len,
+                                                 page_table)
+    else:
+        out, cache = attn.paged_prefill_chunk_self_attention(
+            cfg, p["mixer"], h, cache, offset, valid_len, page_table,
+            window=layer_window(cfg, idx))
+    return _block_tail(cfg, p, x, out), cache
+
+
 # -- prefill cache construction --------------------------------------------------------
 
 def prefill_block_cache(cfg: ModelConfig, idx: int, kv, max_len: int,

@@ -193,6 +193,99 @@ def mla_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len):
     return out, {"kv": kv}
 
 
+# -- paged (block pools + page-table indirection) ------------------------------
+
+def init_paged_mla_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                        dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Physical page pool for one MLA layer: (P, page_size, r + rope)
+    ``[latent | rope key]`` rows.  Same one-page-id-per-position space
+    as ``attention.init_paged_kv_pools`` (page 0 = scratch)."""
+    m = cfg.mla
+    width = m.kv_lora_rank + m.qk_rope_head_dim
+    return {"kv": jnp.zeros((num_pages, page_size, width), dtype)}
+
+
+def mla_paged_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
+                               page_table, cache_impl: str = "auto"):
+    """One-token absorbed-MLA decode against a *paged* latent cache.
+
+    x: (B, 1, d); cache: {"kv"} (P, page_size, r + rope) pool;
+    cur_len: (B,); page_table: (B, NB) int32 (masked rows touch only
+    the scratch page).  The absorbed trick carries over unchanged: the
+    pool row is both key and (``v_width``-truncated) value, viewed as
+    (P, page_size, 1, r + rope) for the kernels' KVH axis.
+    """
+    from repro.kernels.cache_update import ops as cu_ops
+    from repro.kernels.decode_attention import ops as da_ops
+    m = cfg.mla
+    dt = x.dtype
+    b = x.shape[0]
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    positions = cur[:, None]
+
+    q_nope, q_rope = _project_q(cfg, p, x, positions)          # (B,1,H,*)
+    latent_new, k_rope_new = _project_kv_latent(cfg, p, x, positions)
+    kv_new = jnp.concatenate([latent_new, k_rope_new], axis=-1)  # (B,1,r+rr)
+
+    ones = jnp.ones((b,), jnp.int32)
+    kv = cu_ops.paged_cache_update(cache["kv"], kv_new, page_table, cur,
+                                   ones, impl=cache_impl)
+
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)          # (B,1,H,r+rr)
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    kv4 = kv[:, :, None, :]                                    # (P,ps,1,r+rr)
+    ctx = da_ops.decode_attention_paged(
+        q_eff, kv4, kv4, page_table, cur, scale=1.0 / math.sqrt(qk_hd),
+        v_width=m.kv_lora_rank).astype(dt)                     # (B,1,H,r)
+
+    o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
+    out = shard(out, "batch", "seq", "d_model")
+    return out, {"kv": kv}
+
+
+def mla_paged_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len,
+                            page_table, cache_impl: str = "auto"):
+    """One chunk of chunked prefill through one MLA layer, paged.
+
+    Mirrors ``mla_prefill_chunk`` with the pool view in place of the
+    per-slot cache: offset/valid_len are (B,) (rows with
+    ``valid_len == 0`` are masked to the scratch page and discarded by
+    the caller).  Attend first — the chunk's own rows arrive as
+    separate operands — then scatter.
+    """
+    from repro.kernels.cache_update import ops as cu_ops
+    from repro.kernels.prefill_attention import ops as pf_ops
+    m = cfg.mla
+    dt = x.dtype
+    b, t = x.shape[:2]
+    off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
+    positions = off[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
+
+    q_nope, q_rope = _project_q(cfg, p, x, positions)          # (B,T,H,*)
+    latent_new, k_rope_new = _project_kv_latent(cfg, p, x, positions)
+    kv_new = jnp.concatenate([latent_new, k_rope_new], axis=-1)  # (B,T,r+rr)
+
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)          # (B,T,H,r+rr)
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    kvx = kv_new[:, :, None, :]                                # (B,T,1,r+rr)
+    kvp = cache["kv"][:, :, None, :]                           # (P,ps,1,r+rr)
+    ctx = pf_ops.prefill_attention_paged(
+        q_eff, kvx, kvx, kvp, kvp, page_table, off,
+        scale=1.0 / math.sqrt(qk_hd),
+        v_width=m.kv_lora_rank).astype(dt)                     # (B,T,H,r)
+
+    valids = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    kv = cu_ops.paged_cache_update(cache["kv"], kv_new, page_table, off,
+                                   valids, impl=cache_impl)
+    o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
+    out = shard(out, "batch", "seq", "d_model")
+    return out, {"kv": kv}
+
+
 def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
                          cache_impl: str = "auto", impl: str = "dense"):
     """One-token absorbed-MLA decode. x: (B,1,d).

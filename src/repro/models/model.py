@@ -346,6 +346,71 @@ def cache_logical_axes(cfg: ModelConfig):
     return axes
 
 
+# -- serve: paged caches ----------------------------------------------------------------
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Whether this arch can serve from paged KV pools.
+
+    Paging covers position-indexed attention caches only: every layer
+    must be kind "A" (self-attention or MLA).  State archs (mamba /
+    xlstm / hybrid) carry O(1) recurrent state — there is nothing to
+    page — and encoder-decoder archs need a one-shot whole-encoder
+    cross cache plus blocking prefill.  Such archs keep serving from
+    the contiguous layout.
+    """
+    if cfg.is_encoder_decoder or cfg.pos_embed == "sinusoidal":
+        return False
+    return all(blocks.layer_kind(cfg, i) == "A"
+               for i in range(cfg.num_layers))
+
+
+def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
+                      dtype=jnp.bfloat16):
+    """Paged pools, same tree shape as :func:`init_caches` — leaves are
+    (P, page_size, ...) physical pools instead of (B, C, ...) per-slot
+    caches (stacked units gain the leading "layers" axis as usual).
+    Every leaf shares one page-id space; page 0 is scratch."""
+    if not supports_paged(cfg):
+        raise ValueError(f"{cfg.name}: arch does not support paged KV "
+                         "(needs all-attention layers, no encoder)")
+    lay = unit_layout(cfg)
+    caches: Dict[str, Any] = {}
+    if lay.prefix:
+        caches["prefix"] = {
+            f"l{i}": blocks.init_paged_block_cache(cfg, i, num_pages,
+                                                   page_size, dtype)
+            for i in lay.prefix}
+    unit_caches = []
+    for u in range(lay.n_units):
+        unit_caches.append({
+            f"r{r}": blocks.init_paged_block_cache(
+                cfg, lay.prefix_len + r, num_pages, page_size, dtype)
+            for r in range(lay.unit_len)})
+    if lay.n_units > 1:
+        caches["units"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *unit_caches)
+    else:
+        caches["units"] = unit_caches[0]
+    return caches
+
+
+def paged_cache_logical_axes(cfg: ModelConfig):
+    """Logical-axes tree matching init_paged_caches output."""
+    lay = unit_layout(cfg)
+    axes: Dict[str, Any] = {}
+    if lay.prefix:
+        axes["prefix"] = {f"l{i}": blocks.paged_cache_axes(cfg, i)
+                          for i in lay.prefix}
+    unit_axes = {f"r{r}": blocks.paged_cache_axes(cfg, lay.prefix_len + r)
+                 for r in range(lay.unit_len)}
+    if lay.n_units > 1:
+        unit_axes = jax.tree.map(
+            lambda ax: ("layers", *ax), unit_axes,
+            is_leaf=lambda x: isinstance(x, tuple))
+    axes["units"] = unit_axes
+    return axes
+
+
 # -- serve: prefill / decode -----------------------------------------------------------
 
 class ServeFns(NamedTuple):
@@ -536,3 +601,99 @@ def make_serve_fns(cfg: ModelConfig, cache_dtype=jnp.bfloat16):
         return logits[:, 0], caches
 
     return ServeFns(prefill, decode_step, prefill_chunk)
+
+
+class PagedServeFns(NamedTuple):
+    """The two pjit-able paged serve steps (see make_paged_serve_fns)."""
+
+    decode: Any
+    prefill_chunk: Any
+
+
+def make_paged_serve_fns(cfg: ModelConfig):
+    """Returns ``PagedServeFns(decode, prefill_chunk)``.
+
+    decode(params, caches, tokens (B,1), cur_len (B,), page_table)
+        -> (logits (B,V), caches)
+    prefill_chunk(params, caches, tokens (B,T), offset (B,),
+                  last_idx (B,), page_table) -> (logits (B,V), caches)
+
+    ``caches`` are :func:`init_paged_caches` pools; ``page_table`` is
+    (B, NB) int32 mapping each slot's logical blocks to physical pages
+    (rows the scheduler masks to 0 touch only the scratch page).
+    Paged serving is always continuous, so ``cur_len``/``offset`` are
+    per-row vectors, and — unlike the contiguous ``prefill_chunk`` —
+    ``last_idx`` is a (B,) vector too: the batched admission path runs
+    several requests' chunks in ONE (B, T) dispatch, each row at its
+    own offset with its own fill.  Rows with ``last_idx == -1`` are
+    passengers (idle or decoding): their ``valid_len`` clamps to 0, so
+    they write nothing, and their logits row is garbage the engine
+    discards.
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"{cfg.name}: arch does not support paged KV "
+                         "(needs all-attention layers, no encoder)")
+    lay = unit_layout(cfg)
+
+    def _run_stack(params, caches, x, run):
+        """Shared prefix + scanned-units sweep for both paged steps."""
+        if lay.prefix:
+            for i in lay.prefix:
+                x, c = run(x, params["prefix"][f"l{i}"],
+                           caches["prefix"][f"l{i}"], i)
+                caches["prefix"][f"l{i}"] = c
+
+        def unit(xx, up_uc):
+            up, uc = up_uc
+            new_uc = {}
+            for r in range(lay.unit_len):
+                xx, c = run(xx, up[f"r{r}"], uc[f"r{r}"],
+                            lay.prefix_len + r)
+                new_uc[f"r{r}"] = c
+            return xx, new_uc
+
+        if lay.n_units == 1:
+            x, caches["units"] = unit(x, (params["units"], caches["units"]))
+        elif cfg.scan_layers:
+            x, caches["units"] = jax.lax.scan(
+                lambda xx, up_uc: unit(xx, up_uc), x,
+                (params["units"], caches["units"]))
+        else:
+            ucs = []
+            for u in range(lay.n_units):
+                sl = lambda a: a[u]
+                x, uc = unit(x, (jax.tree.map(sl, params["units"]),
+                                 jax.tree.map(sl, caches["units"])))
+                ucs.append(uc)
+            caches["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ucs)
+        return layers.apply_norm(cfg, params["final_norm"], x), caches
+
+    def decode(params, caches, tokens, cur_len, page_table):
+        x = layers.embed_tokens(cfg, params["embed"], tokens)
+
+        def run(xx, bp, c, idx):
+            return blocks.block_paged_decode(cfg, bp, xx, c, cur_len,
+                                             page_table, idx)
+
+        x, caches = _run_stack(params, caches, x, run)
+        logits = layers.logits_from_hidden(cfg, params["embed"], x)
+        return logits[:, 0], caches
+
+    def prefill_chunk(params, caches, tokens, offset, last_idx, page_table):
+        last_idx = jnp.asarray(last_idx, jnp.int32)
+        valid_len = jnp.maximum(last_idx + 1, 0)
+        x = layers.embed_tokens(cfg, params["embed"], tokens)
+
+        def run(xx, bp, c, idx):
+            return blocks.block_paged_prefill_chunk(
+                cfg, bp, xx, c, offset, valid_len, page_table, idx)
+
+        x, caches = _run_stack(params, caches, x, run)
+        # per-row last real token (vector last_idx — batched admissions)
+        idx = jnp.clip(last_idx, 0, x.shape[1] - 1)
+        x_last = jnp.take_along_axis(
+            x, idx[:, None, None].astype(jnp.int32), axis=1)   # (B,1,d)
+        logits = layers.logits_from_hidden(cfg, params["embed"], x_last)
+        return logits[:, 0], caches
+
+    return PagedServeFns(decode, prefill_chunk)

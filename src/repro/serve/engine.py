@@ -86,6 +86,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
+from repro.serve.paging import PagePool, RadixPrefixCache
 
 
 def _pick(logits, greedy: bool, temperature: float, key):
@@ -129,6 +130,35 @@ def make_decode_fn(cfg: ModelConfig, greedy: bool = True,
         return _pick(logits, greedy, temperature, key)[:, None], caches
 
     return decode_fn
+
+
+def make_paged_decode_fn(cfg: ModelConfig, greedy: bool = True,
+                         temperature: float = 1.0):
+    decode = model_mod.make_paged_serve_fns(cfg).decode
+
+    def decode_fn(params, caches, tokens, cur_len, page_table, key=None):
+        logits, caches = decode(params, caches, tokens, cur_len, page_table)
+        return _pick(logits, greedy, temperature, key)[:, None], caches
+
+    return decode_fn
+
+
+def make_paged_prefill_chunk_fn(cfg: ModelConfig, greedy: bool = True,
+                                temperature: float = 1.0):
+    """Batched paged prefill chunk: every pending admission's next chunk
+    rides in one (B, chunk) dispatch, each row at its own offset with
+    its own fill (``last_idx[j] == -1`` marks passenger rows).  Returns
+    per-row sampled tokens (B,) — only rows finishing their prefill this
+    step use theirs."""
+    pf = model_mod.make_paged_serve_fns(cfg).prefill_chunk
+
+    def chunk_fn(params, caches, tokens, offset, last_idx, page_table,
+                 key=None):
+        logits, caches = pf(params, caches, tokens, offset, last_idx,
+                            page_table)
+        return _pick(logits, greedy, temperature, key), caches
+
+    return chunk_fn
 
 
 def prompt_bucket(plen: int, min_bucket: int = 8) -> int:
@@ -217,6 +247,23 @@ class _Prefill:
     offset: int = 0
 
 
+@dataclasses.dataclass
+class _PagedPrefill:
+    """An admission mid-chunked-prefill on the *paged* path: its slot
+    and pages are reserved; chunks write straight into the shared pools
+    through the slot's page-table row (no batch-1 side cache, no insert
+    step).  ``offset`` starts at ``matched_tokens`` when the radix
+    prefix cache mapped cached pages in — prefill resumes from the
+    match point."""
+
+    req: Request
+    slot: int
+    toks: np.ndarray                # (plen + chunk,) right-zero-padded
+    plen: int
+    offset: int
+    matched_tokens: int = 0
+
+
 class ServeEngine:
     """Continuous-batching decode over fixed slots (wave mode as baseline).
 
@@ -260,6 +307,21 @@ class ServeEngine:
         ``cap_watts=None`` keeps the bursty device-side decode runs.
         Ignored in wave mode (the synchronized baseline has no
         per-step scheduling points to govern).
+      kv_layout: "contiguous" (default) keeps per-slot (B, max_len, ...)
+        caches; "paged" serves from one physical page pool per cache
+        leaf with per-slot page tables — pages are allocated at
+        admission (after a radix prefix-cache match maps any cached
+        prompt prefix in copy-free) and recycled at retirement, so the
+        cache-memory budget is the *pool*, decoupled from slots x
+        max_len.  Requires continuous mode, chunked prefill, and an
+        all-attention arch (``model.supports_paged``).
+      kv_page_size: tokens per page (default ``cfg.kv_page_size``).
+      kv_pool_pages: usable pool capacity in pages (default
+        ``batch_size * ceil(max_len / page_size)`` — parity with the
+        contiguous footprint; smaller pools oversubscribe slots and
+        admissions wait for pages).
+      prefix_cache: keep retired requests' full prompt pages in a radix
+        tree for copy-free prefix reuse (paged layout only).
       greedy, temperature, seed: decoding policy.  ``greedy=False``
         threads ``fold_in(PRNGKey(seed), step)`` into every decode
         step's categorical draw (and the prefill first-token pick);
@@ -283,10 +345,16 @@ class ServeEngine:
                  decode_attn_impl: Optional[str] = None,
                  prefill_chunk: Optional[int] = None,
                  governor=None,
+                 kv_layout: str = "contiguous",
+                 kv_page_size: Optional[int] = None,
+                 kv_pool_pages: Optional[int] = None,
+                 prefix_cache: bool = True,
                  greedy: bool = True, temperature: float = 1.0,
                  seed: int = 0, cache_dtype=jnp.bfloat16):
         if mode not in ("continuous", "wave"):
             raise ValueError(f"unknown serve mode {mode!r}")
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if decode_attn_impl is not None:
             cfg = dataclasses.replace(cfg,
                                       decode_attn_impl=decode_attn_impl)
@@ -344,6 +412,55 @@ class ServeEngine:
                               make_prefill_chunk_fn(cfg, **sample_kw)),
                 donate_argnums=1)
         self._insert = self._make_insert()
+
+        # -- paged KV cache (block pools + page tables + prefix reuse) --
+        self.kv_layout = kv_layout
+        self.kv_page_size = int(kv_page_size if kv_page_size is not None
+                                else cfg.kv_page_size)
+        self.prefix_hit_tokens = 0          # prompt tokens served off pages
+        self.saved_prefill_joules = 0.0     # priced at the learned J/token
+        self._prefill_jpt: Optional[float] = None   # EWMA J per prefill tok
+        self._pool: Optional[PagePool] = None
+        self._radix: Optional[RadixPrefixCache] = None
+        if kv_layout == "paged":
+            if mode != "continuous":
+                raise ValueError("paged KV requires continuous mode")
+            if not self.prefill_chunk:
+                raise ValueError("paged KV requires chunked prefill "
+                                 "(prefill_chunk > 0)")
+            if not model_mod.supports_paged(cfg):
+                raise ValueError(
+                    f"{cfg.name}: paged KV needs an all-attention arch "
+                    "(state and encoder-decoder archs keep the contiguous "
+                    "layout)")
+            ps = self.kv_page_size
+            if ps < 1:
+                raise ValueError(f"kv_page_size must be >= 1, got {ps}")
+            self._pages_per_slot = math.ceil(max_len / ps)
+            usable = (int(kv_pool_pages) if kv_pool_pages is not None
+                      else batch_size * self._pages_per_slot)
+            if usable < self._pages_per_slot:
+                raise ValueError(
+                    f"kv_pool_pages {usable} cannot hold even one slot "
+                    f"({self._pages_per_slot} pages of {ps})")
+            # +1: page 0 is the reserved scratch page
+            self._pool = PagePool(usable + 1, ps)
+            if prefix_cache:
+                self._radix = RadixPrefixCache(self._pool)
+            self._paged_caches = model_mod.init_paged_caches(
+                cfg, usable + 1, ps, dtype=cache_dtype)
+            self._page_table = np.zeros(
+                (batch_size, self._pages_per_slot), np.int32)
+            self._slot_pages: List[List[int]] = \
+                [[] for _ in range(batch_size)]
+            self._paged_decode = jax.jit(
+                self._counted("decode",
+                              make_paged_decode_fn(cfg, **sample_kw)),
+                donate_argnums=1)
+            self._paged_prefill_chunk_fn = jax.jit(
+                self._counted("prefill_chunk",
+                              make_paged_prefill_chunk_fn(cfg, **sample_kw)),
+                donate_argnums=1)
 
     def _counted(self, name: str, fn):
         counts = self.compile_counts
@@ -460,6 +577,8 @@ class ServeEngine:
                 wave = requests[i:i + self.batch]
                 done.extend(self._run_wave(wave))
             return done
+        if self.kv_layout == "paged":
+            return self._run_paged(requests)
         return self._run_continuous(requests)
 
     def stats(self) -> Dict[str, Any]:
@@ -467,6 +586,7 @@ class ServeEngine:
         endpoint and the launcher's end-of-run report surface."""
         s: Dict[str, Any] = {
             "mode": self.mode,
+            "kv_layout": self.kv_layout,
             "batch_slots": self.batch,
             "requests_admitted": self._request_count,
             "live_slots": self.live_slots,
@@ -477,9 +597,44 @@ class ServeEngine:
             "requests_timed_out": self._timeouts,
             "compile_counts": dict(self.compile_counts),
         }
+        if self._pool is not None:
+            cache_s: Dict[str, Any] = {
+                "page_size": self._pool.page_size,
+                "pages_total": self._pool.total_pages,
+                "pages_free": self._pool.free_pages,
+                "pages_used": self._pool.used_pages,
+                "prefix_cache": self._radix is not None,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "saved_prefill_joules": self.saved_prefill_joules,
+            }
+            if self._radix is not None:
+                cache_s.update(
+                    prefix_lookups=self._radix.lookups,
+                    prefix_hits=self._radix.hits,
+                    prefix_hit_rate=self._radix.hit_rate,
+                    prefix_evictions=self._radix.evictions,
+                    prefix_nodes=self._radix.node_count)
+            s["kv_cache"] = cache_s
         if self.governor is not None:
             s["governor"] = self.governor.stats()
         return s
+
+    def on_record(self, rec) -> None:
+        """Recorder subscriber (wired by ``PowerRecorder.attach_engine``):
+        learns joules-per-prefill-token from resolved
+        ``serve/req<N>/prefill`` spans — the price of the prefill work a
+        prefix-cache hit avoids.  ``saved_prefill_joules`` accrues at
+        admission time from this EWMA."""
+        path = getattr(rec, "path", "")
+        if not (path.startswith("serve/req") and path.endswith("/prefill")):
+            return
+        tokens = getattr(rec, "tokens", None)
+        joules = getattr(rec, "joules", None)
+        if not tokens or joules is None or joules <= 0.0:
+            return
+        jpt = joules / tokens
+        self._prefill_jpt = jpt if self._prefill_jpt is None \
+            else 0.8 * self._prefill_jpt + 0.2 * jpt
 
     # -- continuous batching --------------------------------------------------
     def _admit(self, r: Request) -> Request:
@@ -784,6 +939,322 @@ class ServeEngine:
                 # chunk — or an interrupt) must not leak open
                 # request/phase spans: they hold ring-sampler pins on
                 # the shared session for its whole lifetime.
+                prefills.clear()
+                waiting.clear()
+                update_gauges()
+                for j in range(b):
+                    close_ctx(pf_ctxs[j])
+                    pf_ctxs[j] = None
+                    close_ctx(dec_ctxs[j])
+                    dec_ctxs[j] = None
+                    close_ctx(req_ctxs[j])
+                    req_ctxs[j] = None
+        return requests
+
+    # -- paged continuous batching --------------------------------------------
+    def _admit_paged(self, r: Request, j: int) -> Optional[_PagedPrefill]:
+        """Reserve slot ``j``'s pages for request ``r``: radix-match the
+        prompt (mapping cached prefix pages in copy-free), then allocate
+        the remaining ``ceil((plen + max_new - 1) / page_size)`` fresh
+        pages up front — decode never waits for a page mid-request.
+        Returns None when the pool cannot cover it right now (the caller
+        leaves the request waiting; retirements free pages)."""
+        pool, radix = self._pool, self._radix
+        ps = self.kv_page_size
+        plen = len(r.prompt)
+        pages_needed = math.ceil((plen + r.max_new_tokens - 1) / ps)
+        matched: List[int] = []
+        if radix is not None:
+            _, mpages = radix.match(r.prompt)
+            # cap the match one token short of the prompt: the final
+            # chunk must re-run >= 1 real token for first-token logits
+            use = min(len(mpages), (plen - 1) // ps)
+            if use < len(mpages):
+                pool.release(mpages[use:])
+            matched = mpages[:use]
+        fresh = pool.alloc(pages_needed - len(matched))
+        if fresh is None and radix is not None:
+            radix.evict_for(pages_needed - len(matched))
+            fresh = pool.alloc(pages_needed - len(matched))
+        if fresh is None:
+            if matched:
+                pool.release(matched)
+            return None
+        slot_pages = matched + fresh
+        self._slot_pages[j] = slot_pages
+        self._page_table[j, :] = 0
+        self._page_table[j, :len(slot_pages)] = slot_pages
+        mt = len(matched) * ps
+        self.prefix_hit_tokens += mt
+        if mt and self._prefill_jpt is not None:
+            self.saved_prefill_joules += mt * self._prefill_jpt
+        toks = np.zeros((plen + self.prefill_chunk,), np.int32)
+        toks[:plen] = r.prompt
+        return _PagedPrefill(req=r, slot=j, toks=toks, plen=plen,
+                             offset=mt, matched_tokens=mt)
+
+    def _release_slot_pages(self, j: int) -> None:
+        if self._slot_pages[j]:
+            self._pool.release(self._slot_pages[j])
+            self._slot_pages[j] = []
+        self._page_table[j, :] = 0
+
+    def _run_paged(self, requests: List[Request]) -> List[Request]:
+        """Continuous batching over the paged pools.
+
+        Differences from ``_run_continuous``: admission reserves pages
+        instead of a cache row (and may *wait* on the pool, not just on
+        slots); prefill chunks write straight into the shared pools
+        through the slot's page-table row, with every pending
+        admission's chunk batched into ONE (B, chunk) dispatch; decode
+        sees a masked page table (mid-prefill / dead rows route to the
+        scratch page); retirement adopts the request's full pages into
+        the radix prefix tree before releasing its references.
+        """
+        b = self.batch
+        chunk = self.prefill_chunk
+        gov = self.governor
+        pool, radix = self._pool, self._radix
+        ps = self.kv_page_size
+        waiting = list(requests)
+        caches = self._paged_caches     # pools persist across generate()s
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        active: List[Optional[Request]] = [None] * b
+        remaining = [0] * b
+        req_ctxs: List[Any] = [None] * b
+        pf_ctxs: List[Any] = [None] * b
+        dec_ctxs: List[Any] = [None] * b
+        prefills: Deque[_PagedPrefill] = collections.deque()
+        reserved = [False] * b
+        deadlines = {id(r): time.monotonic() + r.deadline_s
+                     for r in requests if r.deadline_s is not None}
+        total_tokens = sum(r.max_new_tokens for r in requests)
+        agg_id = self._batch_count
+        self._batch_count += 1
+
+        def open_ctx(rid, tokens_, phase=None):
+            ctx = self._request_ctx(rid, tokens=tokens_, phase=phase)
+            ctx.__enter__()
+            return ctx
+
+        def close_ctx(ctx):
+            if ctx is not None:
+                ctx.__exit__(None, None, None)
+
+        def activate(j, r, first, next_pos):
+            dec_ctxs[j] = open_ctx(r.id, r.max_new_tokens, phase="decode")
+            tokens[j, 0] = int(first)
+            pos[j] = next_pos
+            remaining[j] = r.max_new_tokens - 1
+            active[j] = r
+            r.out.append(int(first))
+            if remaining[j] == 0:
+                retire(j)
+
+        def retire(j: int, reason: str = "length") -> None:
+            r = active[j]
+            r.finish_reason = reason
+            if radix is not None:
+                # Adopt the full pages actually written — prompt plus
+                # every generated token that was fed back (the last
+                # sampled token never lands in the cache) — into the
+                # prefix tree BEFORE releasing this request's refs, so
+                # adopted pages never transit the free list.  Existing
+                # nodes win on duplicate content; timeouts contribute
+                # their written prefix like any other retirement.
+                written = list(r.prompt) + r.out[:-1]
+                n_full = len(written) // ps
+                if n_full:
+                    radix.insert(written[:n_full * ps],
+                                 self._slot_pages[j][:n_full])
+            self._release_slot_pages(j)
+            close_ctx(dec_ctxs[j])
+            dec_ctxs[j] = None
+            close_ctx(req_ctxs[j])
+            req_ctxs[j] = None
+            active[j] = None
+
+        def sweep_deadlines() -> None:
+            if not deadlines:
+                return
+            now = time.monotonic()
+
+            def expired(r: Request) -> bool:
+                dl = deadlines.get(id(r))
+                return dl is not None and now > dl
+
+            if any(expired(r) for r in waiting):
+                kept = []
+                for r in waiting:
+                    if expired(r):
+                        r.finish_reason = "timeout"
+                        self._timeouts += 1
+                    else:
+                        kept.append(r)
+                waiting[:] = kept
+            for st in [st for st in prefills if expired(st.req)]:
+                prefills.remove(st)
+                reserved[st.slot] = False
+                self._release_slot_pages(st.slot)
+                close_ctx(pf_ctxs[st.slot])
+                pf_ctxs[st.slot] = None
+                close_ctx(req_ctxs[st.slot])
+                req_ctxs[st.slot] = None
+                st.req.finish_reason = "timeout"
+                self._timeouts += 1
+            for j in range(b):
+                if active[j] is not None and expired(active[j]):
+                    retire(j, reason="timeout")
+                    self._timeouts += 1
+
+        def update_gauges():
+            self.queue_depth = len(waiting)
+            self.live_slots = sum(1 for a in active if a is not None) \
+                + sum(reserved)
+            self.pending_prefill_chunks = sum(
+                math.ceil((st.plen - st.offset) / chunk) for st in prefills)
+
+        with self._measure_ctx(agg_id, tokens=total_tokens):
+            try:
+                while waiting or prefills \
+                        or any(r is not None for r in active):
+                    sweep_deadlines()
+                    update_gauges()
+                    # Admission: governor gate (now fed the pool's free
+                    # fraction as a pressure signal) + tenant pick, then
+                    # page reservation.  A pool too drained to cover the
+                    # next request simply defers it — retirements free
+                    # pages; idle-engine exhaustion is impossible because
+                    # one slot's worth of pages always fits the pool
+                    # (checked in __init__) and an idle pool (after
+                    # prefix-tree eviction) is fully free.
+                    for j in range(b):
+                        if active[j] is not None or reserved[j] \
+                                or not waiting:
+                            continue
+                        k = 0
+                        if gov is not None:
+                            free_frac = pool.free_pages \
+                                / max(1, pool.total_pages)
+                            if not gov.admission_allowed(
+                                    pool_free_frac=free_frac):
+                                if any(a is not None for a in active) \
+                                        or prefills:
+                                    break
+                                gov.note_forced_admit()
+                            else:
+                                k = next(
+                                    (i for i, w in enumerate(waiting)
+                                     if gov.tenant_allowed(w.tenant)), 0)
+                        st = self._admit_paged(waiting[k], j)
+                        if st is None:
+                            break           # pool short: wait for pages
+                        r = self._admit(waiting.pop(k))
+                        if gov is not None:
+                            gov.note_admitted(r)
+                        req_ctxs[j] = open_ctx(r.id, r.max_new_tokens)
+                        # phase span counts the tokens actually
+                        # prefilled — a prefix hit shrinks the work
+                        pf_ctxs[j] = open_ctx(
+                            r.id, st.plen - st.matched_tokens,
+                            phase="prefill")
+                        reserved[j] = True
+                        prefills.append(st)
+                    update_gauges()
+
+                    if prefills:
+                        decode_live = any(a is not None for a in active)
+                        budget = 1
+                        if gov is not None:
+                            budget = gov.prefill_chunk_budget(decode_live)
+                            if budget < 1 and not decode_live:
+                                budget = 1
+                                gov.note_forced_chunk()
+                        for _ in range(budget):
+                            if not prefills:
+                                break
+                            # Batched chunk admissions: ONE (B, chunk)
+                            # dispatch advances EVERY pending prefill by
+                            # one chunk — each row at its own offset,
+                            # passenger rows masked with last_idx=-1.
+                            t0 = time.perf_counter()
+                            ctoks = np.zeros((b, chunk), np.int32)
+                            offs = np.zeros((b,), np.int32)
+                            last = np.full((b,), -1, np.int32)
+                            for st in prefills:
+                                ctoks[st.slot] = \
+                                    st.toks[st.offset:st.offset + chunk]
+                                offs[st.slot] = st.offset
+                                last[st.slot] = min(
+                                    st.plen - 1 - st.offset, chunk - 1)
+                            tok, caches = self._paged_prefill_chunk_fn(
+                                self.params, caches, jnp.asarray(ctoks),
+                                jnp.asarray(offs), jnp.asarray(last),
+                                jnp.asarray(self._page_table),
+                                self._next_key())
+                            tok = np.asarray(tok)   # fence the dispatch
+                            if decode_live:
+                                self.stall_events.append(
+                                    time.perf_counter() - t0)
+                            for st in list(prefills):
+                                st.offset += chunk
+                                if st.offset >= st.plen:
+                                    prefills.remove(st)
+                                    reserved[st.slot] = False
+                                    close_ctx(pf_ctxs[st.slot])
+                                    pf_ctxs[st.slot] = None
+                                    activate(st.slot, st.req,
+                                             tok[st.slot], st.plen)
+                        update_gauges()
+
+                    live = [j for j in range(b) if active[j] is not None]
+                    if not live:
+                        continue
+                    if gov is not None:
+                        gov.maybe_pause_decode()
+                    governed = gov is not None and gov.cap_watts is not None
+                    steps = 1 if (prefills or governed) \
+                        else min(remaining[j] for j in live)
+                    if steps > 1 and deadlines \
+                            and any(id(active[j]) in deadlines
+                                    for j in live):
+                        steps = min(steps, 8)
+                    # Decode sees a MASKED page table: only actively
+                    # decoding rows expose their pages — mid-prefill and
+                    # dead rows read/write the scratch page only, so
+                    # their garbage decode tokens cannot touch pages a
+                    # prefill is filling.
+                    mask = np.zeros((b, 1), np.int32)
+                    for j in live:
+                        mask[j] = 1
+                    pt_dec = jnp.asarray(self._page_table * mask)
+                    tok_dev = jnp.asarray(tokens)
+                    pos_dev = jnp.asarray(pos)
+                    outs = []
+                    for _ in range(steps):
+                        tok_dev, caches = self._paged_decode(
+                            self.params, caches, tok_dev, pos_dev, pt_dec,
+                            self._next_key())
+                        outs.append(tok_dev)
+                        pos_dev = pos_dev + 1
+                    gen = np.asarray(jnp.concatenate(outs, axis=1))
+                    for j in live:
+                        r = active[j]
+                        r.out.extend(gen[j].tolist())
+                        tokens[j, 0] = gen[j, -1]
+                        pos[j] += steps
+                        remaining[j] -= steps
+                        if remaining[j] == 0:
+                            retire(j)
+            finally:
+                # Exceptions must leak neither spans nor page refs; the
+                # (possibly donated) cache tree is re-bound so the next
+                # generate() resumes from live buffers.
+                self._paged_caches = caches
+                for j in range(b):
+                    if active[j] is not None or reserved[j]:
+                        self._release_slot_pages(j)
                 prefills.clear()
                 waiting.clear()
                 update_gauges()

@@ -91,6 +91,15 @@ class PowerGovernor:
       tenant_quota_j: per-tenant joules quota — a single float applied
         to every tenant, or a ``{tenant: quota}`` dict (missing tenants
         unlimited).
+      pool_reserve_frac: paged-KV pool pressure veto.  When the engine
+        passes its pool's free-page fraction to
+        :meth:`admission_allowed` and it sits below this reserve, the
+        admission is vetoed (``pool_block``/``pool_resume`` decisions)
+        regardless of power headroom — an admission that would leave the
+        pool unable to absorb in-flight decode growth or the next
+        prefix-cache insert is worse than a deferred one.  ``0.0``
+        (default) disables the veto; contiguous mode never passes the
+        signal.
       backend: restrict the control signal to one backend's watts
         (default: sum over all backends the recorder sees).
       signal_ttl_s: maximum age of the newest watts sample before the
@@ -114,6 +123,7 @@ class PowerGovernor:
                  admit_hold_s: Optional[float] = None,
                  pause_s: float = 0.005, max_chunks_per_step: int = 2,
                  tenant_quota_j: Union[None, float, Dict[str, float]] = None,
+                 pool_reserve_frac: float = 0.0,
                  backend: Optional[str] = None,
                  signal_ttl_s: Optional[float] = None,
                  fail_mode: str = "closed",
@@ -129,6 +139,9 @@ class PowerGovernor:
         if fail_mode not in ("open", "closed"):
             raise ValueError(
                 f"fail_mode must be 'open' or 'closed', got {fail_mode!r}")
+        if not 0.0 <= pool_reserve_frac < 1.0:
+            raise ValueError(f"pool_reserve_frac must be in [0, 1), "
+                             f"got {pool_reserve_frac}")
         self.recorder = recorder
         self.cap_watts = cap_watts
         self.window_s = float(window_s)
@@ -161,6 +174,19 @@ class PowerGovernor:
         # after the fact.
         self._step_w: Optional[float] = None
         self._pending_step: Optional[Tuple[Optional[float], float]] = None
+        self.pool_reserve_frac = float(pool_reserve_frac)
+        self._pool_blocked = False
+        # Linear watts-vs-live-slots model fitted from admission
+        # history: each settled admission contributes one
+        # (live_slots, window watts) sample, and the least-squares slope
+        # is the marginal watts of one more slot — a *per-configuration*
+        # estimate that, unlike the EWMA step, interpolates across
+        # occupancies it has seen instead of trusting the last delta.
+        # The EWMA remains the cold-start fallback until the fit has
+        # enough spread to be trustworthy.
+        self._engine = None           # bound by begin()
+        self._slot_obs: collections.deque = collections.deque(maxlen=64)
+        self._slot_model: Optional[Tuple[float, float, int]] = None
         self.decisions: collections.deque = collections.deque(maxlen=4096)
         self.throttle_count = 0       # total decisions ever (ring-proof)
         self.pause_total_s = 0.0
@@ -178,6 +204,7 @@ class PowerGovernor:
         if session is None and engine.monitor is not None:
             session = engine.monitor.session
         self._session = session
+        self._engine = engine
         self._last_admit_t = float("-inf")
 
     def close(self) -> None:
@@ -224,8 +251,22 @@ class PowerGovernor:
         return w, stale
 
     # -- levers (consulted by ServeEngine._run_continuous) -------------------
-    def admission_allowed(self) -> bool:
-        """Whether a new request may be admitted right now."""
+    def admission_allowed(
+            self, pool_free_frac: Optional[float] = None) -> bool:
+        """Whether a new request may be admitted right now.
+
+        ``pool_free_frac`` (paged mode only) is the engine's KV pool
+        free-page fraction; below ``pool_reserve_frac`` it vetoes the
+        admission even when power headroom exists — this veto is
+        independent of ``cap_watts`` and works for uncapped governors.
+        """
+        if pool_free_frac is not None and self.pool_reserve_frac > 0.0:
+            low = pool_free_frac < self.pool_reserve_frac
+            self._transition("_pool_blocked", low,
+                             "pool_block" if low else "pool_resume",
+                             self.window_watts() if low else None)
+            if low:
+                return False
         if self.cap_watts is None:
             return True
         w, stale = self._signal()
@@ -241,8 +282,12 @@ class PowerGovernor:
             # power step exceeds the (1 - admit_frac) headroom band, a
             # transient dip below the threshold would admit a slot whose
             # settled load overshoots the cap.
-            step = self._step_w if self._step_w is not None \
-                else self.cap_watts * (1.0 - self.admit_frac)
+            # Per-slot step: fitted slope when the admission history
+            # supports it, EWMA (then a headroom-band guess) otherwise.
+            step = self._fitted_step()
+            if step is None:
+                step = self._step_w if self._step_w is not None \
+                    else self.cap_watts * (1.0 - self.admit_frac)
             if w >= self.cap_watts * self.admit_frac \
                     or w + step > self.cap_watts:
                 self._transition("_admit_blocked", True, "admit_block", w)
@@ -349,6 +394,7 @@ class PowerGovernor:
         learned per-slot step (biased high: a step estimate that decays
         too eagerly re-opens the overshoot the gate exists to prevent)."""
         if self._pending_step is None:
+            self._observe_slots(w_now)
             return
         pre, t_adm = self._pending_step
         if self._clock() - t_adm < self.admit_hold_s:
@@ -358,6 +404,36 @@ class PowerGovernor:
             obs = max(0.0, w_now - pre)
             self._step_w = obs if self._step_w is None \
                 else max(0.5 * (self._step_w + obs), obs)
+        self._observe_slots(w_now)
+
+    def _observe_slots(self, w_now: float) -> None:
+        """Record one (live_slots, watts) sample for the linear model —
+        only while no admission is mid-settle, so the samples pair the
+        window power with the occupancy that actually produced it."""
+        eng = self._engine
+        if eng is not None:
+            self._slot_obs.append((float(eng.live_slots), float(w_now)))
+
+    def _fitted_step(self) -> Optional[float]:
+        """Marginal watts per slot from the least-squares line over the
+        admission-history samples.  ``None`` (fall back to the EWMA)
+        until there are >= 4 samples spanning more than one occupancy —
+        a vertical-stack of samples at a single slot count has no slope
+        information."""
+        obs = list(self._slot_obs)
+        if len(obs) < 4:
+            return None
+        n = float(len(obs))
+        sx = sum(x for x, _ in obs)
+        sy = sum(y for _, y in obs)
+        sxx = sum(x * x for x, _ in obs)
+        sxy = sum(x * y for x, y in obs)
+        var = sxx - sx * sx / n
+        if var < 1e-9:
+            return None
+        slope = max(0.0, (sxy - sx * sy / n) / var)
+        self._slot_model = (slope, (sy - slope * sx) / n, len(obs))
+        return slope
 
     def note_admitted(self, request) -> None:
         """Engine callback at admission: arms the admission hold,
@@ -446,6 +522,13 @@ class PowerGovernor:
                 "signal_ttl_s": self.signal_ttl_s,
                 "fail_mode": self.fail_mode,
                 "signal_stale": self.signal_stale(),
+                "pool_reserve_frac": self.pool_reserve_frac,
+                "slot_watts_model": (
+                    None if self._slot_model is None else {
+                        "slope_w_per_slot": self._slot_model[0],
+                        "intercept_w": self._slot_model[1],
+                        "samples": self._slot_model[2],
+                    }),
             }
 
     def __repr__(self):

@@ -169,9 +169,14 @@ class PowerRecorder:
 
     def attach_engine(self, engine) -> "PowerRecorder":
         """Bind a ``ServeEngine``: its counters join :meth:`stats` and
-        its per-request tenant map labels :meth:`request_energy`."""
+        its per-request tenant map labels :meth:`request_energy`.  An
+        engine exposing ``on_record`` (paged mode's prefill
+        joules-per-token estimator behind ``saved_prefill_joules``) is
+        additionally subscribed to the resolved-record stream."""
         self._engine = engine
         self.add_stats_provider(engine.stats)
+        if hasattr(engine, "on_record"):
+            self._unsubs.append(self.subscribe(engine.on_record))
         return self
 
     def add_stats_provider(self, fn: Callable[[], Dict[str, Any]]) -> None:

@@ -185,6 +185,63 @@ class TestTenantQuota:
         assert gov.tenant_allowed("b")           # no quota entry: unlimited
 
 
+class TestPoolPressureAndSlotModel:
+    def test_pool_veto_blocks_below_reserve(self):
+        gov, rec, clock = governed(cap=None, pool_reserve_frac=0.25)
+        # below reserve: vetoed even with no cap / infinite headroom
+        assert not gov.admission_allowed(pool_free_frac=0.10)
+        assert [d.action for d in gov.decisions] == ["pool_block"]
+        assert gov.admission_allowed(pool_free_frac=0.50)
+        assert [d.action for d in gov.decisions] == \
+            ["pool_block", "pool_resume"]
+        # transitions, not per-consultation spam
+        assert gov.admission_allowed(pool_free_frac=0.50)
+        assert gov.stats()["throttle_decisions"] == 2
+
+    def test_pool_veto_disabled_by_default(self):
+        gov, rec, clock = governed(cap=None)
+        assert gov.admission_allowed(pool_free_frac=0.0)
+        assert gov.stats()["pool_reserve_frac"] == 0.0
+
+    def test_constructor_validation(self):
+        with pytest.raises(ValueError):
+            PowerGovernor(PowerRecorder(), pool_reserve_frac=1.0)
+
+    def test_slot_model_fits_linear_power(self):
+        """Feed exact watts = 50 + 15 * slots samples: the fitted slope
+        replaces the EWMA step in the predictive admission gate."""
+        import types
+        gov, rec, clock = governed(cap=100.0)
+        eng = types.SimpleNamespace(live_slots=0)
+        gov._engine = eng
+        for slots in (0, 1, 2, 3, 1, 2):
+            eng.live_slots = slots
+            feed(rec, clock, IDLE_W + SLOT_W * slots)
+            gov.admission_allowed()       # samples via _settle_step
+        assert gov._fitted_step() == pytest.approx(SLOT_W, abs=1e-6)
+        sm = gov.stats()["slot_watts_model"]
+        assert sm["slope_w_per_slot"] == pytest.approx(SLOT_W, abs=1e-6)
+        assert sm["intercept_w"] == pytest.approx(IDLE_W, abs=1e-6)
+        assert sm["samples"] == 6
+        # 87 W is under the 90 W admit threshold, but 87 + 15 > 100 W
+        # when the *fitted* step is consulted (no EWMA was ever learned)
+        assert gov._step_w is None
+        feed(rec, clock, 87.0)
+        assert not gov.admission_allowed()
+        feed(rec, clock, 70.0)
+        assert gov.admission_allowed()
+
+    def test_slot_model_needs_occupancy_spread(self):
+        import types
+        gov, rec, clock = governed(cap=100.0)
+        gov._engine = types.SimpleNamespace(live_slots=2)
+        for _ in range(6):
+            feed(rec, clock, 80.0)
+            gov.admission_allowed()
+        assert gov._fitted_step() is None      # no slope information
+        assert gov.stats()["slot_watts_model"] is None
+
+
 # -- integration: real engine, load-coupled power ---------------------------
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,234 @@
+"""Host-side paged-KV bookkeeping: allocator + radix prefix cache gates.
+
+``PagePool``: alloc/free/refcount invariants under randomized churn —
+page 0 never handed out, all-or-nothing allocation, double-free and
+free-page-ref rejected, conservation of pages (free + live == capacity)
+after arbitrary interleavings.
+
+``RadixPrefixCache``: randomized insert/match/evict runs checked against
+a brute-force oracle (a dict of every page-aligned prefix ever
+inserted): match returns exactly the oracle's longest cached prefix and
+the oracle's pages for it, refcounts account for every tree node plus
+every outstanding match, and eviction keeps shared pages alive until
+the last holder releases.
+"""
+import random
+
+import pytest
+
+from repro.serve.paging import SCRATCH_PAGE, PagePool, RadixPrefixCache
+
+
+def test_scratch_page_reserved():
+    pool = PagePool(num_pages=4, page_size=8)
+    assert pool.total_pages == 3
+    got = pool.alloc(3)
+    assert got is not None and SCRATCH_PAGE not in got
+    assert pool.alloc(1) is None            # exhausted, not scratch-grabbing
+    assert pool.refcount(SCRATCH_PAGE) == 1
+
+
+def test_alloc_is_all_or_nothing():
+    pool = PagePool(num_pages=5, page_size=4)
+    assert pool.alloc(5) is None
+    assert pool.free_pages == 4             # failed alloc left nothing behind
+    pages = pool.alloc(4)
+    assert sorted(pages) == [1, 2, 3, 4]
+    assert pool.free_pages == 0 and pool.used_pages == 4
+
+
+def test_refcount_lifecycle():
+    pool = PagePool(num_pages=3, page_size=4)
+    (p,) = pool.alloc(1)
+    pool.ref([p])
+    assert pool.refcount(p) == 2
+    assert pool.release([p]) == 0           # still one holder
+    assert pool.release([p]) == 1           # now actually freed
+    with pytest.raises(ValueError):
+        pool.release([p])                   # double free
+    with pytest.raises(ValueError):
+        pool.ref([p])                       # can't revive a free page
+
+
+def test_pool_churn_conserves_pages():
+    rng = random.Random(0)
+    pool = PagePool(num_pages=33, page_size=4)
+    live = []                               # (page, refs) we still hold
+    for _ in range(2000):
+        action = rng.random()
+        if action < 0.4:
+            got = pool.alloc(rng.randint(1, 5))
+            if got is not None:
+                live.extend((p, 1) for p in got)
+        elif action < 0.6 and live:
+            i = rng.randrange(len(live))
+            p, r = live[i]
+            pool.ref([p])
+            live[i] = (p, r + 1)
+        elif live:
+            i = rng.randrange(len(live))
+            p, r = live[i]
+            pool.release([p])
+            if r == 1:
+                live.pop(i)
+            else:
+                live[i] = (p, r - 1)
+        held = {p for p, _ in live}
+        assert pool.free_pages + len(held) == pool.total_pages
+        for p, r in live:
+            pass
+    for p, r in live:
+        pool.release([p] * r)
+    assert pool.free_pages == pool.total_pages
+
+
+# ---------------------------------------------------------------------------
+# radix prefix cache
+# ---------------------------------------------------------------------------
+
+
+def _tok(rng, n, vocab=7):
+    return [rng.randrange(vocab) for _ in range(n)]
+
+
+def test_radix_match_and_insert_basic():
+    pool = PagePool(num_pages=32, page_size=4)
+    tree = RadixPrefixCache(pool)
+    toks = list(range(10))                  # 2 full pages + 2 spare tokens
+    pages = pool.alloc(3)
+    adopted = tree.insert(toks, pages)
+    assert adopted == 2                     # only full pages adopted
+    assert pool.refcount(pages[0]) == 2 and pool.refcount(pages[2]) == 1
+
+    n, got = tree.match(toks)
+    assert n == 8 and got == pages[:2]
+    assert pool.refcount(pages[0]) == 3     # tree + us
+    pool.release(got)
+
+    n, got = tree.match(toks[:4] + [99, 99, 99, 99])
+    assert n == 4 and got == pages[:1]
+    pool.release(got)
+
+    n, got = tree.match([99] * 8)
+    assert n == 0 and got == []
+    assert tree.lookups == 3 and tree.hits == 2
+
+
+def test_radix_insert_keeps_existing_page_on_duplicate():
+    pool = PagePool(num_pages=16, page_size=2)
+    tree = RadixPrefixCache(pool)
+    a = pool.alloc(1)
+    b = pool.alloc(1)
+    assert tree.insert([1, 2], a) == 1
+    assert tree.insert([1, 2], b) == 0      # same content: existing page wins
+    n, got = tree.match([1, 2])
+    assert n == 2 and got == a
+    pool.release(got)
+
+
+def test_radix_eviction_respects_live_refs():
+    pool = PagePool(num_pages=4, page_size=2)
+    tree = RadixPrefixCache(pool)
+    pages = pool.alloc(2)
+    tree.insert([1, 2, 3, 4], pages)
+    n, held = tree.match([1, 2, 3, 4])      # a "live request" shares both
+    assert n == 4
+    pool.release(pages)                     # original owner retires
+    # tree holds both, the live request holds both -> nothing freed yet
+    assert pool.free_pages == 1
+
+    # ask for more than free: eviction drops tree refs, but shared pages
+    # stay out of the free list until the live request releases them.
+    tree.evict_for(3)
+    assert tree.node_count == 0 and tree.evictions == 2
+    assert pool.free_pages == 1             # still held by the request
+    pool.release(held)
+    assert pool.free_pages == 3
+
+
+def test_radix_lru_order():
+    pool = PagePool(num_pages=8, page_size=1)
+    tree = RadixPrefixCache(pool)
+    pa = pool.alloc(1)
+    pb = pool.alloc(1)
+    tree.insert([1], pa)
+    tree.insert([2], pb)
+    n, got = tree.match([1])                # touch [1]: [2] is now LRU
+    pool.release(got)
+    tree.evict_lru(1)
+    assert tree.match([2])[0] == 0          # evicted
+    n, got = tree.match([1])
+    assert n == 1
+    pool.release(got)
+
+
+def test_radix_randomized_against_oracle():
+    rng = random.Random(7)
+    ps = 4
+    pool = PagePool(num_pages=64, page_size=ps)
+    tree = RadixPrefixCache(pool)
+    oracle = {}                             # prefix tuple -> page id
+    outstanding = []                        # page lists we must release
+
+    def oracle_match(toks):
+        pages = []
+        for i in range(0, len(toks) - ps + 1, ps):
+            page = oracle.get(tuple(toks[:i + ps]))
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def prune_oracle():
+        # drop evicted prefixes (and their extensions) from the oracle
+        live = set()
+
+        def walk(node, prefix):
+            for key, child in node.children.items():
+                live.add(prefix + key)
+                walk(child, prefix + key)
+
+        walk(tree.root, ())
+        return {k: v for k, v in oracle.items() if k in live}
+
+    for step in range(300):
+        toks = _tok(rng, rng.randrange(0, 4 * ps + 2), vocab=3)
+        action = rng.random()
+        if action < 0.45:
+            n_pages = len(toks) // ps
+            got = pool.alloc(n_pages)
+            if got is None:
+                tree.evict_for(n_pages)
+                oracle = prune_oracle()
+                got = pool.alloc(n_pages)
+            if got is None:
+                continue
+            tree.insert(toks, got)
+            if n_pages:
+                # read the tree's actual pages back (duplicates kept the
+                # pre-existing page) and mirror them into the oracle
+                n, in_tree = tree.match(toks[:n_pages * ps])
+                assert n == n_pages * ps
+                for i, page in enumerate(in_tree):
+                    oracle[tuple(toks[:(i + 1) * ps])] = page
+                pool.release(in_tree)
+            pool.release(got)
+        elif action < 0.85:
+            n, got = tree.match(toks)
+            expect = oracle_match(toks)
+            assert n == len(expect) * ps
+            assert got == expect
+            if got and rng.random() < 0.5:
+                outstanding.append(got)
+            elif got:
+                pool.release(got)
+        else:
+            before = tree.node_count
+            evicted = tree.evict_lru(rng.randint(1, 3))
+            assert tree.node_count == before - evicted
+            oracle = prune_oracle()
+        assert tree.node_count == len(oracle)
+    for got in outstanding:
+        pool.release(got)
+    tree.evict_for(pool.total_pages)
+    assert pool.free_pages == pool.total_pages
