@@ -1,0 +1,306 @@
+"""Quantized-KV A/B — bf16 cache vs int8 / fp8_e4m3 codes + in-register dequant.
+
+Decode is memory-bound: the flash-decode path already skips the *dead*
+cache bytes past each row's ``cur_len``; quantization shrinks the *live*
+ones.  A quantized cache stores 1-byte codes plus one float32 absmax
+scale per (token, kv-head) row — ~0.53x the bf16 bytes at head_dim 64 —
+and the attention kernels dequantize blocks in-register inside the
+online-softmax loop, so the HBM traffic per step drops by the same
+ratio.  The win is bandwidth, the cost is bounded logit drift; this
+bench commits both numbers.
+
+The A/B drives the decode-attention layer (the serve hot path this
+change targets) with one new token per row against a live cache at
+three fills — an eighth, half, three-quarters — exactly the
+BENCH_decode methodology: identical inputs per side, per-row ``cur_len``
+vectors advancing each step, each (impl, fill) sweep fenced inside a
+``pmt.Session`` region on the dummy backend so J/token reproduces in
+CI (joules track wall-clock deterministically; real hardware swaps the
+backend list only).
+
+Accuracy rides in the same artifact: serve-path decode logits on the
+reduced smollm config, quantized cache vs bf16, reported as max
+absolute drift relative to the max |logit| and gated per mode (int8
+<= 10%, fp8_e4m3 <= 20% — doubled headroom over measured drift; see
+tests/test_quant_serve.py for the per-arch gates).
+
+Pass criteria (written into BENCH_quant.json, validated by CI):
+int8 >= 1.2x tokens/s AND <= 0.85x J/token vs the bf16 cache at every
+measured fill >= half, and every mode's logit drift under its bound.
+
+Usage: PYTHONPATH=src python benchmarks/bench_quant.py \
+           [--smoke] [--json-out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as pmt
+from repro import configs
+from repro.kernels import quant
+from repro.kernels.decode_attention import ops as da_ops
+from repro.models import model as model_mod
+
+SCHEMA_VERSION = 1
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_JSON = os.path.join(_REPO_ROOT, "BENCH_quant.json")
+
+MODES = ("int8", "fp8_e4m3")
+DRIFT_GATE = {"int8": 0.10, "fp8_e4m3": 0.20}
+TOKS_GATE = 1.2          # int8 tokens/s floor vs bf16 at gate fills
+JPT_GATE = 0.85          # int8 J/token ceiling vs bf16 at gate fills
+
+
+def bench_cfg(smoke: bool):
+    """Same GQA shape as BENCH_decode: 8 query heads over 4 KV heads of
+    64, so the two artifacts measure the same serve-path layout.  The
+    full run uses a larger cache than BENCH_decode (8192): the contrast
+    under test is HBM/DRAM traffic per live byte, so the working set
+    must comfortably exceed the LLC — at 4096 the bf16 cache is
+    partially cache-resident and the measured ratio is contaminated by
+    where the prefix happens to sit."""
+    max_len = 2048 if smoke else 8192
+    cfg = dataclasses.replace(
+        configs.get_config("smollm-135m", reduced=True), dtype="float32",
+        num_heads=8, num_kv_heads=4, head_dim=64)
+    return cfg, max_len
+
+
+def make_step(cfg, mode):
+    """Jitted one-token flash-decode step for one cache precision.
+
+    ``mode=None`` attends the bf16 cache; a quant mode attends codes +
+    scales through the same dispatch (the lax fallback dequantizes with
+    the kernel's block scales, the Pallas path in-register)."""
+    scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
+
+    if mode is None:
+        def step(q, k, v, ks, vs, cur):
+            return da_ops.decode_attention(q, k, v, cur,
+                                           softcap=cfg.attn_softcap,
+                                           scale=scale)
+    else:
+        def step(q, k, v, ks, vs, cur):
+            return da_ops.decode_attention(q, k, v, cur,
+                                           softcap=cfg.attn_softcap,
+                                           scale=scale, k_scale=ks,
+                                           v_scale=vs)
+    return jax.jit(step)
+
+
+def run_impl(step_fn, operands, impl: str, batch: int, fills, steps: int,
+             repeats: int):
+    """Best-of-``repeats`` per fill on a private dummy-backend session."""
+    q, k, v, ks, vs = operands
+
+    def sweep(fill, record=None):
+        cur = jnp.full((batch,), fill, jnp.int32)
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(steps):
+            out = step_fn(q, k, v, ks, vs, cur)
+            cur = cur + 1
+        jax.block_until_ready(out)
+        seconds = time.perf_counter() - t0
+        if record is not None:
+            record["seconds"] = seconds
+
+    for fill in fills:          # warm jit + allocator, unmeasured
+        sweep(fill)
+
+    per_fill = {f: None for f in fills}
+    for _ in range(repeats):
+        fill_stats = {}
+        with pmt.Session(["dummy"], pool=pmt.SensorPool()) as sess:
+            mem = sess.add_exporter(pmt.MemoryExporter())
+            for fill in fills:
+                rec = {}
+                with sess.region(f"quant/{impl}/fill{fill}",
+                                 tokens=batch * steps):
+                    sweep(fill, record=rec)
+                fill_stats[fill] = rec
+            sess.flush()
+            for r in mem.records:
+                fill = int(r.path.rsplit("fill", 1)[1])
+                d = fill_stats[fill]
+                d["joules"] = r.joules
+                d["tokens"] = r.tokens
+                d["tokens_per_s"] = r.tokens / max(d["seconds"], 1e-9)
+                d["j_per_token"] = r.joules / max(r.tokens, 1)
+        for f in fills:         # per-fill best wall clock across repeats
+            if per_fill[f] is None \
+                    or fill_stats[f]["seconds"] < per_fill[f]["seconds"]:
+                per_fill[f] = fill_stats[f]
+    return {"impl": impl, "fills": {str(f): per_fill[f] for f in fills}}
+
+
+def cache_bytes_per_token(cfg, mode, max_len):
+    """k+v bytes per cached token (codes + scales when quantized)."""
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    if mode is None:
+        return 2 * kvh * hd * 2                       # bf16 k + v
+    return 2 * kvh * (hd * 1 + 4)                     # codes + f32 scale
+
+
+def measure_drift(mode):
+    """Serve-path decode logit drift on reduced smollm, quant vs bf16
+    cache — relative to the max |logit| (the number the accuracy gates
+    in tests/test_quant_serve.py bound per arch)."""
+    T = 32
+    cfg = dataclasses.replace(configs.get_config("smollm-135m",
+                                                 reduced=True),
+                              dtype="float32")
+    params, _ = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, T), 0,
+                                cfg.vocab_size)
+    logits = {}
+    for kvq in (None, mode):
+        c = dataclasses.replace(cfg, kv_quant=kvq)
+        prefill, decode, _ = model_mod.make_serve_fns(
+            c, cache_dtype=jnp.float32)
+        _, caches = jax.jit(lambda p, b: prefill(p, b, T + 4))(
+            params, {"tokens": tokens[:, :T - 1]})
+        lg, _ = jax.jit(decode)(params, caches, tokens[:, T - 1:T],
+                                jnp.asarray(T - 1, jnp.int32))
+        logits[kvq] = np.asarray(lg)
+    max_abs = float(np.max(np.abs(logits[mode] - logits[None])))
+    ref_mag = float(np.max(np.abs(logits[None])))
+    rel = max_abs / max(ref_mag, 1.0)
+    return {"max_abs": max_abs, "ref_logit_mag": ref_mag, "relative": rel,
+            "bound": DRIFT_GATE[mode], "ok": bool(rel < DRIFT_GATE[mode])}
+
+
+def main(smoke=False, json_out=DEFAULT_JSON):
+    cfg, max_len = bench_cfg(smoke)
+    batch = 4
+    steps = 16
+    repeats = 3 if smoke else 5
+    fills = [max_len // 8, max_len // 2, (3 * max_len) // 4]
+
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (batch, 1, cfg.num_heads, cfg.head_dim),
+                          jnp.float32)
+    kf = jax.random.normal(kk, (batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), jnp.float32)
+    vf = jax.random.normal(kv, (batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), jnp.float32)
+
+    operands = {"bf16": (q, kf.astype(jnp.bfloat16),
+                         vf.astype(jnp.bfloat16), None, None)}
+    for mode in MODES:
+        kc, ks = quant.quantize(kf, mode)
+        vc, vs = quant.quantize(vf, mode)
+        operands[mode] = (q, kc, vc, ks, vs)
+
+    results, drift = {}, {}
+    for impl in ("bf16",) + MODES:
+        step = make_step(cfg, None if impl == "bf16" else impl)
+        results[impl] = run_impl(step, operands[impl], impl, batch, fills,
+                                 steps, repeats)
+    for mode in MODES:
+        drift[mode] = measure_drift(mode)
+
+    print("# quantized-KV A/B: bf16 cache vs int8 / fp8_e4m3 codes "
+          "+ in-register dequant")
+    print(f"{'impl':10s} {'fill':>6s} {'tok/s':>10s} {'J/token':>12s} "
+          f"{'seconds':>9s}")
+    speedups = {m: {} for m in MODES}
+    for fill in fills:
+        f = str(fill)
+        for impl in ("bf16",) + MODES:
+            d = results[impl]["fills"][f]
+            print(f"{impl:10s} {fill:6d} {d['tokens_per_s']:10.1f} "
+                  f"{d['j_per_token']:12.8f} {d['seconds']:9.3f}")
+        base = results["bf16"]["fills"][f]
+        for mode in MODES:
+            d = results[mode]["fills"][f]
+            speedups[mode][f] = {
+                "tokens_per_s": d["tokens_per_s"]
+                / max(base["tokens_per_s"], 1e-9),
+                "j_per_token_ratio": d["j_per_token"]
+                / max(base["j_per_token"], 1e-12),
+            }
+            s = speedups[mode][f]
+            print(f"#          {fill:6d} {mode} {s['tokens_per_s']:.2f}x "
+                  f"tokens/s, {s['j_per_token_ratio']:.2f}x J/token")
+
+    for mode in MODES:
+        dr = drift[mode]
+        print(f"# drift {mode}: {dr['max_abs']:.5f} abs "
+              f"({dr['relative']:.4f} of max |logit| {dr['ref_logit_mag']:.2f}"
+              f", bound {dr['bound']}) -> {'OK' if dr['ok'] else 'FAIL'}")
+
+    gate_fills = [f for f in fills if f >= max_len // 2]
+    perf_met = all(
+        speedups["int8"][str(f)]["tokens_per_s"] >= TOKS_GATE
+        and speedups["int8"][str(f)]["j_per_token_ratio"] <= JPT_GATE
+        for f in gate_fills)
+    drift_met = all(drift[m]["ok"] for m in MODES)
+    # the smoke cache (max_len 2048) is small enough to sit in LLC, so
+    # the bandwidth win the perf gate measures may not materialize; the
+    # smoke leg gates on drift only (validate_bench applies the same
+    # relaxation) while the committed full run takes both gates.
+    target_met = drift_met if smoke else (perf_met and drift_met)
+    print(f"# gate (int8 >= {TOKS_GATE}x tok/s, <= {JPT_GATE}x J/token at "
+          f"fills {gate_fills}{' [informational: smoke]' if smoke else ''}; "
+          f"drift under bounds): {'PASS' if target_met else 'FAIL'}")
+
+    if json_out:
+        payload = {
+            "bench": "pmt_quant",
+            "schema_version": SCHEMA_VERSION,
+            "smoke": bool(smoke),
+            "workload": {
+                "shape": "decode attention layer, one token vs live "
+                         "cache, per-row cur_len vector",
+                "heads": cfg.num_heads,
+                "kv_heads": cfg.num_kv_heads,
+                "head_dim": cfg.head_dim,
+                "backend": "dummy",
+                "impl_backend": jax.default_backend(),
+                "batch": batch,
+                "max_len": max_len,
+                "steps_per_fill": steps,
+                "fills": fills,
+                "gate_fills": gate_fills,
+                "tokens_per_s_gate": TOKS_GATE,
+                "j_per_token_gate": JPT_GATE,
+                "cache_bytes_per_token": {
+                    impl: cache_bytes_per_token(
+                        cfg, None if impl == "bf16" else impl, max_len)
+                    for impl in ("bf16",) + MODES},
+            },
+            "bf16": results["bf16"],
+            "int8": results["int8"],
+            "fp8_e4m3": results["fp8_e4m3"],
+            "speedups": speedups,
+            "logit_drift": drift,
+            "perf_met": bool(perf_met),
+            "drift_met": bool(drift_met),
+            "target_met": bool(target_met),
+        }
+        with open(json_out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_out}")
+    return bool(target_met)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (smaller cache, fewer steps)")
+    ap.add_argument("--json-out", default=DEFAULT_JSON,
+                    help="where to write BENCH_quant.json ('' disables)")
+    a = ap.parse_args()
+    ok = main(smoke=a.smoke, json_out=a.json_out)
+    raise SystemExit(0 if ok else 1)

@@ -204,6 +204,42 @@ def validate_paged(d):
             f"{d['warm_ttft_ratio']:.2f}x cold)")
 
 
+def validate_quant(d):
+    w = d["workload"]
+    fills = w["fills"]
+    gate = w["gate_fills"]
+    assert gate and all(f >= w["max_len"] // 2 for f in gate)
+    bpt = w["cache_bytes_per_token"]
+    for mode in ("int8", "fp8_e4m3"):
+        assert bpt[mode] < bpt["bf16"], bpt        # the premise: fewer bytes
+    for impl in ("bf16", "int8", "fp8_e4m3"):
+        for f in fills:
+            _positive_float(d[impl]["fills"][str(f)], "tokens_per_s",
+                            "j_per_token", "seconds", "joules",
+                            ctx=(impl, f))
+            assert d[impl]["fills"][str(f)]["tokens"] > 0
+    for mode in ("int8", "fp8_e4m3"):
+        dr = d["logit_drift"][mode]
+        assert 0.0 <= dr["relative"] < dr["bound"], (mode, dr)
+        assert dr["ok"] is True, mode
+    assert d["drift_met"] is True
+    # perf gates hold on the committed full run; the CI smoke leg is too
+    # small to be bandwidth-bound (the bf16 cache fits in LLC), so it
+    # validates schema + accuracy only — same relaxation as pmt_paged
+    if not d.get("smoke"):
+        for f in gate:
+            s = d["speedups"]["int8"][str(f)]
+            assert s["tokens_per_s"] >= w["tokens_per_s_gate"], (f, s)
+            assert s["j_per_token_ratio"] <= w["j_per_token_gate"], (f, s)
+        assert d["perf_met"] is True
+        assert d["target_met"] is True, "int8 cache did not beat bf16"
+    half = d["speedups"]["int8"][str(gate[0])]
+    dr8 = d["logit_drift"]["int8"]
+    return (f"int8 {half['tokens_per_s']:.2f}x tokens/s, "
+            f"{half['j_per_token_ratio']:.2f}x J/token at fill {gate[0]}, "
+            f"drift {dr8['relative']:.4f} (bound {dr8['bound']})")
+
+
 VALIDATORS = {
     "pmt_overhead": validate_overhead,
     "pmt_serve": validate_serve,
@@ -212,6 +248,7 @@ VALIDATORS = {
     "pmt_governor": validate_governor,
     "pmt_faults": validate_faults,
     "pmt_paged": validate_paged,
+    "pmt_quant": validate_quant,
 }
 
 

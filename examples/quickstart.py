@@ -274,6 +274,16 @@ def paged_mode():
     layers store *unwrapped* pages (window applied as an explicit mask)
     rather than the contiguous path's ring buffer, which is why a page
     never has to be rewritten when the window slides.
+
+    Migration note (MoE determinism under prefix reuse): a warm
+    request resumes prefill at its radix match point, and when that
+    offset is off the cold run's chunk grid the float reductions
+    reorder by ~1 ulp.  Dense archs absorb this (same argmax), but MoE
+    routers can flip near-tied top-k choices and diverge from the cold
+    tokens.  If you need bit-identical warm/cold MoE serving, keep
+    resume offsets on the chunk grid — set ``kv_page_size ==
+    prefill_chunk`` (tests/test_serve_paged.py gates the MoE arch
+    exactly this way) — or disable reuse with ``prefix_cache=False``.
     benchmarks/bench_paged.py measures admitted concurrency at a fixed
     cache-memory budget, J/token parity, and warm-vs-cold first-token
     latency (BENCH_paged.json).
@@ -304,6 +314,78 @@ def paged_mode():
               f"prefix hits {kc['prefix_hits']}/{kc['prefix_lookups']} "
               f"({kc['prefix_hit_tokens']} tokens reused, "
               f"{kc['prefix_evictions']} evictions)")
+
+
+def quantized_mode():
+    """Quantized KV caches: int8 / fp8 rows, dequantized in-kernel.
+
+    Decode is memory-bound, so cache bytes are joules (see
+    ``serving_mode``).  ``ServeEngine(cache_dtype="int8")`` (or
+    ``"fp8_e4m3"``) halves the bytes every decode step streams:
+
+      * **Write side** — the ``kernels/cache_update`` family quantizes
+        each K/V row at admission/decode scatter time: symmetric
+        per-(token, kv-head) absmax scaling over the head dim, int8 (or
+        fp8-e4m3) codes plus one f32 scale per row per kv-head.  In the
+        paged layout scales live page-granular beside the code pages
+        and ride the same page table.
+      * **Read side** — the decode/prefill attention kernels
+        (contiguous + paged) dequantize K and V *in-register* inside
+        the online-softmax loop: codes stream from HBM at 1 byte/elem
+        and widen to f32 only in the block actually being attended.  No
+        dequantized copy of the cache ever exists in memory.  MLA's
+        latent cache quantizes once — the same quantized rows serve as
+        both key and value (the v-width alias), preserving the
+        slice-then-dequant == dequant-then-slice identity.
+      * **Accuracy** — serve-path logit drift vs the bf16 cache stays
+        under 1% (int8) / ~1.4% (fp8) of max |logit| on the reduced
+        gate configs; tests/test_quant_serve.py gates all three cache
+        families (GQA, sliding-window ring, MLA latent) at 10%/20%
+        relative bounds, and every quantized kernel has a blockwise
+        reference twin it must match bit-exactly in interpret mode
+        (tests/test_quant_kernels.py).
+      * **Payoff** — benchmarks/bench_quant.py A/Bs int8/fp8 against
+        bf16 at several cache fills: int8 reaches ~1.3x tokens/s and
+        ~0.75x J/token at half-full 8k caches where the working set
+        exceeds cache-resident sizes (BENCH_quant.json; fp8 matches
+        int8's bytes but pays software f8 conversion off-TPU, so only
+        int8 carries the perf gate).
+
+    The knob is uniform: ``cfg.kv_quant`` / ``ServeEngine(
+    cache_dtype="int8")`` / ``repro.launch.serve --cache-dtype int8``.
+    ``stats()["kv_cache"]`` reports ``cache_dtype`` and
+    ``bytes_per_token`` for both layouts, and prefix-cache savings are
+    priced at the engine's *own* learned J/token — a quantized engine
+    never bills at a bf16 engine's rate.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro import configs
+    from repro.models import model as model_mod
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = dataclasses.replace(
+        configs.get_config("smollm-135m", reduced=True), dtype="float32")
+    params, _ = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[3, 1, 4, 1, 5, 9, 2, 6], [2, 7, 1, 8], [1, 1, 2, 3, 5]]
+    outs = {}
+    with pmt.Session(["dummy"]) as sess:
+        for cache_dtype in ("bfloat16", "int8"):
+            eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                              session=sess, kv_layout="paged",
+                              kv_page_size=8, cache_dtype=cache_dtype)
+            done = eng.generate([Request(prompt=p, max_new_tokens=6)
+                                 for p in prompts])
+            kc = eng.stats()["kv_cache"]
+            outs[cache_dtype] = [r.out for r in done]
+            print(f"  {kc['cache_dtype']:>8s}: "
+                  f"{kc['bytes_per_token']:6.1f} B/token")
+        agree = sum(a == b for a, b in zip(outs["bfloat16"], outs["int8"]))
+        print(f"  int8 vs bf16 greedy tokens: {agree}/{len(prompts)} "
+              f"requests identical (drift gates are on logits; see "
+              f"tests/test_quant_serve.py)")
 
 
 def telemetry_mode():
@@ -476,6 +558,8 @@ if __name__ == "__main__":
     serving_mode()
     print("\n== paged KV (page pools, radix prefix reuse)")
     paged_mode()
+    print("\n== quantized KV (int8/fp8 rows, in-kernel dequant)")
+    quantized_mode()
     print("\n== live telemetry & power capping (the control plane)")
     telemetry_mode()
     print("\n== fault tolerance (supervisor, degraded spans, fail-safe)")

@@ -141,6 +141,14 @@ class ModelConfig:
     # ServeEngine(kv_layout="paged") for the page pool, the radix prefix
     # cache edge length, and the kernels' scalar-prefetch page tables.
     kv_page_size: int = 16
+    # quantized KV cache: "int8" / "fp8_e4m3" stores attention K/V (and
+    # the MLA latent) cache rows as low-bit codes plus per-row float32
+    # absmax scales (kernels/quant.py); the decode/prefill attention
+    # kernels dequantize blocks in-register.  None = store at the
+    # serving cache dtype.  Surface knobs: ServeEngine(cache_dtype=
+    # "int8") / launch/serve --cache-dtype.  State (mamba/xlstm) and
+    # cross-attention caches are never quantized.
+    kv_quant: Optional[str] = None
     ssm_chunk: int = 128             # time-chunk for mamba associative scan
     mla_absorb: bool = True          # DeepSeek absorbed-weights decode path
     kernels: str = "reference"       # reference | pallas
@@ -167,6 +175,10 @@ class ModelConfig:
                              f"divisible by kv heads {self.num_kv_heads}")
         if self.family == "hybrid" and not self.hybrid_pattern:
             raise ValueError("hybrid family requires hybrid_pattern")
+        if self.kv_quant is not None and self.kv_quant not in (
+                "int8", "fp8_e4m3"):
+            raise ValueError(f"{self.name}: unknown kv_quant "
+                             f"{self.kv_quant!r} (int8 | fp8_e4m3)")
 
     # -- derived sizes --------------------------------------------------------
     def param_count(self) -> int:

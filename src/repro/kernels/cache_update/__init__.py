@@ -1,5 +1,10 @@
-from repro.kernels.cache_update.ops import cache_update
+from repro.kernels.cache_update.ops import (cache_update,
+                                            paged_cache_update,
+                                            quant_cache_update,
+                                            quant_paged_cache_update)
 from repro.kernels.cache_update.cache_update import cache_update_pallas
 from repro.kernels.cache_update.ref import cache_update_ref
 
-__all__ = ["cache_update", "cache_update_pallas", "cache_update_ref"]
+__all__ = ["cache_update", "paged_cache_update", "quant_cache_update",
+           "quant_paged_cache_update", "cache_update_pallas",
+           "cache_update_ref"]

@@ -18,10 +18,14 @@ runs in interpret mode where no such constraint applies.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import quant
 
 
 def _scatter_kernel(slots_ref, new_ref, cache_ref, out_ref):
@@ -124,3 +128,143 @@ def cache_update_pallas(cache: jnp.ndarray, new: jnp.ndarray,
         input_output_aliases={2: 0},
         interpret=interpret,
     )(slots.astype(jnp.int32), new.astype(cache.dtype), cache)
+
+
+# -- fused quantize + scatter (quantized KV caches) ---------------------------
+#
+# The quantized cache stores low-bit codes plus one float32 absmax
+# scale per (token, head) row (kernels/quant.py).  These twins fuse the
+# quantization into the scatter: each program reads its full-precision
+# row, computes the per-head absmax scale in-register, and DMAs the
+# codes row and the scale row into their (aliased) caches — so a decode
+# step's cache write streams the incoming row once, at full precision,
+# and everything it stores is already quantized.
+
+def _quant_scatter_kernel(slots_ref, new_ref, cache_ref, scales_ref,
+                          out_ref, s_out_ref, *, mode):
+    del slots_ref, cache_ref, scales_ref          # aliased, never read
+    qm = quant.qmax(mode)
+    x = new_ref[0, 0].astype(jnp.float32)         # (H, D)
+    amax = jnp.max(jnp.abs(x), axis=-1)           # (H,)
+    s = jnp.maximum(amax, quant.SCALE_EPS) * quant.qmax_inv(mode)
+    y = x / s[:, None]
+    if mode == "int8":
+        y = jnp.round(y)
+    out_ref[0, 0] = jnp.clip(y, -qm, qm).astype(out_ref.dtype)
+    s_out_ref[0, 0] = s
+
+
+def quant_cache_update_pallas(cache: jnp.ndarray, scales: jnp.ndarray,
+                              new: jnp.ndarray, slots: jnp.ndarray,
+                              mode: str,
+                              interpret: bool = False):
+    """Quantize ``new[b, 0]`` per head row and scatter codes + scales at
+    ``slots[b]``.
+
+    cache: (B, C, H, D) codes   scales: (B, C, H) float32
+    new: (B, 1, H, D) full precision   slots: (B,) int32 in [0, C).
+    Returns (cache, scales) updated; both input buffers are aliased.
+    """
+    b, _, h, d = cache.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda i, slots: (i, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),                # cache
+            pl.BlockSpec(memory_space=pl.ANY),                # scales
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, h, d),
+                         lambda i, slots: (i, slots[i], 0, 0)),
+            pl.BlockSpec((1, 1, h), lambda i, slots: (i, slots[i], 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_quant_scatter_kernel, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+                   jax.ShapeDtypeStruct(scales.shape, scales.dtype)],
+        # operands: (slots, new, cache, scales)
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(slots.astype(jnp.int32), new, cache, scales)
+
+
+def _quant_paged_scatter_kernel(pt_ref, starts_ref, valids_ref, new_ref,
+                                pool_ref, spool_ref, out_ref, s_out_ref,
+                                *, mode):
+    del pt_ref, starts_ref, valids_ref, pool_ref, spool_ref
+    qm = quant.qmax(mode)
+    x = new_ref[0, 0].astype(jnp.float32)         # (H, D)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    s = jnp.maximum(amax, quant.SCALE_EPS) * quant.qmax_inv(mode)
+    y = x / s[:, None]
+    if mode == "int8":
+        y = jnp.round(y)
+    out_ref[0, 0] = jnp.clip(y, -qm, qm).astype(out_ref.dtype)
+    s_out_ref[0, 0] = s
+
+
+def quant_paged_cache_update_pallas(pool: jnp.ndarray, scales: jnp.ndarray,
+                                    new: jnp.ndarray,
+                                    page_table: jnp.ndarray,
+                                    starts: jnp.ndarray, valids: jnp.ndarray,
+                                    mode: str,
+                                    interpret: bool = False):
+    """Paged twin of :func:`quant_cache_update_pallas`: quantize row
+    ``t`` of ``new[b]`` and land codes + scale at logical position
+    ``starts[b] + t`` through the page table (masked rows -> scratch
+    page 0, same contract as ``paged_cache_update_pallas`` — the scale
+    pool pages alongside its code pool, so the per-row scales are
+    page-granular and travel with the page through prefix sharing).
+
+    pool: (P, page_size, H, D) codes   scales: (P, page_size, H) f32
+    new: (B, T, H, D)   page_table: (B, NB) int32   starts/valids: (B,).
+    Returns (pool, scales) updated; both input buffers are aliased.
+    """
+    p, ps, h, d = pool.shape
+    b, t = new.shape[:2]
+    nb = page_table.shape[1]
+
+    def new_map(bi, ti, pt, starts, valids):
+        return (bi, ti, 0, 0)
+
+    def _route(bi, ti, pt, starts, valids):
+        pos = jnp.minimum(starts[bi] + ti, nb * ps - 1)
+        ok = ti < valids[bi]
+        page = jnp.where(ok, pt[bi, pos // ps], 0)
+        row = jnp.where(ok, pos % ps, 0)
+        return page, row
+
+    def out_map(bi, ti, pt, starts, valids):
+        page, row = _route(bi, ti, pt, starts, valids)
+        return (page, row, 0, 0)
+
+    def s_out_map(bi, ti, pt, starts, valids):
+        page, row = _route(bi, ti, pt, starts, valids)
+        return (page, row, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), new_map),              # new row
+            pl.BlockSpec(memory_space=pl.ANY),                # pool
+            pl.BlockSpec(memory_space=pl.ANY),                # scale pool
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, h, d), out_map),
+            pl.BlockSpec((1, 1, h), s_out_map),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_quant_paged_scatter_kernel, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+                   jax.ShapeDtypeStruct(scales.shape, scales.dtype)],
+        # operands: (page_table, starts, valids, new, pool, scales)
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), starts.astype(jnp.int32),
+      valids.astype(jnp.int32), new, pool, scales)

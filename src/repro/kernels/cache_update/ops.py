@@ -17,9 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.cache_update.cache_update import (
-    cache_update_pallas, paged_cache_update_pallas)
+    cache_update_pallas, paged_cache_update_pallas,
+    quant_cache_update_pallas, quant_paged_cache_update_pallas)
 from repro.kernels.cache_update.ref import (cache_update_ref,
-                                            paged_cache_update_ref)
+                                            paged_cache_update_ref,
+                                            quant_cache_update_ref,
+                                            quant_paged_cache_update_ref)
 
 
 def _resolve(impl: str) -> str:
@@ -72,3 +75,70 @@ def paged_cache_update(pool: jnp.ndarray, new: jnp.ndarray,
         pool.reshape(p, ps, -1), new.astype(pool.dtype).reshape(b, t, -1),
         page_table, starts, valids, interpret=impl == "pallas_interpret")
     return out.reshape(pool.shape)
+
+
+# -- quantized writes (codes + per-row scales) --------------------------------
+
+def _quant_heads(cache) -> int:
+    """Rows per token: product of the dims between position and the
+    quantized last axis — KVH for attention K/V, 1 for MLA latents."""
+    h = 1
+    for n in cache.shape[2:-1]:
+        h *= n
+    return h
+
+
+def quant_cache_update(cache: jnp.ndarray, scales: jnp.ndarray,
+                       new: jnp.ndarray, slots: jnp.ndarray, mode: str,
+                       impl: str = "auto"):
+    """Quantize ``new[b, 0]`` (per-row absmax over the last axis, see
+    ``kernels/quant``) and write codes + scales at ``cache[b, slots[b]]``
+    / ``scales[b, slots[b]]``.
+
+    cache: (B, C, *rest) codes   scales: (B, C, *rest[:-1]) float32
+    new: (B, 1, *rest) full precision   slots: (B,) int32.
+    Returns ``(cache, scales)``.  The Pallas path fuses the quantization
+    into the scatter (one program per row computes its own scale);
+    "lax" quantizes the row then runs two oracle scatters — bit-
+    identical results either way.
+    """
+    impl = _resolve(impl)
+    if impl == "lax":
+        return quant_cache_update_ref(cache, scales, new, slots, mode)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown cache_update impl {impl!r}")
+    b, c = cache.shape[:2]
+    h, d = _quant_heads(cache), cache.shape[-1]
+    out, s_out = quant_cache_update_pallas(
+        cache.reshape(b, c, h, d), scales.reshape(b, c, h),
+        new.reshape(b, 1, h, d), slots, mode,
+        interpret=impl == "pallas_interpret")
+    return out.reshape(cache.shape), s_out.reshape(scales.shape)
+
+
+def quant_paged_cache_update(pool: jnp.ndarray, scales: jnp.ndarray,
+                             new: jnp.ndarray, page_table: jnp.ndarray,
+                             starts: jnp.ndarray, valids: jnp.ndarray,
+                             mode: str, impl: str = "auto"):
+    """Paged twin of :func:`quant_cache_update`: codes land in ``pool``
+    and scales in the page-aligned ``scales`` pool through the same
+    page-table indirection (masked rows -> scratch page 0 in both).
+
+    pool: (P, page_size, *rest)   scales: (P, page_size, *rest[:-1])
+    new: (B, T, *rest)   page_table: (B, NB)   starts/valids: (B,).
+    Returns ``(pool, scales)``.
+    """
+    impl = _resolve(impl)
+    if impl == "lax":
+        return quant_paged_cache_update_ref(pool, scales, new, page_table,
+                                            starts, valids, mode)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown cache_update impl {impl!r}")
+    p, ps = pool.shape[:2]
+    b, t = new.shape[:2]
+    h, d = _quant_heads(pool), pool.shape[-1]
+    out, s_out = quant_paged_cache_update_pallas(
+        pool.reshape(p, ps, h, d), scales.reshape(p, ps, h),
+        new.reshape(b, t, h, d), page_table, starts, valids, mode,
+        interpret=impl == "pallas_interpret")
+    return out.reshape(pool.shape), s_out.reshape(scales.shape)

@@ -3,9 +3,15 @@
 One ``dynamic_update_slice`` per batch row under ``vmap`` — exactly the
 semantics the Pallas kernel must reproduce (and the serve engine's
 fallback path where Pallas is unavailable, e.g. CPU/GPU backends).
+
+The ``quant_*`` twins quantize with :func:`repro.kernels.quant.quantize`
+— per-row elementwise ops, so quantizing the whole chunk here and one
+row per program in the kernel produces bit-identical codes and scales.
 """
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import quant
 
 
 def cache_update_ref(cache: jnp.ndarray, new: jnp.ndarray,
@@ -47,3 +53,31 @@ def paged_cache_update_ref(pool: jnp.ndarray, new: jnp.ndarray,
     out = flat.at[(page * ps + row).reshape(-1)].set(
         new.reshape(b * t, -1).astype(pool.dtype))
     return out.reshape(pool.shape)
+
+
+def quant_cache_update_ref(cache: jnp.ndarray, scales: jnp.ndarray,
+                           new: jnp.ndarray, slots: jnp.ndarray, mode: str):
+    """Quantizing twin: quantize ``new`` per row, scatter codes into
+    ``cache`` and scales into ``scales``.
+
+    cache: (B, C, *rest) codes  scales: (B, C, *rest[:-1]) float32
+    new: (B, 1, *rest) full precision  slots: (B,) int32.
+    """
+    codes, s = quant.quantize(new, mode)
+    return (cache_update_ref(cache, codes, slots),
+            cache_update_ref(scales, s, slots))
+
+
+def quant_paged_cache_update_ref(pool: jnp.ndarray, scales: jnp.ndarray,
+                                 new: jnp.ndarray, page_table: jnp.ndarray,
+                                 starts: jnp.ndarray, valids: jnp.ndarray,
+                                 mode: str):
+    """Paged quantizing twin: codes land in ``pool``, scales in the
+    page-aligned ``scales`` pool (same page-id space, same masking).
+
+    pool: (P, page_size, *rest)  scales: (P, page_size, *rest[:-1])
+    new: (B, T, *rest)  page_table: (B, NB)  starts/valids: (B,) int32.
+    """
+    codes, s = quant.quantize(new, mode)
+    return (paged_cache_update_ref(pool, codes, page_table, starts, valids),
+            paged_cache_update_ref(scales, s, page_table, starts, valids))

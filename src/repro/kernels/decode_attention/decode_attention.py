@@ -28,6 +28,15 @@ This kernel makes the cache read *length-aware*:
 BlockSpec then reads only the first ``v_width`` lanes (the MLA latent
 cache stores [latent | rope] concatenated; scores use the full row,
 values only the latent prefix).
+
+Quantized caches (``k_scale``/``v_scale`` set): k/v hold int8 or
+fp8_e4m3 codes and the scale arrays hold one float32 absmax scale per
+(slot, kv head) row — see ``kernels/quant``.  The scale blocks ride the
+*same clamped index maps* as their code blocks (minus the lane axis),
+so dead blocks elide the scale DMA exactly like the code DMA, and the
+kernel dequantizes in-register — ``codes.astype(f32) * scale[:, None]``
+— right before each dot.  The contract keeps memory traffic at the
+quantized width: nothing is ever materialised dequantized in HBM.
 """
 from __future__ import annotations
 
@@ -43,10 +52,17 @@ from repro.kernels.constants import NEG_INF
 from repro.kernels.decode_attention.ref import pick_block_k
 
 
-def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *,
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, *refs,
                    scale: float, ring: bool, softcap, bk: int,
-                   kv_steps: int, cache_size: int):
+                   kv_steps: int, cache_size: int,
+                   quantized: bool = False):
+    # Quantized call sites append two float32 scale operands after v —
+    # the ref list is (ks, vs, o, m, l, acc) or (o, m, l, acc).
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     bi = pl.program_id(0)
     ki = pl.program_id(2)
     cur = lens_ref[bi]
@@ -67,6 +83,8 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, hdq)
         k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hdq)
+        if quantized:
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)               # (G, bk)
@@ -89,6 +107,8 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1,
                                                   keepdims=True)
         v = v_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hdv)
+        if quantized:
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
             p, v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
@@ -99,10 +119,14 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-def _paged_decode_kernel(lens_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *,
+def _paged_decode_kernel(lens_ref, pt_ref, q_ref, k_ref, v_ref, *refs,
                          scale: float, window, softcap, ps: int,
-                         kv_steps: int):
+                         kv_steps: int, quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     bi = pl.program_id(0)
     ki = pl.program_id(2)
     cur = lens_ref[bi]
@@ -128,6 +152,8 @@ def _paged_decode_kernel(lens_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, hdq)
         k = k_ref[0, :, 0, :].astype(jnp.float32)             # (ps, hdq)
+        if quantized:
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)               # (G, ps)
@@ -146,6 +172,8 @@ def _paged_decode_kernel(lens_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1,
                                                   keepdims=True)
         v = v_ref[0, :, 0, :].astype(jnp.float32)             # (ps, hdv)
+        if quantized:
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
             p, v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
@@ -159,6 +187,7 @@ def _paged_decode_kernel(lens_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
 def decode_attention_paged_pallas(q, k_pool, v_pool, page_table, lens, *,
                                   window=None, softcap=None,
                                   scale: float = 1.0, v_width=None,
+                                  k_scale=None, v_scale=None,
                                   interpret: bool = False):
     """Paged flash-decode: q (B, KVH, G, hdq) against physical page
     pools k_pool/v_pool (P, page_size, KVH, hd*) through a
@@ -169,17 +198,23 @@ def decode_attention_paged_pallas(q, k_pool, v_pool, page_table, lens, *,
     ``(b, block)``", with the same clamp-to-elide-DMA trick on both
     the beyond-``lens`` tail and (windowed) the below-window head.
     Returns (B, KVH, G, hdv) in q.dtype.  ``v_width``: read only the
-    first lanes of v (``v_pool`` may alias ``k_pool`` — MLA)."""
+    first lanes of v (``v_pool`` may alias ``k_pool`` — MLA).
+    ``k_scale``/``v_scale``: (P, page_size, KVH) float32 per-row absmax
+    scale pools for quantized code pools; they page through the same
+    table and clamp, and the kernel dequantizes in-register."""
     b, kvh, g, hdq = q.shape
     ps = k_pool.shape[1]
     nb = page_table.shape[1]
     c = nb * ps
     hdv = v_width if v_width is not None else v_pool.shape[-1]
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        v_scale = k_scale
 
     def q_map(bi, hi, ki, lens, pt):
         return (bi, hi, 0, 0)
 
-    def kv_map(bi, hi, ki, lens, pt):
+    def _page(bi, ki, lens, pt):
         # Clamp the sweep to the row's needed page range, then map the
         # logical page through the page table: a revisited *physical*
         # index elides the HBM->VMEM copy entirely.
@@ -189,19 +224,34 @@ def decode_attention_paged_pallas(q, k_pool, v_pool, page_table, lens, *,
         if window is not None:
             first = jnp.maximum(lens[bi] - (window - 1), 0) // ps
             j = jnp.maximum(j, jnp.minimum(first, last))
-        return (pt[bi, j], 0, hi, 0)
+        return pt[bi, j]
+
+    def kv_map(bi, hi, ki, lens, pt):
+        return (_page(bi, ki, lens, pt), 0, hi, 0)
+
+    def scale_map(bi, hi, ki, lens, pt):
+        # Same physical page as the codes: the scale DMA is elided for
+        # exactly the pages whose code DMA is elided.
+        return (_page(bi, ki, lens, pt), 0, hi)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hdq), q_map),
+        pl.BlockSpec((1, ps, 1, hdq), kv_map),
+        pl.BlockSpec((1, ps, 1, hdv), kv_map),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map),
+                     pl.BlockSpec((1, ps, 1), scale_map)]
+        operands += [k_scale, v_scale]
 
     kernel = functools.partial(
         _paged_decode_kernel, scale=scale, window=window, softcap=softcap,
-        ps=ps, kv_steps=nb)
+        ps=ps, kv_steps=nb, quantized=quantized)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kvh, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hdq), q_map),
-            pl.BlockSpec((1, ps, 1, hdq), kv_map),
-            pl.BlockSpec((1, ps, 1, hdv), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hdv), q_map),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),     # m: running row max
@@ -216,22 +266,28 @@ def decode_attention_paged_pallas(q, k_pool, v_pool, page_table, lens, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(lens.astype(jnp.int32), page_table.astype(jnp.int32), q, k_pool, v_pool)
+    )(lens.astype(jnp.int32), page_table.astype(jnp.int32), *operands)
 
 
 def decode_attention_pallas(q, k, v, lens, *, ring: bool = False,
                             softcap=None, scale: float = 1.0,
                             block_k: int = 128, v_width=None,
+                            k_scale=None, v_scale=None,
                             interpret: bool = False):
     """q: (B, KVH, G, hdq), k: (B, C, KVH, hdq), v: (B, C, KVH, hdv),
     lens: (B,) int32 new-token positions.  Returns (B, KVH, G, hdv) in
     q.dtype.  ``v_width``: read only the first lanes of v (see module
-    docstring; ``v`` may alias ``k``)."""
+    docstring; ``v`` may alias ``k``).  ``k_scale``/``v_scale``:
+    (B, C, KVH) float32 per-row absmax scales when k/v hold quantized
+    codes; the kernel dequantizes blocks in-register."""
     b, kvh, g, hdq = q.shape
     c = k.shape[1]
     hdv = v_width if v_width is not None else v.shape[-1]
     bk = pick_block_k(c, block_k)
     kv_steps = c // bk
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        v_scale = k_scale
 
     def q_map(bi, hi, ki, lens):
         return (bi, hi, 0, 0)
@@ -242,17 +298,29 @@ def decode_attention_pallas(q, k, v, lens, *, ring: bool = False,
         last = jnp.minimum(lens[bi], c - 1) // bk
         return (bi, jnp.minimum(ki, last), hi, 0)
 
+    def scale_map(bi, hi, ki, lens):
+        # Code block and scale block share the clamp: both DMAs elide.
+        last = jnp.minimum(lens[bi], c - 1) // bk
+        return (bi, jnp.minimum(ki, last), hi)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hdq), q_map),
+        pl.BlockSpec((1, bk, 1, hdq), kv_map),
+        pl.BlockSpec((1, bk, 1, hdv), kv_map),
+    ]
+    operands = [q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bk, 1), scale_map),
+                     pl.BlockSpec((1, bk, 1), scale_map)]
+        operands += [k_scale, v_scale]
+
     kernel = functools.partial(
         _decode_kernel, scale=scale, ring=ring, softcap=softcap, bk=bk,
-        kv_steps=kv_steps, cache_size=c)
+        kv_steps=kv_steps, cache_size=c, quantized=quantized)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kvh, kv_steps),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hdq), q_map),
-            pl.BlockSpec((1, bk, 1, hdq), kv_map),
-            pl.BlockSpec((1, bk, 1, hdv), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hdv), q_map),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),     # m: running row max
@@ -267,4 +335,4 @@ def decode_attention_pallas(q, k, v, lens, *, ring: bool = False,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(lens.astype(jnp.int32), q, k, v)
+    )(lens.astype(jnp.int32), *operands)

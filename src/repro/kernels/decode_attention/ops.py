@@ -61,7 +61,8 @@ _LAX_SEGMENTS = 8
 
 def decode_attention_lax(q, k, v, lens, *, ring: bool = False,
                          softcap=None, scale: float = 1.0,
-                         block_k: int = 128, v_width=None):
+                         block_k: int = 128, v_width=None,
+                         k_scale=None, v_scale=None):
     """Length-aware masked decode attention in plain XLA.
 
     Same layout as the kernel: q (B, KVH, G, hdq), k/v (B, C, KVH, *),
@@ -77,6 +78,11 @@ def decode_attention_lax(q, k, v, lens, *, ring: bool = False,
     (measurably faster than einsum-ing the strided cache layout, and
     segment-sized working sets stay cache-resident between the score
     and value passes).
+
+    ``k_scale``/``v_scale``: (B, C, KVH) float32 per-row absmax scales
+    when k/v hold quantized codes — each live segment dequantizes its
+    own slice during the cast+transpose copy, so the skipped-segment
+    bandwidth saving applies to quantized reads too.
     """
     del block_k                     # kernel tiling knob; segments are ~C/8
     b, kvh, g, _ = q.shape
@@ -85,14 +91,23 @@ def decode_attention_lax(q, k, v, lens, *, ring: bool = False,
     qs = q.astype(jnp.float32) * scale
     lens = jnp.asarray(lens, jnp.int32)
     alias = v is k
+    quantized = k_scale is not None
+    s_alias = v_scale is None or v_scale is k_scale
+    if quantized and v_scale is None:
+        v_scale = k_scale
     seg = -(-c // _LAX_SEGMENTS)
 
-    def seg_partial(kp, vp, lo):
+    def seg_partial(kp, vp, ksp, vsp, lo):
         kf = kp.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B,KVH,S,hdq)
-        if v_width is not None and vp is kp:
+        if quantized:
+            kf = kf * ksp.transpose(0, 2, 1).astype(jnp.float32)[..., None]
+        if v_width is not None and vp is kp and (not quantized or s_alias):
             vf = kf[..., :v_width]
         else:
             vf = vp.transpose(0, 2, 1, 3).astype(jnp.float32)
+            if quantized:
+                vf = vf * vsp.transpose(0, 2, 1) \
+                    .astype(jnp.float32)[..., None]
             if v_width is not None:
                 vf = vf[..., :v_width]
         s = jnp.einsum("bhgd,bhkd->bhgk", qs, kf)
@@ -126,12 +141,18 @@ def decode_attention_lax(q, k, v, lens, *, ring: bool = False,
     for lo in range(0, c, seg):
         kp = k[:, lo:lo + seg]
         vp = kp if alias else v[:, lo:lo + seg]
+        if quantized:
+            ksp = k_scale[:, lo:lo + seg]
+            vsp = ksp if s_alias else v_scale[:, lo:lo + seg]
+        else:
+            ksp = vsp = None
         if lo == 0:                 # slot 0 is always valid
-            parts.append(seg_partial(kp, vp, 0))
+            parts.append(seg_partial(kp, vp, ksp, vsp, 0))
             continue
         parts.append(jax.lax.cond(
             need > lo,
-            lambda kp_, vp_, lo_=lo: seg_partial(kp_, vp_, lo_),
+            lambda kp_, vp_, lo_=lo, ks_=ksp, vs_=vsp:
+                seg_partial(kp_, vp_, ks_, vs_, lo_),
             lambda kp_, vp_: skip, kp, vp))
     ms = jnp.stack([p[0] for p in parts])
     m = jnp.max(ms, axis=0)
@@ -143,7 +164,7 @@ def decode_attention_lax(q, k, v, lens, *, ring: bool = False,
 
 def decode_attention_paged_lax(q, k_pool, v_pool, page_table, lens, *,
                                window=None, softcap=None, scale: float = 1.0,
-                               v_width=None):
+                               v_width=None, k_scale=None, v_scale=None):
     """Length-aware masked *paged* decode attention in plain XLA.
 
     q (B, KVH, G, hdq); pools (P, page_size, KVH, *); page_table
@@ -166,6 +187,10 @@ def decode_attention_paged_lax(q, k_pool, v_pool, page_table, lens, *,
     lens = jnp.asarray(lens, jnp.int32)
     pt = page_table.astype(jnp.int32)
     alias = v_pool is k_pool
+    quantized = k_scale is not None
+    s_alias = v_scale is None or v_scale is k_scale
+    if quantized and v_scale is None:
+        v_scale = k_scale
     seg_pages = -(-nb // _LAX_SEGMENTS)
 
     def seg_partial(pages, lo):
@@ -173,12 +198,21 @@ def decode_attention_paged_lax(q, k_pool, v_pool, page_table, lens, *,
         sp = pages.shape[1] * ps
         kf = kp.reshape(b, sp, kvh, -1).transpose(0, 2, 1, 3) \
             .astype(jnp.float32)                 # (B, KVH, S, hdq)
-        if alias:
+        if quantized:
+            ksp = jnp.take(k_scale, pages, axis=0)
+            kf = kf * ksp.reshape(b, sp, kvh).transpose(0, 2, 1) \
+                .astype(jnp.float32)[..., None]
+        if alias and (not quantized or s_alias):
             vf = kf[..., :hdv]
         else:
             vp = jnp.take(v_pool, pages, axis=0)
             vf = vp.reshape(b, sp, kvh, -1).transpose(0, 2, 1, 3) \
-                .astype(jnp.float32)[..., :hdv]
+                .astype(jnp.float32)
+            if quantized:
+                vsp = jnp.take(v_scale, pages, axis=0)
+                vf = vf * vsp.reshape(b, sp, kvh).transpose(0, 2, 1) \
+                    .astype(jnp.float32)[..., None]
+            vf = vf[..., :hdv]
         s = jnp.einsum("bhgd,bhkd->bhgk", qs, kf)
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
@@ -227,7 +261,8 @@ def decode_attention_paged_lax(q, k_pool, v_pool, page_table, lens, *,
 
 def decode_attention_paged(q, k_pool, v_pool, page_table, cur_len, *,
                            window=None, softcap=None, scale: float = 1.0,
-                           v_width=None, impl: str = "auto"):
+                           v_width=None, k_scale=None, v_scale=None,
+                           impl: str = "auto"):
     """One-token decode attention over a *paged* cache.
 
     q: (B, 1, H, hdq) new-token queries.  k_pool/v_pool:
@@ -236,7 +271,10 @@ def decode_attention_paged(q, k_pool, v_pool, page_table, cur_len, *,
     (B, NB) int32 logical block -> physical page.  cur_len: (B,) int32.
     Paged caches store sliding-window layers unwrapped, so ``window``
     is an explicit mask here (no ``ring``).  ``v_width`` as in
-    ``decode_attention``.  Returns (B, 1, H, hdv) in q.dtype.
+    ``decode_attention``.  ``k_scale``/``v_scale``: (P, page_size, KVH)
+    float32 per-row scale pools when the code pools are quantized
+    (``v_scale`` defaults to ``k_scale`` — the MLA aliased cache).
+    Returns (B, 1, H, hdv) in q.dtype.
     """
     impl = _resolve(impl)
     b, sq, h, hdq = q.shape
@@ -249,7 +287,8 @@ def decode_attention_paged(q, k_pool, v_pool, page_table, cur_len, *,
     g = h // kvh
     qg = q.reshape(b, kvh, g, hdq)
     lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
-    kw = dict(window=window, softcap=softcap, scale=scale, v_width=v_width)
+    kw = dict(window=window, softcap=softcap, scale=scale, v_width=v_width,
+              k_scale=k_scale, v_scale=v_scale)
     if impl == "lax":
         out = decode_attention_paged_lax(qg, k_pool, v_pool, page_table,
                                          lens, **kw)
@@ -265,6 +304,7 @@ def decode_attention_paged(q, k_pool, v_pool, page_table, cur_len, *,
 def decode_attention(q, k, v, cur_len, *, ring: bool = False,
                      softcap=None, scale: float = 1.0,
                      block_k: int = 128, v_width=None,
+                     k_scale=None, v_scale=None,
                      impl: str = "auto"):
     """One-token decode attention over a full cache.
 
@@ -275,8 +315,12 @@ def decode_attention(q, k, v, cur_len, *, ring: bool = False,
     ``<= cur_len``).  ``ring=True`` for sliding-window ring-buffer
     caches.  ``v_width``: v is the first ``v_width`` lanes of the given
     array (which may be k itself — the MLA concatenated latent cache).
+    ``k_scale``/``v_scale``: (B, C, KVH) float32 per-row absmax scales
+    when k/v hold quantized codes (see ``kernels/quant``; ``v_scale``
+    defaults to ``k_scale`` — the MLA aliased cache quantizes once).
     Returns (B, 1, H, hdv) in q.dtype; k/v are consumed in their own
-    dtype (no cache-wide upcast copy).
+    dtype (no cache-wide upcast copy, and quantized caches are
+    dequantized blockwise in-register, never materialised).
     """
     impl = _resolve(impl)
     b, sq, h, hdq = q.shape
@@ -290,7 +334,7 @@ def decode_attention(q, k, v, cur_len, *, ring: bool = False,
     qg = q.reshape(b, kvh, g, hdq)
     lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
     kw = dict(ring=ring, softcap=softcap, scale=scale, block_k=block_k,
-              v_width=v_width)
+              v_width=v_width, k_scale=k_scale, v_scale=v_scale)
     if impl == "lax":
         out = decode_attention_lax(qg, k, v, lens, **kw)
     elif impl in ("pallas", "pallas_interpret"):

@@ -51,7 +51,8 @@ def pick_block_k(cache_size: int, block_k: int) -> int:
 
 
 def _block_step(q, k_blk, v_blk, k_lo, lens, m, l, acc, *,
-                cache_size: int, ring: bool, softcap, window=None):
+                cache_size: int, ring: bool, softcap, window=None,
+                ks_blk=None, vs_blk=None):
     """Fold one kv block into the online-softmax accumulator.
 
     q: (B, KVH, G, hdq) fp32, pre-scaled.  k_blk: (B, bk, KVH, hdq),
@@ -64,9 +65,17 @@ def _block_step(q, k_blk, v_blk, k_lo, lens, m, l, acc, *,
     — the *unwrapped* sliding-window layout the paged cache uses, where
     slot ``s`` always holds position ``s`` and the window is an explicit
     mask instead of a ring size.
+
+    ``ks_blk``/``vs_blk``: (B, bk, KVH) float32 per-row absmax scales
+    when k_blk/v_blk hold quantized codes — dequantized here with the
+    exact op order of the kernel's in-register dequant, keeping the
+    blockwise comparison bitwise in the quantized modes too.
     """
     bk = k_blk.shape[1]
-    s = jnp.einsum("bhgd,bkhd->bhgk", q, k_blk.astype(jnp.float32))
+    kf = k_blk.astype(jnp.float32)
+    if ks_blk is not None:
+        kf = kf * ks_blk[..., None].astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q, kf)
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
     cols = k_lo + jnp.arange(bk, dtype=jnp.int32)[None, None, None, :]
@@ -83,29 +92,41 @@ def _block_step(q, k_blk, v_blk, k_lo, lens, m, l, acc, *,
     p = jnp.exp(s - m_new)
     alpha = jnp.exp(m - m_new)
     l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
-    acc_new = alpha * acc + jnp.einsum("bhgk,bkhd->bhgd", p,
-                                       v_blk.astype(jnp.float32))
+    vf = v_blk.astype(jnp.float32)
+    if vs_blk is not None:
+        vf = vf * vs_blk[..., None].astype(jnp.float32)
+    acc_new = alpha * acc + jnp.einsum("bhgk,bkhd->bhgd", p, vf)
     return m_new, l_new, acc_new
 
 
 def decode_attention_ref(q, k, v, lens, *, ring: bool = False,
                          softcap=None, scale: float = 1.0,
-                         block_k: int = 128):
+                         block_k: int = 128, k_scale=None, v_scale=None):
     """q: (B, KVH, G, hdq), k: (B, C, KVH, hdq), v: (B, C, KVH, hdv),
-    lens: scalar or (B,) int32.  Returns (B, KVH, G, hdv) in q.dtype."""
+    lens: scalar or (B,) int32.  Returns (B, KVH, G, hdv) in q.dtype.
+    ``k_scale``/``v_scale``: (B, C, KVH) float32 per-row absmax scales
+    when k/v hold quantized codes (``v_scale`` defaults to ``k_scale``
+    — the MLA aliased cache quantizes once)."""
     b, kvh, g, _ = q.shape
     c = k.shape[1]
     hdv = v.shape[-1]
     bk = pick_block_k(c, block_k)
     qs = q.astype(jnp.float32) * scale
     lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (b,))
+    if k_scale is not None and v_scale is None:
+        v_scale = k_scale
 
     def body(j, carry):
         m, l, acc = carry
         k_blk = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=1)
         v_blk = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=1)
+        ks_blk = vs_blk = None
+        if k_scale is not None:
+            ks_blk = jax.lax.dynamic_slice_in_dim(k_scale, j * bk, bk, axis=1)
+            vs_blk = jax.lax.dynamic_slice_in_dim(v_scale, j * bk, bk, axis=1)
         return _block_step(qs, k_blk, v_blk, j * bk, lens, m, l, acc,
-                           cache_size=c, ring=ring, softcap=softcap)
+                           cache_size=c, ring=ring, softcap=softcap,
+                           ks_blk=ks_blk, vs_blk=vs_blk)
 
     m = jnp.full((b, kvh, g, 1), NEG_INF, jnp.float32)
     l = jnp.zeros((b, kvh, g, 1), jnp.float32)
@@ -119,7 +140,7 @@ def decode_attention_ref(q, k, v, lens, *, ring: bool = False,
 
 def decode_attention_paged_ref(q, k_pool, v_pool, page_table, lens, *,
                                window=None, softcap=None, scale: float = 1.0,
-                               v_width=None):
+                               v_width=None, k_scale=None, v_scale=None):
     """Blockwise twin of the *paged* flash-decode kernel.
 
     q: (B, KVH, G, hdq); k_pool/v_pool: (P, page_size, KVH, hd*)
@@ -150,14 +171,25 @@ def decode_attention_paged_ref(q, k_pool, v_pool, page_table, lens, *,
     hdv = v.shape[-1]
     qs = q.astype(jnp.float32) * scale
     lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (b,))
+    ks = vs = None
+    if k_scale is not None:
+        ks = jnp.take(k_scale, pt, axis=0).reshape(b, c, kvh)
+        if v_scale is None or v_scale is k_scale:
+            vs = ks
+        else:
+            vs = jnp.take(v_scale, pt, axis=0).reshape(b, c, kvh)
 
     def body(j, carry):
         m, l, acc = carry
         k_blk = jax.lax.dynamic_slice_in_dim(k, j * ps, ps, axis=1)
         v_blk = jax.lax.dynamic_slice_in_dim(v, j * ps, ps, axis=1)
+        ks_blk = vs_blk = None
+        if ks is not None:
+            ks_blk = jax.lax.dynamic_slice_in_dim(ks, j * ps, ps, axis=1)
+            vs_blk = jax.lax.dynamic_slice_in_dim(vs, j * ps, ps, axis=1)
         return _block_step(qs, k_blk, v_blk, j * ps, lens, m, l, acc,
                            cache_size=c, ring=False, softcap=softcap,
-                           window=window)
+                           window=window, ks_blk=ks_blk, vs_blk=vs_blk)
 
     m = jnp.full((b, kvh, g, 1), NEG_INF, jnp.float32)
     l = jnp.zeros((b, kvh, g, 1), jnp.float32)

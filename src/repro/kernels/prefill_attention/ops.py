@@ -50,7 +50,7 @@ def _resolve(impl: str) -> str:
 def prefill_attention_lax(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
                           ring: bool = False, window=None, softcap=None,
                           scale: float = 1.0, block_k: int = DEFAULT_BLOCK_K,
-                          v_width=None):
+                          v_width=None, k_scale=None, v_scale=None):
     """Fused masked chunk attention in plain XLA.
 
     Same layout as the kernel: q (B, KVH, T, G, hdq), chunk k/v
@@ -62,6 +62,12 @@ def prefill_attention_lax(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
     (measured; decode, with its single query row, is the opposite
     case).  Length-aware read elision is the Pallas kernel's job.
     ``block_k`` is the Pallas tiling knob and is unused here.
+
+    ``k_scale``/``v_scale``: (B, C, KVH) float32 per-row scales when the
+    *cache* holds quantized codes (chunk k/v stay full precision) — the
+    cache is dequantized with the shared block scales before the fused
+    softmax, so the lax path agrees with the blockwise twins to fp
+    reassociation like the unquantized case.
     """
     del block_k
     b, kvh, t, g, _ = q.shape
@@ -69,6 +75,12 @@ def prefill_attention_lax(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
     if v_width is not None:
         v_cache = v_cache[..., :v_width]
         v_chunk = v_chunk[..., :v_width]
+    if k_scale is not None:
+        vs = k_scale if v_scale is None else v_scale
+        k_cache = k_cache.astype(jnp.float32) * \
+            k_scale[..., None].astype(jnp.float32)
+        v_cache = v_cache.astype(jnp.float32) * \
+            vs[..., None].astype(jnp.float32)
     qs = q.astype(jnp.float32) * scale
     offs = jnp.asarray(offs, jnp.int32)
     k_all = jnp.concatenate([k_cache, k_chunk], axis=1)    # (B, C+T, KVH, *)
@@ -107,7 +119,7 @@ def prefill_attention_lax(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
 def prefill_attention_paged_lax(q, k_chunk, v_chunk, k_pool, v_pool,
                                 page_table, offs, *, window=None,
                                 softcap=None, scale: float = 1.0,
-                                v_width=None):
+                                v_width=None, k_scale=None, v_scale=None):
     """Fused masked *paged* chunk attention in plain XLA.
 
     Gathers the logical (B, NB*page_size, KVH, *) cache view through
@@ -128,15 +140,23 @@ def prefill_attention_paged_lax(q, k_chunk, v_chunk, k_pool, v_pool,
     else:
         v_cache = jnp.take(v_pool, pt, axis=0).reshape(b, nb * ps, kvh,
                                                        v_pool.shape[-1])
+    ks = vs = None
+    if k_scale is not None:
+        ks = jnp.take(k_scale, pt, axis=0).reshape(b, nb * ps, kvh)
+        if v_scale is None or v_scale is k_scale:
+            vs = ks
+        else:
+            vs = jnp.take(v_scale, pt, axis=0).reshape(b, nb * ps, kvh)
     return prefill_attention_lax(q, k_chunk, v_chunk, k_cache, v_cache,
                                  offs, ring=False, window=window,
                                  softcap=softcap, scale=scale,
-                                 v_width=v_width)
+                                 v_width=v_width, k_scale=ks, v_scale=vs)
 
 
 def prefill_attention_paged(q, k_chunk, v_chunk, k_pool, v_pool, page_table,
                             offset, *, window=None, softcap=None,
                             scale: float = 1.0, v_width=None,
+                            k_scale=None, v_scale=None,
                             impl: str = "auto"):
     """Chunked-prefill attention over a *paged* cache prefix.
 
@@ -147,7 +167,10 @@ def prefill_attention_paged(q, k_chunk, v_chunk, k_pool, v_pool, page_table,
     addressed through page_table (B, NB) int32.  offset: scalar or (B,)
     int32.  Paged caches store sliding-window layers unwrapped, so
     ``window`` is an explicit mask (no ``ring``).  ``v_width`` as in
-    ``prefill_attention``.  Returns (B, T, H, hdv) in q.dtype.
+    ``prefill_attention``.  ``k_scale``/``v_scale``: (P, page_size, KVH)
+    float32 per-row scale pools when the code pools are quantized
+    (``v_scale`` defaults to ``k_scale``).  Returns (B, T, H, hdv) in
+    q.dtype.
     """
     impl = _resolve(impl)
     b, t, h, hdq = q.shape
@@ -160,7 +183,8 @@ def prefill_attention_paged(q, k_chunk, v_chunk, k_pool, v_pool, page_table,
     g = h // kvh
     qg = q.reshape(b, t, kvh, g, hdq).transpose(0, 2, 1, 3, 4)
     offs = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
-    kw = dict(window=window, softcap=softcap, scale=scale, v_width=v_width)
+    kw = dict(window=window, softcap=softcap, scale=scale, v_width=v_width,
+              k_scale=k_scale, v_scale=v_scale)
     if impl == "lax":
         out = prefill_attention_paged_lax(qg, k_chunk, v_chunk, k_pool,
                                           v_pool, page_table, offs, **kw)
@@ -177,7 +201,8 @@ def prefill_attention_paged(q, k_chunk, v_chunk, k_pool, v_pool, page_table,
 def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
                       ring: bool = False, window=None, softcap=None,
                       scale: float = 1.0, block_k: int = DEFAULT_BLOCK_K,
-                      v_width=None, impl: str = "auto"):
+                      v_width=None, k_scale=None, v_scale=None,
+                      impl: str = "auto"):
     """Chunked-prefill attention: T chunk queries over [prefix ++ chunk].
 
     q: (B, T, H, hdq) chunk queries at positions ``offset + i``.
@@ -190,6 +215,9 @@ def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
     size does not subsume it the way decode's single newest-token query
     does.  ``v_width``: v operands are the first ``v_width`` lanes of
     the given arrays (which may alias k — the MLA latent cache).
+    ``k_scale``/``v_scale``: (B, C, KVH) float32 per-row scales when the
+    *cache* holds quantized codes (chunk k/v always arrive full
+    precision; ``v_scale`` defaults to ``k_scale``).
     Returns (B, T, H, hdv) in q.dtype.
     """
     impl = _resolve(impl)
@@ -209,7 +237,8 @@ def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
     qg = q.reshape(b, t, kvh, g, hdq).transpose(0, 2, 1, 3, 4)
     offs = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (b,))
     kw = dict(ring=ring, window=window, softcap=softcap, scale=scale,
-              block_k=block_k, v_width=v_width)
+              block_k=block_k, v_width=v_width, k_scale=k_scale,
+              v_scale=v_scale)
     if impl == "lax":
         out = prefill_attention_lax(qg, k_chunk, v_chunk, k_cache, v_cache,
                                     offs, **kw)

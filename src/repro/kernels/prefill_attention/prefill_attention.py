@@ -29,6 +29,14 @@ window mask is applied in-kernel on both phases.
 
 ``v_width`` lets V alias K (the MLA [latent | rope] concatenated cache:
 scores use the full row, values only the latent prefix).
+
+Quantized caches (``k_scale``/``v_scale`` set): the *cache prefix*
+holds int8/fp8_e4m3 codes plus per-(slot, kv head) float32 absmax
+scales (see ``kernels/quant``); the chunk's own k/v are still full
+precision — they have not been through the quantizing cache write yet.
+Scale blocks ride the same clamped cache index maps (minus the lane
+axis), so skipped prefix blocks elide the scale DMA too, and the
+cache-phase fold dequantizes in-register.
 """
 from __future__ import annotations
 
@@ -44,11 +52,18 @@ from repro.kernels.constants import DEFAULT_BLOCK_K, NEG_INF
 from repro.kernels.prefill_attention.ref import pick_block_k
 
 
-def _prefill_kernel(offs_ref, q_ref, kx_ref, vx_ref, kc_ref, vc_ref, o_ref,
-                    m_ref, l_ref, acc_ref, *,
+def _prefill_kernel(offs_ref, q_ref, kx_ref, vx_ref, kc_ref, vc_ref, *refs,
                     scale: float, ring: bool, window, softcap,
                     bk_c: int, bk_t: int, cache_steps: int,
-                    total_steps: int, cache_size: int, chunk: int):
+                    total_steps: int, cache_size: int, chunk: int,
+                    quantized: bool = False):
+    # Quantized call sites append two float32 cache-scale operands —
+    # the ref list is (kcs, vcs, o, m, l, acc) or (o, m, l, acc).
+    if quantized:
+        kcs_ref, vcs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
+        kcs_ref = vcs_ref = None
     bi = pl.program_id(0)
     ki = pl.program_id(2)
     off = offs_ref[bi]
@@ -100,7 +115,14 @@ def _prefill_kernel(offs_ref, q_ref, kx_ref, vx_ref, kc_ref, vc_ref, o_ref,
             valid = (pos >= 0) & (q_pos - pos < window)
         else:
             valid = jnp.broadcast_to(cols < off, (chunk, 1, bk_c))
-        fold(kc_ref[0, :, 0, :], vc_ref[0, :, 0, :], valid)
+        kb = kc_ref[0, :, 0, :]
+        vb = vc_ref[0, :, 0, :]
+        if quantized:
+            kb = kb.astype(jnp.float32) * \
+                kcs_ref[0, :, 0].astype(jnp.float32)[:, None]
+            vb = vb.astype(jnp.float32) * \
+                vcs_ref[0, :, 0].astype(jnp.float32)[:, None]
+        fold(kb, vb, valid)
 
     # -- phase 2: the chunk's own keys (causal; every block holds a key
     # some query attends, so none are skippable).
@@ -121,10 +143,15 @@ def _prefill_kernel(offs_ref, q_ref, kx_ref, vx_ref, kc_ref, vc_ref, o_ref,
 
 
 def _paged_prefill_kernel(offs_ref, pt_ref, q_ref, kx_ref, vx_ref, kc_ref,
-                          vc_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                          scale: float, window, softcap,
+                          vc_ref, *refs, scale: float, window, softcap,
                           ps: int, bk_t: int, cache_steps: int,
-                          total_steps: int, chunk: int):
+                          total_steps: int, chunk: int,
+                          quantized: bool = False):
+    if quantized:
+        kcs_ref, vcs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
+        kcs_ref = vcs_ref = None
     bi = pl.program_id(0)
     ki = pl.program_id(2)
     off = offs_ref[bi]
@@ -174,7 +201,14 @@ def _paged_prefill_kernel(offs_ref, pt_ref, q_ref, kx_ref, vx_ref, kc_ref,
         valid = jnp.broadcast_to(cols < off, (chunk, 1, ps))
         if window is not None:
             valid &= (q_pos - cols) < window
-        fold(kc_ref[0, :, 0, :], vc_ref[0, :, 0, :], valid)
+        kb = kc_ref[0, :, 0, :]
+        vb = vc_ref[0, :, 0, :]
+        if quantized:
+            kb = kb.astype(jnp.float32) * \
+                kcs_ref[0, :, 0].astype(jnp.float32)[:, None]
+            vb = vb.astype(jnp.float32) * \
+                vcs_ref[0, :, 0].astype(jnp.float32)[:, None]
+        fold(kb, vb, valid)
 
     # -- phase 2: the chunk's own keys (causal; identical to the
     # contiguous kernel — the chunk is not paged).
@@ -197,15 +231,18 @@ def _paged_prefill_kernel(offs_ref, pt_ref, q_ref, kx_ref, vx_ref, kc_ref,
 def prefill_attention_paged_pallas(q, k_chunk, v_chunk, k_pool, v_pool,
                                    page_table, offs, *, window=None,
                                    softcap=None, scale: float = 1.0,
-                                   v_width=None, interpret: bool = False):
+                                   v_width=None, k_scale=None, v_scale=None,
+                                   interpret: bool = False):
     """Paged chunked-prefill: q (B, KVH, T, G, hdq); chunk k/v
     (B, T, KVH, *); physical pools (P, page_size, KVH, *) addressed
     through page_table (B, NB) int32; offs (B,) int32.  The cache-phase
     BlockSpec index maps read the page table from scalar-prefetch SMEM
     (one block == one page) with the same clamp-to-elide-DMA trick as
     the contiguous kernel.  Paged caches are unwrapped: sliding windows
-    arrive as the explicit ``window`` mask, never ``ring``.  Returns
-    (B, KVH, T, G, hdv) in q.dtype."""
+    arrive as the explicit ``window`` mask, never ``ring``.
+    ``k_scale``/``v_scale``: (P, page_size, KVH) float32 per-row scale
+    pools when the code pools are quantized (chunk k/v stay full
+    precision).  Returns (B, KVH, T, G, hdv) in q.dtype."""
     b, kvh, t, g, hdq = q.shape
     ps = k_pool.shape[1]
     nb = page_table.shape[1]
@@ -215,11 +252,14 @@ def prefill_attention_paged_pallas(q, k_chunk, v_chunk, k_pool, v_pool,
     cache_steps = nb
     chunk_steps = t // bk_t
     total_steps = cache_steps + chunk_steps
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        v_scale = k_scale
 
     def q_map(bi, hi, ki, offs, pt):
         return (bi, hi, 0, 0, 0)
 
-    def cache_map(bi, hi, ki, offs, pt):
+    def _page(bi, ki, offs, pt):
         # Clamp to the row's needed page range, then go through the
         # page table: revisited physical indices elide the HBM copy
         # (beyond-prefix pages, the whole chunk phase, and — windowed —
@@ -229,26 +269,40 @@ def prefill_attention_paged_pallas(q, k_chunk, v_chunk, k_pool, v_pool,
         if window is not None:
             first = jnp.maximum(offs[bi] - (window - 1), 0) // ps
             j = jnp.maximum(j, jnp.minimum(first, last))
-        return (pt[bi, j], 0, hi, 0)
+        return pt[bi, j]
+
+    def cache_map(bi, hi, ki, offs, pt):
+        return (_page(bi, ki, offs, pt), 0, hi, 0)
+
+    def scale_map(bi, hi, ki, offs, pt):
+        # Same physical page as the codes: scale DMAs elide together.
+        return (_page(bi, ki, offs, pt), 0, hi)
 
     def chunk_map(bi, hi, ki, offs, pt):
         j = jnp.clip(ki - cache_steps, 0, chunk_steps - 1)
         return (bi, j, hi, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, t, g, hdq), q_map),
+        pl.BlockSpec((1, bk_t, 1, hdq), chunk_map),
+        pl.BlockSpec((1, bk_t, 1, hdv), chunk_map),
+        pl.BlockSpec((1, ps, 1, hdq), cache_map),
+        pl.BlockSpec((1, ps, 1, hdv), cache_map),
+    ]
+    operands = [q, k_chunk, v_chunk, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map),
+                     pl.BlockSpec((1, ps, 1), scale_map)]
+        operands += [k_scale, v_scale]
+
     kernel = functools.partial(
         _paged_prefill_kernel, scale=scale, window=window, softcap=softcap,
         ps=ps, bk_t=bk_t, cache_steps=cache_steps, total_steps=total_steps,
-        chunk=t)
+        chunk=t, quantized=quantized)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kvh, total_steps),
-        in_specs=[
-            pl.BlockSpec((1, 1, t, g, hdq), q_map),
-            pl.BlockSpec((1, bk_t, 1, hdq), chunk_map),
-            pl.BlockSpec((1, bk_t, 1, hdv), chunk_map),
-            pl.BlockSpec((1, ps, 1, hdq), cache_map),
-            pl.BlockSpec((1, ps, 1, hdv), cache_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, t, g, hdv), q_map),
         scratch_shapes=[
             pltpu.VMEM((t, g, 1), jnp.float32),     # m: running row max
@@ -263,19 +317,21 @@ def prefill_attention_paged_pallas(q, k_chunk, v_chunk, k_pool, v_pool,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(offs.astype(jnp.int32), page_table.astype(jnp.int32),
-      q, k_chunk, v_chunk, k_pool, v_pool)
+    )(offs.astype(jnp.int32), page_table.astype(jnp.int32), *operands)
 
 
 def prefill_attention_pallas(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
                              ring: bool = False, window=None, softcap=None,
                              scale: float = 1.0, block_k: int = DEFAULT_BLOCK_K,
-                             v_width=None, interpret: bool = False):
+                             v_width=None, k_scale=None, v_scale=None,
+                             interpret: bool = False):
     """q: (B, KVH, T, G, hdq); k_chunk/v_chunk: (B, T, KVH, hdq/hdv);
     k_cache/v_cache: (B, C, KVH, hdq/hdv); offs: (B,) int32 chunk start
     positions.  Returns (B, KVH, T, G, hdv) in q.dtype.  ``v_width``:
     read only the first lanes of both v operands (which may alias their
-    k counterparts — the MLA concatenated latent cache)."""
+    k counterparts — the MLA concatenated latent cache).
+    ``k_scale``/``v_scale``: (B, C, KVH) float32 per-row scales when the
+    cache holds quantized codes (chunk k/v stay full precision)."""
     b, kvh, t, g, hdq = q.shape
     c = k_cache.shape[1]
     hdv = v_width if v_width is not None else v_cache.shape[-1]
@@ -284,6 +340,9 @@ def prefill_attention_pallas(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
     cache_steps = c // bk_c
     chunk_steps = t // bk_t
     total_steps = cache_steps + chunk_steps
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        v_scale = k_scale
 
     def q_map(bi, hi, ki, offs):
         return (bi, hi, 0, 0, 0)
@@ -295,26 +354,38 @@ def prefill_attention_pallas(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
         last = jnp.minimum(jnp.maximum(offs[bi] - 1, 0), c - 1) // bk_c
         return (bi, jnp.minimum(ki, last), hi, 0)
 
+    def scale_map(bi, hi, ki, offs):
+        # Code block and scale block share the clamp: both DMAs elide.
+        last = jnp.minimum(jnp.maximum(offs[bi] - 1, 0), c - 1) // bk_c
+        return (bi, jnp.minimum(ki, last), hi)
+
     def chunk_map(bi, hi, ki, offs):
         # Parked at block 0 during the cache phase (no copy after the
         # first revisit), then walks the chunk.
         j = jnp.clip(ki - cache_steps, 0, chunk_steps - 1)
         return (bi, j, hi, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, t, g, hdq), q_map),
+        pl.BlockSpec((1, bk_t, 1, hdq), chunk_map),
+        pl.BlockSpec((1, bk_t, 1, hdv), chunk_map),
+        pl.BlockSpec((1, bk_c, 1, hdq), cache_map),
+        pl.BlockSpec((1, bk_c, 1, hdv), cache_map),
+    ]
+    operands = [q, k_chunk, v_chunk, k_cache, v_cache]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bk_c, 1), scale_map),
+                     pl.BlockSpec((1, bk_c, 1), scale_map)]
+        operands += [k_scale, v_scale]
+
     kernel = functools.partial(
         _prefill_kernel, scale=scale, ring=ring, window=window,
         softcap=softcap, bk_c=bk_c, bk_t=bk_t, cache_steps=cache_steps,
-        total_steps=total_steps, cache_size=c, chunk=t)
+        total_steps=total_steps, cache_size=c, chunk=t, quantized=quantized)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kvh, total_steps),
-        in_specs=[
-            pl.BlockSpec((1, 1, t, g, hdq), q_map),
-            pl.BlockSpec((1, bk_t, 1, hdq), chunk_map),
-            pl.BlockSpec((1, bk_t, 1, hdv), chunk_map),
-            pl.BlockSpec((1, bk_c, 1, hdq), cache_map),
-            pl.BlockSpec((1, bk_c, 1, hdv), cache_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, t, g, hdv), q_map),
         scratch_shapes=[
             pltpu.VMEM((t, g, 1), jnp.float32),     # m: running row max
@@ -329,4 +400,4 @@ def prefill_attention_pallas(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(offs.astype(jnp.int32), q, k_chunk, v_chunk, k_cache, v_cache)
+    )(offs.astype(jnp.int32), *operands)

@@ -97,10 +97,17 @@ def _chunk_valid(b, cols, q_idx, *, window):
 
 def prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
                           ring: bool = False, window=None, softcap=None,
-                          scale: float = 1.0, block_k: int = DEFAULT_BLOCK_K):
+                          scale: float = 1.0, block_k: int = DEFAULT_BLOCK_K,
+                          k_scale=None, v_scale=None):
     """q: (B, KVH, T, G, hdq); k_chunk/v_chunk: (B, T, KVH, hdq/hdv);
     k_cache/v_cache: (B, C, KVH, hdq/hdv); offs: scalar or (B,) int32.
-    Returns (B, KVH, T, G, hdv) in q.dtype."""
+    Returns (B, KVH, T, G, hdv) in q.dtype.
+
+    ``k_scale``/``v_scale``: (B, C, KVH) float32 per-row absmax scales
+    when the *cache* holds quantized codes (the chunk's own k/v are
+    always full precision) — dequantized per cache block with the exact
+    op order of the kernel's in-register dequant (``v_scale`` defaults
+    to ``k_scale`` — the MLA aliased cache quantizes once)."""
     b, kvh, t, g, _ = q.shape
     c = k_cache.shape[1]
     hdv = v_cache.shape[-1]
@@ -109,6 +116,8 @@ def prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
     qs = q.astype(jnp.float32) * scale
     offs = jnp.broadcast_to(jnp.asarray(offs, jnp.int32), (b,))
     q_idx = jnp.arange(t, dtype=jnp.int32)
+    if k_scale is not None and v_scale is None:
+        v_scale = k_scale
 
     m = jnp.full((b, kvh, t, g, 1), NEG_INF, jnp.float32)
     l = jnp.zeros((b, kvh, t, g, 1), jnp.float32)
@@ -118,6 +127,15 @@ def prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
         m, l, acc = carry
         k_blk = jax.lax.dynamic_slice_in_dim(k_cache, j * bk_c, bk_c, axis=1)
         v_blk = jax.lax.dynamic_slice_in_dim(v_cache, j * bk_c, bk_c, axis=1)
+        if k_scale is not None:
+            ks_blk = jax.lax.dynamic_slice_in_dim(k_scale, j * bk_c, bk_c,
+                                                  axis=1)
+            vs_blk = jax.lax.dynamic_slice_in_dim(v_scale, j * bk_c, bk_c,
+                                                  axis=1)
+            k_blk = k_blk.astype(jnp.float32) * \
+                ks_blk[..., None].astype(jnp.float32)
+            v_blk = v_blk.astype(jnp.float32) * \
+                vs_blk[..., None].astype(jnp.float32)
         cols = j * bk_c + jnp.arange(bk_c, dtype=jnp.int32)
         valid = _cache_valid(offs, cols, q_idx, cache_size=c, ring=ring,
                              window=window)
@@ -145,7 +163,7 @@ def prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache, offs, *,
 def prefill_attention_paged_ref(q, k_chunk, v_chunk, k_pool, v_pool,
                                 page_table, offs, *, window=None,
                                 softcap=None, scale: float = 1.0,
-                                v_width=None):
+                                v_width=None, k_scale=None, v_scale=None):
     """Blockwise twin of the *paged* chunked-prefill kernel.
 
     q: (B, KVH, T, G, hdq); k_chunk/v_chunk: (B, T, KVH, *);
@@ -173,6 +191,14 @@ def prefill_attention_paged_ref(q, k_chunk, v_chunk, k_pool, v_pool,
     if v_width is not None:
         v_cache = v_cache[..., :v_width]
         v_chunk = v_chunk[..., :v_width]
+    ks = vs = None
+    if k_scale is not None:
+        ks = jnp.take(k_scale, pt, axis=0).reshape(b, nb * ps, kvh)
+        if v_scale is None or v_scale is k_scale:
+            vs = ks
+        else:
+            vs = jnp.take(v_scale, pt, axis=0).reshape(b, nb * ps, kvh)
     return prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache,
                                  offs, ring=False, window=window,
-                                 softcap=softcap, scale=scale, block_k=ps)
+                                 softcap=softcap, scale=scale, block_k=ps,
+                                 k_scale=ks, v_scale=vs)

@@ -1,0 +1,96 @@
+"""Per-row KV-cache quantization (int8 / fp8_e4m3) shared by the
+cache_update / decode_attention / prefill_attention kernel families.
+
+Decode is memory-bound: flash-decode already skips *dead* cache bytes,
+quantization shrinks the *live* ones.  Cache rows are stored as low-bit
+codes plus one float32 absmax scale per row -- "row" meaning the
+quantization granularity the append-only write paths can produce
+without read-modify-write: one (token, kv-head) head-dim vector for
+GQA caches, one (token,) latent+rope vector for the MLA cache.  In the
+paged layout the scale leaves are paged exactly like their code leaves
+(same page-id space, same page tables), which makes the scales
+page-granular: a page's scale rows travel with it through prefix
+sharing, adoption, and eviction.
+
+Scheme (absmax, symmetric, zero-point-free):
+
+    amax  = max(|x|, axis=-1)                       # per row
+    scale = max(amax, SCALE_EPS) / QMAX             # float32
+    codes = cast(clip(round*(x / scale), -QMAX, QMAX))   # *int8 only
+    dequant(codes, scale) = f32(codes) * scale
+
+fp8_e4m3 clips BEFORE the cast: out-of-range float32 -> float8_e4m3fn
+casts produce NaN (the format has no inf), not a saturated value.
+
+Bit-exactness contract: every consumer dequantizes with the same op
+order -- ``codes.astype(float32) * scale[..., None]`` -- so the Pallas
+kernels, their blockwise ref twins, and the lax fallbacks all see
+bit-identical dequantized blocks in interpret mode.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Supported ``ModelConfig.kv_quant`` / ``ServeEngine(cache_dtype=...)``
+# modes.  qmax 127 = int8 symmetric range; qmax 448 = float8_e4m3fn
+# finfo max (the largest finite magnitude the format represents).
+QUANT_MODES = ("int8", "fp8_e4m3")
+SCALE_EPS = 1e-8
+
+_QMAX = {"int8": 127.0, "fp8_e4m3": 448.0}
+_DTYPE = {"int8": jnp.int8, "fp8_e4m3": jnp.float8_e4m3fn}
+
+
+def check_mode(mode: str) -> str:
+    if mode not in QUANT_MODES:
+        raise ValueError(f"unknown kv quant mode {mode!r} "
+                         f"(expected one of {QUANT_MODES})")
+    return mode
+
+
+def quant_dtype(mode: str):
+    """Storage dtype of the code leaves for ``mode``."""
+    return _DTYPE[check_mode(mode)]
+
+
+def qmax(mode: str) -> float:
+    return _QMAX[check_mode(mode)]
+
+
+def qmax_inv(mode: str) -> float:
+    """``1 / qmax`` as a Python (double) constant.  Scales multiply by
+    this instead of dividing by ``qmax``: XLA rewrites division by a
+    constant into a reciprocal multiply in *some* compilation paths
+    (jitted lax) but not others (op-by-op interpret mode), a 1-ulp
+    divergence that would break the kernel-vs-ref bit-exactness gate.
+    An explicit multiply compiles identically everywhere.
+    """
+    return 1.0 / _QMAX[check_mode(mode)]
+
+
+def quantize(x, mode: str):
+    """Per-row absmax quantization over the last axis.
+
+    Returns ``(codes, scales)``: codes with ``x.shape`` in the mode's
+    storage dtype, scales float32 with ``x.shape[:-1]``.
+    """
+    check_mode(mode)
+    qm = _QMAX[mode]
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scales = jnp.maximum(amax, SCALE_EPS) * qmax_inv(mode)
+    y = xf / scales[..., None]
+    if mode == "int8":
+        y = jnp.round(y)
+    # fp8: clip before the cast (overflow casts to NaN, not saturation)
+    codes = jnp.clip(y, -qm, qm).astype(_DTYPE[mode])
+    return codes, scales
+
+
+def dequantize(codes, scales):
+    """Inverse of :func:`quantize` (up to rounding): float32 rows.
+
+    This exact op order is the bit-exactness contract every kernel,
+    ref twin, and lax fallback replicates in-block.
+    """
+    return codes.astype(jnp.float32) * scales[..., None].astype(jnp.float32)

@@ -58,6 +58,13 @@ def main(argv=None):
                          "per-request page tables + radix prefix reuse "
                          "(continuous mode only); contiguous = the "
                          "per-slot baseline")
+    ap.add_argument("--cache-dtype", default="bfloat16",
+                    choices=["bfloat16", "float32", "int8", "fp8_e4m3"],
+                    help="KV cache storage: bfloat16/float32 store raw "
+                         "values; int8/fp8_e4m3 store quantized codes + "
+                         "per-row scales, dequantized in-register by the "
+                         "attention kernels (~2x smaller cache, bounded "
+                         "logit drift — see BENCH_quant.json)")
     ap.add_argument("--kv-page-size", type=int, default=None,
                     help="tokens per KV page (paged layout); default "
                          "cfg.kv_page_size")
@@ -165,6 +172,7 @@ def main(argv=None):
                          kv_page_size=args.kv_page_size,
                          kv_pool_pages=args.kv_pool_blocks,
                          prefix_cache=args.prefix_cache,
+                         cache_dtype=args.cache_dtype,
                          greedy=args.temperature <= 0.0,
                          temperature=args.temperature or 1.0,
                          seed=args.seed)
@@ -234,11 +242,13 @@ def main(argv=None):
         if g["tenant_joules"]:
             report += f", tenant J {g['tenant_joules']}"
     print(report)
+    kc = st["kv_cache"]
+    print(f"kv cache: {kc['cache_dtype']}, "
+          f"{kc['bytes_per_token']:.1f} B/token")
     if args.kv_layout == "paged":
-        kc = st["kv_cache"]
         line = (f"kv pool: {kc['pages_used']}/{kc['pages_total']} pages "
                 f"held ({kc['pages_free']} free, {kc['page_size']} "
-                f"tokens/page)")
+                f"tokens/page, {kc['pool_wait_events']} pool waits)")
         if kc["prefix_cache"]:
             line += (f"; prefix cache: {kc['prefix_hits']}/"
                      f"{kc['prefix_lookups']} hits, "

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import quant
 from repro.kernels.constants import NEG_INF
 from repro.models import layers
 from repro.sharding.specs import annotate, shard
@@ -300,6 +301,12 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     Full layers: (B, max_len, KVH, hd) k/v. Sliding-window layers use a
     ring buffer of size ``window`` instead (gemma2 local layers) — decode
     memory stays O(window).
+
+    ``cfg.kv_quant`` switches the layout to quantized codes (int8 /
+    fp8_e4m3 — see ``kernels/quant``) plus per-(token, kv-head) float32
+    absmax scales in ``k_scale``/``v_scale`` (B, size, KVH) leaves;
+    ``dtype`` then only names the full-precision layout other engines
+    would have used (the code dtype is fixed by the mode).
     """
     size = min(max_len, window) if window else max_len
     shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
@@ -307,11 +314,21 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     # trees into jitted steps (chunked prefill, row insert), and a
     # buffer shared by two donated leaves gets handed out twice —
     # silent corruption once both outputs land in it.
+    if cfg.kv_quant is not None:
+        qdt = quant.quant_dtype(cfg.kv_quant)
+        return {"k": jnp.zeros(shape, qdt), "v": jnp.zeros(shape, qdt),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def cache_spec_axes() -> Tuple[Optional[str], ...]:
     return ("batch", "kv_seq", "kv_heads", "head_dim")
+
+
+def scale_spec_axes() -> Tuple[Optional[str], ...]:
+    """Logical axes of the quantized layouts' scale leaves."""
+    return ("batch", "kv_seq", "kv_heads")
 
 
 def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
@@ -343,31 +360,58 @@ def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
         positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
     q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
 
+    mode = cfg.kv_quant
+    ks = vs = None
     cache_size = cache["k"].shape[1]
     if per_row:
         from repro.kernels.cache_update import ops as cu_ops
         slot_rows = (cur % cache_size) if window \
             else jnp.minimum(cur, cache_size - 1)
-        k = cu_ops.cache_update(cache["k"], k_new, slot_rows,
-                                impl=cache_impl)
-        v = cu_ops.cache_update(cache["v"], v_new, slot_rows,
-                                impl=cache_impl)
+        if mode is not None:
+            k, ks = cu_ops.quant_cache_update(
+                cache["k"], cache["k_scale"], k_new, slot_rows, mode,
+                impl=cache_impl)
+            v, vs = cu_ops.quant_cache_update(
+                cache["v"], cache["v_scale"], v_new, slot_rows, mode,
+                impl=cache_impl)
+        else:
+            k = cu_ops.cache_update(cache["k"], k_new, slot_rows,
+                                    impl=cache_impl)
+            v = cu_ops.cache_update(cache["v"], v_new, slot_rows,
+                                    impl=cache_impl)
     else:
         slot = (cur_len % cache_size) if window else cur_len
-        k = jax.lax.dynamic_update_slice(
-            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(
-            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if mode is not None:
+            k_codes, k_sc = quant.quantize(k_new, mode)
+            v_codes, v_sc = quant.quantize(v_new, mode)
+            k = jax.lax.dynamic_update_slice(cache["k"], k_codes,
+                                             (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], v_codes,
+                                             (0, slot, 0, 0))
+            ks = jax.lax.dynamic_update_slice(cache["k_scale"], k_sc,
+                                              (0, slot, 0))
+            vs = jax.lax.dynamic_update_slice(cache["v_scale"], v_sc,
+                                              (0, slot, 0))
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
     k = shard(k, *cache_spec_axes())
     v = shard(v, *cache_spec_axes())
+    new_cache = {"k": k, "v": v}
+    if mode is not None:
+        ks = shard(ks, *scale_spec_axes())
+        vs = shard(vs, *scale_spec_axes())
+        new_cache["k_scale"], new_cache["v_scale"] = ks, vs
 
     if impl == "flash":
         from repro.kernels.decode_attention import ops as da_ops
         scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
         o = da_ops.decode_attention(
             q, k, v, cur, ring=window is not None,
-            softcap=cfg.attn_softcap, scale=scale)
-        return output_proj(p, o), {"k": k, "v": v}
+            softcap=cfg.attn_softcap, scale=scale, k_scale=ks, v_scale=vs)
+        return output_proj(p, o), new_cache
     if impl != "dense":
         raise ValueError(f"unknown decode attention impl {impl!r}")
 
@@ -389,10 +433,15 @@ def decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len, *,
         kv_pos = slots
         kv_valid = slots <= cur_col
 
-    o = attention(cfg, q, k.astype(q.dtype), v.astype(q.dtype),
+    if mode is not None:
+        k_att = quant.dequantize(k, ks).astype(q.dtype)
+        v_att = quant.dequantize(v, vs).astype(q.dtype)
+    else:
+        k_att, v_att = k.astype(q.dtype), v.astype(q.dtype)
+    o = attention(cfg, q, k_att, v_att,
                   q_pos=cur_col, kv_pos=kv_pos, causal=True, window=window,
                   kv_valid=kv_valid, impl="dense")
-    return output_proj(p, o), {"k": k, "v": v}
+    return output_proj(p, o), new_cache
 
 
 # -- paged KV cache (block pools + page-table indirection) --------------------
@@ -410,10 +459,20 @@ def init_paged_kv_pools(cfg: ModelConfig, num_pages: int, page_size: int,
     their positions *unwrapped* (slot == position) with the window as
     an explicit attention mask — no ring arithmetic, so prefix pages
     are position-stable and shareable across requests.
+
+    ``cfg.kv_quant`` pages the scale leaves exactly like their code
+    leaves — (P, page_size, KVH) float32 through the same page tables —
+    so a page's scales travel with it through prefix sharing, adoption,
+    and eviction.
     """
     shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
     # distinct buffers — donated cache trees must not share (see
     # init_kv_cache)
+    if cfg.kv_quant is not None:
+        qdt = quant.quant_dtype(cfg.kv_quant)
+        return {"k": jnp.zeros(shape, qdt), "v": jnp.zeros(shape, qdt),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
@@ -439,16 +498,29 @@ def paged_decode_self_attention(cfg: ModelConfig, p, x, cache, cur_len,
         positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
     q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
 
+    mode = cfg.kv_quant
+    ks = vs = None
     ones = jnp.ones((b,), jnp.int32)
-    k = cu_ops.paged_cache_update(cache["k"], k_new, page_table, cur, ones,
-                                  impl=cache_impl)
-    v = cu_ops.paged_cache_update(cache["v"], v_new, page_table, cur, ones,
-                                  impl=cache_impl)
+    if mode is not None:
+        k, ks = cu_ops.quant_paged_cache_update(
+            cache["k"], cache["k_scale"], k_new, page_table, cur, ones,
+            mode, impl=cache_impl)
+        v, vs = cu_ops.quant_paged_cache_update(
+            cache["v"], cache["v_scale"], v_new, page_table, cur, ones,
+            mode, impl=cache_impl)
+    else:
+        k = cu_ops.paged_cache_update(cache["k"], k_new, page_table, cur,
+                                      ones, impl=cache_impl)
+        v = cu_ops.paged_cache_update(cache["v"], v_new, page_table, cur,
+                                      ones, impl=cache_impl)
     scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
     o = da_ops.decode_attention_paged(
         q, k, v, page_table, cur, window=window,
-        softcap=cfg.attn_softcap, scale=scale)
-    return output_proj(p, o), {"k": k, "v": v}
+        softcap=cfg.attn_softcap, scale=scale, k_scale=ks, v_scale=vs)
+    new_cache = {"k": k, "v": v}
+    if mode is not None:
+        new_cache["k_scale"], new_cache["v_scale"] = ks, vs
+    return output_proj(p, o), new_cache
 
 
 def paged_prefill_chunk_self_attention(cfg: ModelConfig, p, x, cache,
@@ -474,11 +546,22 @@ def paged_prefill_chunk_self_attention(cfg: ModelConfig, p, x, cache,
         positions = jnp.broadcast_to(positions[..., None], (b, t, 3))
     q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
 
+    mode = cfg.kv_quant
     scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
     o = pf_ops.prefill_attention_paged(
         q, k_new, v_new, cache["k"], cache["v"], page_table, off,
-        window=window, softcap=cfg.attn_softcap, scale=scale)
+        window=window, softcap=cfg.attn_softcap, scale=scale,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
     valids = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    if mode is not None:
+        k, ks = cu_ops.quant_paged_cache_update(
+            cache["k"], cache["k_scale"], k_new, page_table, off, valids,
+            mode, impl=cache_impl)
+        v, vs = cu_ops.quant_paged_cache_update(
+            cache["v"], cache["v_scale"], v_new, page_table, off, valids,
+            mode, impl=cache_impl)
+        return output_proj(p, o), {"k": k, "v": v,
+                                   "k_scale": ks, "v_scale": vs}
     k = cu_ops.paged_cache_update(cache["k"], k_new, page_table, off,
                                   valids, impl=cache_impl)
     v = cu_ops.paged_cache_update(cache["v"], v_new, page_table, off,
@@ -568,33 +651,56 @@ def prefill_chunk_self_attention(cfg: ModelConfig, p, x, cache, offset,
         positions = jnp.broadcast_to(positions[..., None], (b, t, 3))
     q, k_new, v_new = project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
 
+    mode = cfg.kv_quant
     ring = window is not None
     scale = 1.0 / math.sqrt(cfg.query_pre_attn_scalar or cfg.head_dim)
     o = pf_ops.prefill_attention(
         q, k_new, v_new, cache["k"], cache["v"], off,
-        ring=ring, window=window, softcap=cfg.attn_softcap, scale=scale)
+        ring=ring, window=window, softcap=cfg.attn_softcap, scale=scale,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
+    if mode is not None:
+        # quantize the whole chunk once; codes and scales then ride the
+        # same masked ring write (scales are just (B, T, KVH) "rows")
+        k_new, k_sc = quant.quantize(k_new, mode)
+        v_new, v_sc = quant.quantize(v_new, mode)
     k = chunk_kv_write(cache["k"], k_new, off, valid_len, ring=ring)
     v = chunk_kv_write(cache["v"], v_new, off, valid_len, ring=ring)
     k = shard(k, *cache_spec_axes())
     v = shard(v, *cache_spec_axes())
-    return output_proj(p, o), {"k": k, "v": v}
+    new_cache = {"k": k, "v": v}
+    if mode is not None:
+        ks = chunk_kv_write(cache["k_scale"], k_sc, off, valid_len,
+                            ring=ring)
+        vs = chunk_kv_write(cache["v_scale"], v_sc, off, valid_len,
+                            ring=ring)
+        new_cache["k_scale"] = shard(ks, *scale_spec_axes())
+        new_cache["v_scale"] = shard(vs, *scale_spec_axes())
+    return output_proj(p, o), new_cache
 
 
 def prefill_kv_cache(cfg: ModelConfig, k, v, max_len: int,
                      window: Optional[int] = None, dtype=jnp.bfloat16):
-    """Build a cache from prefill-computed k/v (B, S, KVH, hd)."""
+    """Build a cache from prefill-computed k/v (B, S, KVH, hd).
+
+    ``cfg.kv_quant`` quantizes the whole prefill K/V once and applies
+    the identical tail/roll/slice logic to codes and scales — per-row
+    quantization commutes with any position-axis shuffle."""
     b, s = k.shape[:2]
     cache = init_kv_cache(cfg, b, max_len, window=window, dtype=dtype)
     size = cache["k"].shape[1]
+    if cfg.kv_quant is not None:
+        kc, ksc = quant.quantize(k, cfg.kv_quant)
+        vc, vsc = quant.quantize(v, cfg.kv_quant)
+        leaves = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+    else:
+        leaves = {"k": k.astype(dtype), "v": v.astype(dtype)}
     if window and s > size:
         # keep the last `size` positions, ring-aligned so that position p
         # lives at slot p % size.
         start = s - size
-        k_tail, v_tail = k[:, start:], v[:, start:]
         shift = start % size
-        k_tail = jnp.roll(k_tail, shift, axis=1)
-        v_tail = jnp.roll(v_tail, shift, axis=1)
-        return {"k": k_tail.astype(dtype), "v": v_tail.astype(dtype)}
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(dtype), (0, 0, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(dtype), (0, 0, 0, 0))
-    return {"k": ck, "v": cv}
+        return {name: jnp.roll(x[:, start:], shift, axis=1)
+                for name, x in leaves.items()}
+    return {name: jax.lax.dynamic_update_slice(
+                cache[name], x, (0,) * cache[name].ndim)
+            for name, x in leaves.items()}

@@ -220,8 +220,11 @@ def cache_axes(cfg: ModelConfig, idx: int):
     if kind == "M":
         return mamba.mamba_cache_axes()
     if cfg.attention == "mla":
-        return mla.mla_cache_axes()
+        return mla.mla_cache_axes(cfg)
     ax = {"k": attn.cache_spec_axes(), "v": attn.cache_spec_axes()}
+    if cfg.kv_quant is not None:
+        ax["k_scale"] = attn.scale_spec_axes()
+        ax["v_scale"] = attn.scale_spec_axes()
     if kind == "X":
         ax["xk"] = attn.cache_spec_axes()
         ax["xv"] = attn.cache_spec_axes()
@@ -248,7 +251,8 @@ def block_decode(cfg: ModelConfig, p, x, cache, cur_len, idx: int):
                                               impl=decode_attn_impl(cfg))
     else:
         window = layer_window(cfg, idx)
-        kv_cache = {"k": cache["k"], "v": cache["v"]}
+        kv_cache = {n: cache[n] for n in ("k", "v", "k_scale", "v_scale")
+                    if n in cache}
         out, kv_cache = attn.decode_self_attention(
             cfg, p["mixer"], h, kv_cache, cur_len, window=window,
             impl=decode_attn_impl(cfg))
@@ -346,7 +350,8 @@ def block_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len,
                                            offset, valid_len)
     else:
         window = layer_window(cfg, idx)
-        kv_cache = {"k": cache["k"], "v": cache["v"]}
+        kv_cache = {n: cache[n] for n in ("k", "v", "k_scale", "v_scale")
+                    if n in cache}
         out, kv_cache = attn.prefill_chunk_self_attention(
             cfg, p["mixer"], h, kv_cache, offset, valid_len,
             window=window)
@@ -387,9 +392,17 @@ def paged_cache_axes(cfg: ModelConfig, idx: int):
     """Logical axes for paged pool leaves — no batch axis (the pool's
     leading dim is physical pages shared by every slot)."""
     if cfg.attention == "mla":
-        return {"kv": ("kv_pages", "page", "kv_rank")}
+        ax = {"kv": ("kv_pages", "page", "kv_rank")}
+        if cfg.kv_quant is not None:
+            ax["kv_scale"] = ("kv_pages", "page")
+        return ax
     ax = ("kv_pages", "page", "kv_heads", "head_dim")
-    return {"k": ax, "v": ax}
+    axes = {"k": ax, "v": ax}
+    if cfg.kv_quant is not None:
+        sax = ("kv_pages", "page", "kv_heads")
+        axes["k_scale"] = sax
+        axes["v_scale"] = sax
+    return axes
 
 
 def _block_tail(cfg: ModelConfig, p, x, out):

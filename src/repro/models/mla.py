@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import quant
 from repro.kernels.constants import NEG_INF
 from repro.models import layers
 from repro.models.attention import attention
@@ -130,19 +131,37 @@ def mla_self_attention(cfg: ModelConfig, p, x, positions, *,
 
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
                    dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """``cfg.kv_quant`` quantizes the concatenated ``[latent | rope]``
+    row ONCE — it is both the decode key and (prefix-sliced) value, so
+    one (B, C) float32 ``kv_scale`` leaf serves as ``k_scale`` and
+    ``v_scale`` alike (per-row scaling commutes with the ``v_width``
+    prefix slice)."""
     m = cfg.mla
     width = m.kv_lora_rank + m.qk_rope_head_dim
+    if cfg.kv_quant is not None:
+        qdt = quant.quant_dtype(cfg.kv_quant)
+        return {"kv": jnp.zeros((batch, max_len, width), qdt),
+                "kv_scale": jnp.zeros((batch, max_len), jnp.float32)}
     return {"kv": jnp.zeros((batch, max_len, width), dtype)}
 
 
-def mla_cache_axes() -> Dict[str, Tuple]:
-    return {"kv": ("batch", "kv_seq", "kv_rank")}
+def mla_cache_axes(cfg: ModelConfig = None) -> Dict[str, Tuple]:
+    ax = {"kv": ("batch", "kv_seq", "kv_rank")}
+    if cfg is not None and cfg.kv_quant is not None:
+        ax["kv_scale"] = ("batch", "kv_seq")
+    return ax
 
 
 def prefill_mla_cache(cfg: ModelConfig, latent, k_rope, max_len: int,
                       dtype=jnp.bfloat16):
     cache = init_mla_cache(cfg, latent.shape[0], max_len, dtype)
-    kv = jnp.concatenate([latent, k_rope], axis=-1).astype(dtype)
+    kv = jnp.concatenate([latent, k_rope], axis=-1)
+    if cfg.kv_quant is not None:
+        kv, sc = quant.quantize(kv, cfg.kv_quant)
+        cache["kv_scale"] = jax.lax.dynamic_update_slice(
+            cache["kv_scale"], sc, (0, 0))
+    else:
+        kv = kv.astype(dtype)
     cache["kv"] = jax.lax.dynamic_update_slice(cache["kv"], kv, (0, 0, 0))
     return cache
 
@@ -179,18 +198,25 @@ def mla_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len):
     q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
     q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)          # (B,T,H,r+rr)
     qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    mode = cfg.kv_quant
+    kv_sc = cache["kv_scale"][:, :, None] if mode is not None else None
     kvx = kv_new[:, :, None, :]                                # (B,T,1,r+rr)
     kvc = cache["kv"][:, :, None, :]                           # (B,C,1,r+rr)
     ctx = pf_ops.prefill_attention(
         q_eff, kvx, kvx, kvc, kvc, off, scale=1.0 / math.sqrt(qk_hd),
-        v_width=m.kv_lora_rank).astype(dt)                     # (B,T,H,r)
+        v_width=m.kv_lora_rank, k_scale=kv_sc).astype(dt)      # (B,T,H,r)
 
+    if mode is not None:
+        kv_new, sc_new = quant.quantize(kv_new, mode)
+        sc = chunk_kv_write(cache["kv_scale"], sc_new, off, valid_len)
+        sc = shard(sc, "batch", "kv_seq")
     kv = chunk_kv_write(cache["kv"], kv_new, off, valid_len)
     kv = shard(kv, "batch", "kv_seq", "kv_rank")
     o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
     out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
     out = shard(out, "batch", "seq", "d_model")
-    return out, {"kv": kv}
+    return out, ({"kv": kv, "kv_scale": sc} if mode is not None
+                 else {"kv": kv})
 
 
 # -- paged (block pools + page-table indirection) ------------------------------
@@ -202,6 +228,10 @@ def init_paged_mla_pool(cfg: ModelConfig, num_pages: int, page_size: int,
     as ``attention.init_paged_kv_pools`` (page 0 = scratch)."""
     m = cfg.mla
     width = m.kv_lora_rank + m.qk_rope_head_dim
+    if cfg.kv_quant is not None:
+        qdt = quant.quant_dtype(cfg.kv_quant)
+        return {"kv": jnp.zeros((num_pages, page_size, width), qdt),
+                "kv_scale": jnp.zeros((num_pages, page_size), jnp.float32)}
     return {"kv": jnp.zeros((num_pages, page_size, width), dtype)}
 
 
@@ -227,9 +257,16 @@ def mla_paged_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
     latent_new, k_rope_new = _project_kv_latent(cfg, p, x, positions)
     kv_new = jnp.concatenate([latent_new, k_rope_new], axis=-1)  # (B,1,r+rr)
 
+    mode = cfg.kv_quant
+    sc = None
     ones = jnp.ones((b,), jnp.int32)
-    kv = cu_ops.paged_cache_update(cache["kv"], kv_new, page_table, cur,
-                                   ones, impl=cache_impl)
+    if mode is not None:
+        kv, sc = cu_ops.quant_paged_cache_update(
+            cache["kv"], cache["kv_scale"], kv_new, page_table, cur, ones,
+            mode, impl=cache_impl)
+    else:
+        kv = cu_ops.paged_cache_update(cache["kv"], kv_new, page_table, cur,
+                                       ones, impl=cache_impl)
 
     q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
     q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)          # (B,1,H,r+rr)
@@ -237,12 +274,15 @@ def mla_paged_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
     kv4 = kv[:, :, None, :]                                    # (P,ps,1,r+rr)
     ctx = da_ops.decode_attention_paged(
         q_eff, kv4, kv4, page_table, cur, scale=1.0 / math.sqrt(qk_hd),
-        v_width=m.kv_lora_rank).astype(dt)                     # (B,1,H,r)
+        v_width=m.kv_lora_rank,
+        k_scale=sc[:, :, None] if mode is not None else None
+    ).astype(dt)                                               # (B,1,H,r)
 
     o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
     out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
     out = shard(out, "batch", "seq", "d_model")
-    return out, {"kv": kv}
+    return out, ({"kv": kv, "kv_scale": sc} if mode is not None
+                 else {"kv": kv})
 
 
 def mla_paged_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len,
@@ -270,20 +310,28 @@ def mla_paged_prefill_chunk(cfg: ModelConfig, p, x, cache, offset, valid_len,
     q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
     q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)          # (B,T,H,r+rr)
     qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    mode = cfg.kv_quant
     kvx = kv_new[:, :, None, :]                                # (B,T,1,r+rr)
     kvp = cache["kv"][:, :, None, :]                           # (P,ps,1,r+rr)
     ctx = pf_ops.prefill_attention_paged(
         q_eff, kvx, kvx, kvp, kvp, page_table, off,
-        scale=1.0 / math.sqrt(qk_hd),
-        v_width=m.kv_lora_rank).astype(dt)                     # (B,T,H,r)
+        scale=1.0 / math.sqrt(qk_hd), v_width=m.kv_lora_rank,
+        k_scale=(cache["kv_scale"][:, :, None] if mode is not None
+                 else None)).astype(dt)                        # (B,T,H,r)
 
     valids = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
-    kv = cu_ops.paged_cache_update(cache["kv"], kv_new, page_table, off,
-                                   valids, impl=cache_impl)
+    if mode is not None:
+        kv, sc = cu_ops.quant_paged_cache_update(
+            cache["kv"], cache["kv_scale"], kv_new, page_table, off,
+            valids, mode, impl=cache_impl)
+    else:
+        kv = cu_ops.paged_cache_update(cache["kv"], kv_new, page_table, off,
+                                       valids, impl=cache_impl)
     o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
     out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
     out = shard(out, "batch", "seq", "d_model")
-    return out, {"kv": kv}
+    return out, ({"kv": kv, "kv_scale": sc} if mode is not None
+                 else {"kv": kv})
 
 
 def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
@@ -312,15 +360,32 @@ def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
     latent_new, k_rope_new = _project_kv_latent(cfg, p, x, positions)
     kv_new = jnp.concatenate([latent_new, k_rope_new], axis=-1)  # (B,1,r+rr)
 
+    mode = cfg.kv_quant
+    sc = None
     if per_row:
         from repro.kernels.cache_update import ops as cu_ops
         slot_rows = jnp.minimum(cur, cache["kv"].shape[1] - 1)
-        kv = cu_ops.cache_update(cache["kv"], kv_new, slot_rows,
-                                 impl=cache_impl)
+        if mode is not None:
+            kv, sc = cu_ops.quant_cache_update(
+                cache["kv"], cache["kv_scale"], kv_new, slot_rows, mode,
+                impl=cache_impl)
+        else:
+            kv = cu_ops.cache_update(cache["kv"], kv_new, slot_rows,
+                                     impl=cache_impl)
+    elif mode is not None:
+        kv_codes, sc_new = quant.quantize(kv_new, mode)
+        kv = jax.lax.dynamic_update_slice(cache["kv"], kv_codes,
+                                          (0, cur_len, 0))
+        sc = jax.lax.dynamic_update_slice(cache["kv_scale"], sc_new,
+                                          (0, cur_len))
     else:
         kv = jax.lax.dynamic_update_slice(
             cache["kv"], kv_new.astype(cache["kv"].dtype), (0, cur_len, 0))
     kv = shard(kv, "batch", "kv_seq", "kv_rank")
+    if mode is not None:
+        sc = shard(sc, "batch", "kv_seq")
+    new_cache = {"kv": kv, "kv_scale": sc} if mode is not None \
+        else {"kv": kv}
 
     # absorb W_UK into the query: (B,1,H,nope) @ (r,H,nope) -> (B,1,H,r)
     q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(dt))
@@ -335,11 +400,13 @@ def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
         q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)   # (B,1,H,r+rr)
         kv4 = kv[:, :, None, :]                             # (B,C,1,r+rr)
         ctx = da_ops.decode_attention(
-            q_eff, kv4, kv4, cur, scale=scale,
-            v_width=m.kv_lora_rank).astype(dt)              # (B,1,H,r)
+            q_eff, kv4, kv4, cur, scale=scale, v_width=m.kv_lora_rank,
+            k_scale=sc[:, :, None] if mode is not None else None
+        ).astype(dt)                                        # (B,1,H,r)
     elif impl == "dense":
-        latent = kv[..., :m.kv_lora_rank]
-        k_rope = kv[..., m.kv_lora_rank:]
+        kv_f = quant.dequantize(kv, sc) if mode is not None else kv
+        latent = kv_f[..., :m.kv_lora_rank]
+        k_rope = kv_f[..., m.kv_lora_rank:]
         s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, latent.astype(dt))
         s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope.astype(dt))
         scores = (s_lat + s_rope).astype(jnp.float32) * scale
@@ -360,4 +427,4 @@ def mla_decode_attention(cfg: ModelConfig, p, x, cache, cur_len,
     o = jnp.einsum("bqhr,rhk->bqhk", ctx, p["wv_b"].astype(dt))
     out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
     out = shard(out, "batch", "seq", "d_model")
-    return out, {"kv": kv}
+    return out, new_cache

@@ -360,6 +360,24 @@ class ServeEngine:
                                       decode_attn_impl=decode_attn_impl)
         if not greedy and temperature <= 0.0:
             raise ValueError("sampling needs temperature > 0")
+        # ``cache_dtype`` accepts a jnp storage dtype, its name, or a
+        # quantized-KV mode string ("int8" / "fp8_e4m3"): the quant
+        # modes flip ``cfg.kv_quant`` so every serve fn built below
+        # traces the quantized cache tree (code leaves + per-row f32
+        # scales; the attention kernels dequantize in-register).
+        if isinstance(cache_dtype, str):
+            if cache_dtype in ("int8", "fp8_e4m3"):
+                cfg = dataclasses.replace(cfg, kv_quant=cache_dtype)
+                cache_dtype = jnp.bfloat16      # unused by quant leaves
+            else:
+                named = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                         "float16": jnp.float16}
+                if cache_dtype not in named:
+                    raise ValueError(
+                        f"unknown cache_dtype {cache_dtype!r}; expected a "
+                        f"dtype, one of {sorted(named)}, or a KV-quant "
+                        f"mode ('int8', 'fp8_e4m3')")
+                cache_dtype = named[cache_dtype]
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -420,6 +438,9 @@ class ServeEngine:
         self.prefix_hit_tokens = 0          # prompt tokens served off pages
         self.saved_prefill_joules = 0.0     # priced at the learned J/token
         self._prefill_jpt: Optional[float] = None   # EWMA J per prefill tok
+        self.pool_wait_events = 0           # admissions deferred on pages
+        self._pool_short = False            # mid-wait episode flag
+        self._bytes_per_token: Optional[float] = None   # stats() memo
         self._pool: Optional[PagePool] = None
         self._radix: Optional[RadixPrefixCache] = None
         if kv_layout == "paged":
@@ -597,16 +618,22 @@ class ServeEngine:
             "requests_timed_out": self._timeouts,
             "compile_counts": dict(self.compile_counts),
         }
+        cache_s: Dict[str, Any] = {
+            "cache_dtype": (self.cfg.kv_quant
+                            if self.cfg.kv_quant is not None
+                            else np.dtype(self.cache_dtype).name),
+            "bytes_per_token": self.cache_bytes_per_token(),
+        }
         if self._pool is not None:
-            cache_s: Dict[str, Any] = {
-                "page_size": self._pool.page_size,
-                "pages_total": self._pool.total_pages,
-                "pages_free": self._pool.free_pages,
-                "pages_used": self._pool.used_pages,
-                "prefix_cache": self._radix is not None,
-                "prefix_hit_tokens": self.prefix_hit_tokens,
-                "saved_prefill_joules": self.saved_prefill_joules,
-            }
+            cache_s.update(
+                page_size=self._pool.page_size,
+                pages_total=self._pool.total_pages,
+                pages_free=self._pool.free_pages,
+                pages_used=self._pool.used_pages,
+                pool_wait_events=self.pool_wait_events,
+                prefix_cache=self._radix is not None,
+                prefix_hit_tokens=self.prefix_hit_tokens,
+                saved_prefill_joules=self.saved_prefill_joules)
             if self._radix is not None:
                 cache_s.update(
                     prefix_lookups=self._radix.lookups,
@@ -614,10 +641,33 @@ class ServeEngine:
                     prefix_hit_rate=self._radix.hit_rate,
                     prefix_evictions=self._radix.evictions,
                     prefix_nodes=self._radix.node_count)
-            s["kv_cache"] = cache_s
+        s["kv_cache"] = cache_s
         if self.governor is not None:
             s["governor"] = self.governor.stats()
         return s
+
+    def cache_bytes_per_token(self) -> float:
+        """KV-cache bytes per cached token position, all leaves summed —
+        the footprint gauge quantized caches exist to shrink (a quant
+        mode stores 1-byte codes plus amortized f32 scales instead of
+        2-byte bf16 values).  Contiguous: abstract-eval of the cache
+        tree over batch x max_len positions.  Paged: live pool leaves
+        over pool pages x page_size positions."""
+        if self._bytes_per_token is None:
+            if self._pool is not None:
+                total = sum(l.nbytes
+                            for l in jax.tree.leaves(self._paged_caches))
+                slots = self._pool.total_pages * self._pool.page_size
+            else:
+                shapes = jax.eval_shape(
+                    lambda: model_mod.init_caches(
+                        self.cfg, self.batch, self.max_len,
+                        dtype=self.cache_dtype))
+                total = sum(math.prod(l.shape) * l.dtype.itemsize
+                            for l in jax.tree.leaves(shapes))
+                slots = self.batch * self.max_len
+            self._bytes_per_token = total / max(1, slots)
+        return self._bytes_per_token
 
     def on_record(self, rec) -> None:
         """Recorder subscriber (wired by ``PowerRecorder.attach_engine``):
@@ -1149,7 +1199,26 @@ class ServeEngine:
                                      if gov.tenant_allowed(w.tenant)), 0)
                         st = self._admit_paged(waiting[k], j)
                         if st is None:
-                            break           # pool short: wait for pages
+                            # Pool short (even after radix eviction):
+                            # leave the request waiting for retirements
+                            # to free pages — but say so, once per
+                            # episode, instead of silently spinning
+                            # through this checkpoint.
+                            if not self._pool_short:
+                                self._pool_short = True
+                                self.pool_wait_events += 1
+                                if gov is not None:
+                                    need = math.ceil(
+                                        (len(waiting[k].prompt)
+                                         + waiting[k].max_new_tokens - 1)
+                                        / ps)
+                                    gov.note_pool_wait(pool.free_pages,
+                                                       need)
+                            break
+                        if self._pool_short:
+                            self._pool_short = False
+                            if gov is not None:
+                                gov.note_pool_ready()
                         r = self._admit(waiting.pop(k))
                         if gov is not None:
                             gov.note_admitted(r)

@@ -60,7 +60,8 @@ class ThrottleDecision:
     t: float                      # governor-clock timestamp
     action: str                   # admit_block/admit_resume/chunk_pause/
                                   # chunk_resume/chunk_force/decode_pause/
-                                  # tenant_defer/tenant_resume
+                                  # tenant_defer/tenant_resume/pool_block/
+                                  # pool_resume/pool_wait/pool_ready
     watts: Optional[float]        # smoothed window power at decision time
     cap: Optional[float]
     detail: str = ""
@@ -176,6 +177,7 @@ class PowerGovernor:
         self._pending_step: Optional[Tuple[Optional[float], float]] = None
         self.pool_reserve_frac = float(pool_reserve_frac)
         self._pool_blocked = False
+        self._pool_waiting = False
         # Linear watts-vs-live-slots model fitted from admission
         # history: each settled admission contributes one
         # (live_slots, window watts) sample, and the least-squares slope
@@ -353,6 +355,27 @@ class PowerGovernor:
         decoding, so pausing prefill would have idled the engine)."""
         self._decide("chunk_force", self.window_watts(),
                      detail="no live decode; liveness override")
+
+    def note_pool_wait(self, free_pages: int, need_pages: int) -> None:
+        """The engine's paged admission could not cover the next request
+        even after radix eviction: it leaves the request queued and
+        relies on retirements to free pages.  Recorded as one
+        ``pool_wait`` decision per wait episode (not per scheduler pass)
+        so pool exhaustion shows up in the decision stream instead of
+        the engine silently spinning at admission checkpoints."""
+        if self._pool_waiting:
+            return
+        self._pool_waiting = True
+        self._decide("pool_wait", self.window_watts(),
+                     detail=f"pool short: {free_pages} free < "
+                            f"{need_pages} needed pages")
+
+    def note_pool_ready(self) -> None:
+        """Admission succeeded after a ``pool_wait`` episode: close it."""
+        if not self._pool_waiting:
+            return
+        self._pool_waiting = False
+        self._decide("pool_ready", self.window_watts())
 
     def note_forced_admit(self) -> None:
         """The engine admitted despite a blocked gate: it was completely

@@ -192,12 +192,18 @@ def test_cache_gauges_consistent(smollm):
 
 
 def test_contiguous_engine_reports_no_pool(smollm):
+    # contiguous engines report the dtype/footprint gauges but none of
+    # the pool/radix keys that only exist in the paged layout
     cfg, params = smollm
     eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
                       cache_dtype=jnp.float32)
     st = eng.stats()
     assert st["kv_layout"] == "contiguous"
-    assert "kv_cache" not in st
+    kc = st["kv_cache"]
+    assert kc["cache_dtype"] == "float32"
+    assert kc["bytes_per_token"] > 0
+    for key in ("pages_total", "prefix_hits", "pool_wait_events"):
+        assert key not in kc
 
 
 def test_paged_validation(smollm):
